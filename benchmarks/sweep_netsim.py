@@ -1,0 +1,62 @@
+"""Full hybrid-workload sweep (paper §VI): placements × routing × topologies,
+plus per-app baselines. Writes JSON per config; EXPERIMENTS.md summarizes.
+
+  PYTHONPATH=src python -m benchmarks.sweep_netsim [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "netsim")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workload", default="workload1")
+    args = ap.parse_args()
+
+    from repro.launch.sim import MIXES, run_sim
+
+    os.makedirs(OUT, exist_ok=True)
+    combos = []
+    placements = ["RN", "RR", "RG"]
+    routings = ["MIN", "ADP"]
+    topos = ["1d", "2d"]
+    if args.quick:
+        placements, routings, topos = ["RN", "RG"], ["ADP"], ["1d"]
+    # baselines (exclusive network) per app
+    for app in MIXES[args.workload]:
+        for topo in topos:
+            combos.append((f"baseline-{app}", topo, "RN", "ADP"))
+    for topo in topos:
+        for pl in placements:
+            for rt in routings:
+                combos.append((args.workload, topo, pl, rt))
+
+    for wl, topo, pl, rt in combos:
+        tag = f"{wl}__{topo}__{pl}__{rt}__small_s0"
+        path = os.path.join(OUT, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip {tag}")
+            continue
+        t0 = time.time()
+        try:
+            rep = run_sim(wl, topo, pl, rt, scale="small", seed=0,
+                          horizon_ms=500.0, tick_us=5.0, iters_override=2)
+            with open(path, "w") as f:
+                json.dump(rep, f, indent=1, default=float)
+            print(f"{tag}: {time.time()-t0:.0f}s virtual={rep['virtual_time_ms']:.0f}ms",
+                  flush=True)
+        except Exception as e:
+            print(f"{tag}: FAIL {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

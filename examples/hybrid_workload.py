@@ -1,0 +1,70 @@
+"""Paper §VI experiment in miniature + the beyond-paper hlo2skeleton loop.
+
+* simulates Workload-1 (CosmoFlow + AlexNet + LAMMPS + NN + uniform-random
+  background) under two placements on the small 1-D dragonfly;
+* auto-extracts a Union skeleton from a REAL compiled LM training step
+  (results/dryrun record written by the multi-pod dry-run) and co-runs it
+  with MILC — the modern analogue of the paper's traced-AlexNet workload.
+
+  PYTHONPATH=src python examples/hybrid_workload.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import workloads as W
+from repro.core.translator import translate_source
+from repro.launch.sim import run_sim
+from repro.netsim import metrics as MET
+from repro.netsim.config import NetConfig
+from repro.netsim.engine import JobSpec, build_engine
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import dragonfly_1d_small
+
+# --- paper Table III, workload1, RN vs RG ---------------------------------
+print("=== Workload1 (small scale): RN vs RG placement, adaptive routing ===")
+for pl in ("RN", "RG"):
+    rep = run_sim("workload1", "1d", pl, "ADP", scale="small",
+                  horizon_ms=400.0, tick_us=5.0, iters_override=2)
+    lam = rep["latency"]["lammps"]
+    cf = rep["comm_time"]["cosmoflow"]
+    print(f"  {pl}: lammps avg latency {lam['avg_us']:8.1f} us | "
+          f"cosmoflow max comm {cf['max_ms']:6.1f} ms | "
+          f"global-link share {rep['link_load']['frac_global']:.1%}")
+
+# --- hlo2skeleton: an LM training job as a first-class Union workload ------
+print("\n=== hlo2skeleton: auto-extracted LM skeleton co-run with MILC ===")
+rec_path = os.path.join(
+    os.path.dirname(__file__), "..", "results", "dryrun",
+    "mistral_nemo_12b__train_4k__single.json",
+)
+if not os.path.exists(rec_path):
+    print("  (run the dry-run first: python -m repro.launch.dryrun --all)")
+    sys.exit(0)
+
+from repro.core.hlo2skeleton import from_dryrun_record
+
+src = from_dryrun_record(rec_path, steps=3, mfu=0.4)
+print("  generated DSL:")
+for line in src.splitlines():
+    print("   |", line)
+ml = translate_source(src, "ml_mistral_nemo", 128)
+milc = W.build_skeleton("milc", "small", overrides={"iters": 2})
+
+topo = dragonfly_1d_small()
+pl = place_jobs(topo, [ml.n_ranks, milc.n_ranks], "RG", seed=1)
+net = NetConfig(pool_size=4096, tick_us=5.0)
+init, run, _ = build_engine(
+    topo, [JobSpec("ml_train", ml, pl[0]), JobSpec("milc", milc, pl[1])],
+    routing="ADP", net=net, pool_size=4096, horizon_us=600_000.0,
+)
+state = jax.block_until_ready(run(init()))
+rep = MET.run_report(state, ["ml_train", "milc"], topo, net)
+for name in ("ml_train", "milc"):
+    lat, ct = rep["latency"][name], rep["comm_time"][name]
+    print(f"  {name:9s}: {lat['count']:6d} msgs, avg latency "
+          f"{lat['avg_us']:8.1f} us, max comm {ct['max_ms']:.1f} ms")
+print(f"  peak injection {rep['peak_inject_TiBps']*1024:.2f} GiB/s")

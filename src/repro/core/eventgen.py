@@ -1,0 +1,20 @@
+"""Event generator — public API shim.
+
+The paper's event generator is the layer that lets skeleton ranks emit
+communication events *in situ* with the simulation. In this tensorized
+implementation the rank VM (program counters, collective round expansion,
+cumulative blocking counters) and the network tick are fused into a single
+jitted function for performance — the code lives in
+``repro.netsim.engine`` (``vm_emit`` + steps 1/4/5 of ``tick``).
+
+This module re-exports the user-facing pieces so the paper's architecture
+(Fig. 3: translator | event generator | CODES) maps one-to-one onto the
+package layout.
+"""
+from repro.netsim.engine import (  # noqa: F401
+    JobSpec,
+    URSpec,
+    VMState,
+    build_engine,
+)
+from repro.core.skeleton import OP, SkeletonProgram, available, get, register  # noqa: F401

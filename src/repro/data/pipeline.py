@@ -1,0 +1,87 @@
+"""Deterministic, shardable, resumable synthetic token pipeline.
+
+Production posture without a corpus on disk: batches are a pure function of
+``(seed, step, shard)`` (counter-based Philox), so
+
+* any worker can regenerate any shard of any step — restart-safe, no state
+  files beyond the integer ``step`` stored in the checkpoint;
+* elastic re-sharding is trivial (a worker that now owns a different slice
+  just generates that slice);
+* the stream has learnable structure (noisy affine n-gram process), so the
+  example training runs show a real loss curve instead of ln(V) noise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1  # fraction of uniformly random tokens
+    text_len: Optional[int] = None  # tokens per row (< seq_len for VLM cells)
+
+
+def host_batch(cfg: DataConfig, step: int, lo: int = 0, hi: Optional[int] = None):
+    """Rows [lo, hi) of the global batch for ``step`` as numpy arrays.
+
+    Each row's randomness is keyed by its *absolute* row index (counter-based
+    Philox), so any shard slice of the global batch is identical no matter
+    which host generates it — the multi-host / elastic-resharding invariant.
+    """
+    hi = cfg.global_batch if hi is None else hi
+    n = hi - lo
+    S = cfg.text_len or cfg.seq_len
+    V = cfg.vocab_size
+    a = 6364136223846793005 % V or 1
+    start = np.empty((n, 1), np.int64)
+    noise_mask = np.empty((n, S + 1), bool)
+    noise_tok = np.empty((n, S + 1), np.int64)
+    for i, r in enumerate(range(lo, hi)):
+        rng = np.random.Generator(
+            np.random.Philox(key=cfg.seed, counter=(step << 24) + r)
+        )
+        start[i, 0] = rng.integers(0, V)
+        noise_mask[i] = rng.random(S + 1) < cfg.noise
+        noise_tok[i] = rng.integers(0, V, size=S + 1)
+    seq = np.empty((n, S + 1), np.int64)
+    seq[:, 0:1] = start
+    for t in range(1, S + 1):  # affine chain, vectorized over rows
+        seq[:, t] = (seq[:, t - 1] * a + 12345) % V
+    seq = np.where(noise_mask, noise_tok, seq)
+    tokens = seq[:, :-1].astype(np.int32)
+    targets = seq[:, 1:].astype(np.int32)
+    return tokens, targets
+
+
+def device_batch(cfg: DataConfig, step: int, mesh: Mesh, batch_axes) -> Tuple:
+    """Build globally-sharded jax.Arrays for one step.
+
+    Uses ``make_array_from_callback`` — each device's addressable shard is
+    generated independently (the true multi-host pattern).
+    """
+    S = cfg.text_len or cfg.seq_len
+    shape = (cfg.global_batch, S)
+    sharding = NamedSharding(mesh, P(batch_axes, None))
+
+    def cb_tokens(idx):
+        lo, hi, _ = idx[0].indices(cfg.global_batch)
+        return host_batch(cfg, step, lo, hi)[0]
+
+    def cb_targets(idx):
+        lo, hi, _ = idx[0].indices(cfg.global_batch)
+        return host_batch(cfg, step, lo, hi)[1]
+
+    tokens = jax.make_array_from_callback(shape, sharding, cb_tokens)
+    targets = jax.make_array_from_callback(shape, sharding, cb_targets)
+    return tokens, targets

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` selects the kernel path (interpret mode on CPU — the
+engine/model default to the pure-jnp path off-TPU and these wrappers are
+exercised by the per-kernel allclose sweeps in tests/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.router_tick import BLOCK_M, router_rate_drain_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def router_rate_drain(routes, bytes_rem, active, share, dt,
+                      use_pallas: bool = False, interpret: bool = True):
+    if not use_pallas:
+        return ref.router_rate_drain_ref(routes, bytes_rem, active, share, dt)
+    M = routes.shape[0]
+    pad = (-M) % BLOCK_M
+    if pad:
+        routes = jnp.pad(routes, ((0, pad), (0, 0)), constant_values=-1)
+        bytes_rem = jnp.pad(bytes_rem, (0, pad))
+        active = jnp.pad(active, (0, pad))
+    new_rem, rate, drained = router_rate_drain_pallas(
+        routes, bytes_rem, active, share, dt, interpret=interpret
+    )
+    return new_rem[:M], rate[:M], drained[:M]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, use_pallas: bool = False, interpret: bool = True):
+    """Head-flattened SSD scan: see ssd_scan_pallas for shapes."""
+    if not use_pallas:
+        y, h = jax.vmap(ref.ssd_chunk_ref)(
+            x, dt, A, Bm, Cm,
+            jnp.zeros((x.shape[0], Bm.shape[-1], x.shape[-1]), jnp.float32),
+        )
+        return y, h
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, interpret=interpret)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def router_rate_drain_ref(routes, bytes_rem, active, share, dt):
+    """Reference for the simulator's hot loop (fluid fair-share drain).
+
+    routes: (M, K) int32 link ids (-1 pad); bytes_rem: (M,) f32;
+    active: (M,) bool; share: (L,) f32 bytes/us per message on each link;
+    dt: scalar us.
+    Returns (new_bytes_rem, rate, drained_flag).
+    """
+    valid = (routes >= 0) & active[:, None]
+    idx = jnp.maximum(routes, 0)
+    per_link = jnp.where(valid, share[idx], jnp.inf)
+    rate = jnp.min(per_link, axis=1)
+    rate = jnp.where(active & jnp.isfinite(rate), rate, 0.0)
+    drain = jnp.minimum(rate * dt, bytes_rem)
+    new_rem = bytes_rem - drain
+    drained = active & (new_rem <= 1e-6)
+    return new_rem, rate, drained
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm, h0):
+    """Reference for one head's SSD over all chunks (sequential).
+
+    x: (nc, Q, hd) f32 — pre-multiplied by nothing (raw inputs)
+    dt: (nc, Q) f32, A: scalar (negative), Bm/Cm: (nc, Q, ds) f32
+    h0: (ds, hd) initial state.
+    Returns (y (nc, Q, hd), h_final (ds, hd)).
+    """
+    nc, Q, hd = x.shape
+    ds = Bm.shape[-1]
+
+    def chunk(h, inp):
+        xc, dtc, Bc, Cc = inp
+        dA = dtc * A  # (Q,)
+        cs = jnp.cumsum(dA)
+        seg = jnp.exp(cs[-1])
+        L = jnp.where(
+            jnp.tril(jnp.ones((Q, Q), bool)),
+            jnp.exp(cs[:, None] - cs[None, :]),
+            0.0,
+        )
+        CB = Cc @ Bc.T  # (Q, Q)
+        xdt = xc * dtc[:, None]
+        y_intra = (CB * L) @ xdt
+        decay_in = jnp.exp(cs)[:, None]
+        y_inter = (Cc @ h) * decay_in
+        decay_out = jnp.exp(cs[-1] - cs)[:, None]
+        h_new = h * seg + Bc.T @ (xdt * decay_out)
+        return h_new, y_intra + y_inter
+
+    h, y = jax.lax.scan(chunk, h0, (x, dt, Bm, Cm))
+    return y, h

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: the simulator's per-tick route-rate-drain hot loop.
+
+This is the compute hot-spot the paper optimizes (CODES' router event
+processing, §II-B): per tick, every in-flight message takes the min
+fair-share rate over its route links and drains. Tensorized it is a
+gather + row-min + elementwise update, ideal for VMEM blocking:
+
+* messages are blocked (BLOCK_M rows of the pool per grid step);
+* the per-link share table stays resident in VMEM across the whole grid
+  (links ≤ ~74k × 4 B ≈ 296 KiB for the paper's 2-D dragonfly — far under
+  the ~16 MiB VMEM budget), so the gather never touches HBM;
+* route width K=10 is a static lane dimension.
+
+Validated in interpret mode against `ref.router_rate_drain_ref`
+(the engine's jnp path is bit-identical math).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 512
+
+
+def _kernel(routes_ref, rem_ref, act_ref, share_ref, dt_ref, out_rem_ref,
+            out_rate_ref, out_drained_ref):
+    routes = routes_ref[...]  # (BLOCK_M, K) int32
+    rem = rem_ref[...]  # (BLOCK_M,)
+    act = act_ref[...]  # (BLOCK_M,) bool (as int8 for TPU friendliness)
+    share = share_ref[...]  # (L,) f32 resident table
+    dt = dt_ref[0]
+
+    valid = (routes >= 0) & (act[:, None] > 0)
+    idx = jnp.maximum(routes, 0)
+    per_link = jnp.where(valid, share[idx], jnp.inf)
+    rate = jnp.min(per_link, axis=1)
+    rate = jnp.where((act > 0) & jnp.isfinite(rate), rate, 0.0)
+    drain = jnp.minimum(rate * dt, rem)
+    new_rem = rem - drain
+    out_rem_ref[...] = new_rem
+    out_rate_ref[...] = rate
+    out_drained_ref[...] = ((act > 0) & (new_rem <= 1e-6)).astype(jnp.int8)
+
+
+def router_rate_drain_pallas(routes, bytes_rem, active, share, dt,
+                             *, interpret: bool = True):
+    """routes (M,K) int32, bytes_rem (M,) f32, active (M,) bool,
+    share (L,) f32, dt scalar -> (new_rem, rate, drained)."""
+    M, K = routes.shape
+    L = share.shape[0]
+    assert M % BLOCK_M == 0, f"pool size {M} must be a multiple of {BLOCK_M}"
+    grid = (M // BLOCK_M,)
+    act8 = active.astype(jnp.int8)
+    dt_arr = jnp.asarray([dt], jnp.float32)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((M,), jnp.float32),
+        jax.ShapeDtypeStruct((M,), jnp.float32),
+        jax.ShapeDtypeStruct((M,), jnp.int8),
+    )
+    new_rem, rate, drained = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, K), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+            pl.BlockSpec((L,), lambda i: (0,)),  # share table resident
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(routes, bytes_rem, act8, share, dt_arr)
+    return new_rem, rate, drained.astype(bool)

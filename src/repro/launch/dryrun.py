@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST be the first statements in this file —
+# before ANY other import including `from __future__` niceties — because jax
+# locks the host device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any jax import (jax locks the device count
+at first init). They are intentionally NOT set in conftest/pyproject —
+smoke tests and benches see the real single CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral_nemo_12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+
+Per cell this prints/records ``compiled.memory_analysis()`` (proves the
+per-device footprint) and ``compiled.cost_analysis()`` (FLOPs/bytes for
+§Roofline), plus the parsed collective wire bytes.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.launch import roofline as RL
+from repro.launch.mesh import batch_axes_of, make_production_mesh
+from repro.launch.specs import cell_plan, cell_shardings, input_specs, model_state_specs
+from repro.models import model as MDL
+from repro.optim import adamw
+from repro.train import sharding as SH
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+               seq_parallel: bool = False, accum: Optional[int] = None,
+               cfg_override=None, layout: str = "tp"):
+    """Lower one cell. Returns (lowered, meta dict)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shp = SHAPES[shape_name]
+    sh = cell_shardings(cfg, shape_name, mesh, fsdp=fsdp, layout=layout)
+    batch_axes, n_dp = sh["batch_axes"], sh["n_dp"]
+    plan = cell_plan(cfg, shape_name, n_dp)
+    if accum is not None:
+        plan["accum"] = accum
+    ins = input_specs(arch, shape_name, cfg)
+    kind = ins.pop("kind")
+    params_sds, opt_sds = model_state_specs(cfg)
+
+    ctx = SH.mesh_axes(
+        batch_axes, "model", seq_parallel=seq_parallel,
+        model_size=(1 if layout == "dp" else mesh.shape["model"]),
+    )
+    with mesh, ctx:
+        if kind == "train":
+            opt_cfg = adamw.OptConfig(moment_dtype=cfg.param_dtype)
+            step_fn = make_train_step(cfg, opt_cfg, accum=plan["accum"])
+            args = [params_sds, opt_sds, ins["tokens"], ins["targets"]]
+            in_sh = [sh["params"], sh["opt"], sh["tokens"], sh["targets"]]
+            if "frontend" in ins:
+                args.append(ins["frontend"])
+                in_sh.append(sh["frontend"])
+            lowered = jax.jit(step_fn, in_shardings=tuple(in_sh)).lower(*args)
+        elif kind == "prefill":
+            step_fn = make_prefill_step(cfg)
+            args = [params_sds, ins["tokens"]]
+            in_sh = [sh["params"], sh["tokens"]]
+            if "frontend" in ins:
+                args.append(ins["frontend"])
+                in_sh.append(sh["frontend"])
+            lowered = jax.jit(step_fn, in_shardings=tuple(in_sh)).lower(*args)
+        else:  # decode
+            step_fn = make_decode_step(cfg)
+            args = [params_sds, ins["state"], ins["token"]]
+            in_sh = [sh["params"], sh["state"], sh["token"]]
+            lowered = jax.jit(step_fn, in_shardings=tuple(in_sh)).lower(*args)
+
+    n_tokens = shp["global_batch"] * (shp["seq_len"] if kind != "decode" else 1)
+    meta = dict(
+        arch=arch, shape=shape_name, kind=kind, accum=plan["accum"],
+        n_devices=mesh.size, n_dp=n_dp, n_tokens=n_tokens,
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+        fsdp=fsdp, seq_parallel=seq_parallel, layout=layout,
+    )
+    return lowered, meta, cfg
+
+
+def _variant_cost(arch, shape_name, mesh, cfg_v, *, fsdp, seq_parallel, layout):
+    """Lower+compile a reduced-depth variant in analysis mode; return
+    (flops, bytes, wire_bytes) of the per-device module (all scans trip≤1
+    except the period scan, whose trip count is cfg_v.n_periods)."""
+    from repro.models import layers as LYR
+
+    import repro.launch.dryrun as _self  # reuse lower_cell with cfg override
+
+    with LYR.analysis_mode():
+        lowered, _, _ = lower_cell(
+            arch, shape_name, mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+            accum=1, cfg_override=cfg_v, layout=layout,
+        )
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = RL.collective_stats(compiled.as_text(), mesh.size)
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(coll["wire_bytes_per_device"]),
+        coll,
+    )
+
+
+def analysis_terms(arch, shape_name, mesh, *, fsdp, seq_parallel, layout="tp",
+                   remat: bool = True, remat_policy: str = "full",
+                   attn_bf16: bool = False) -> Dict[str, Any]:
+    """HLO-derived roofline terms, exact in depth.
+
+    cost_analysis counts while bodies once, so costs are affine in the
+    number of scanned periods: cost(L) = base + L·per_period. We lower
+    1- and 2-period variants (analysis mode: no KV/loss sub-scans) and
+    extrapolate to the full depth (separately for the encoder stack).
+    """
+    cfg = get_config(arch).replace(remat=remat, remat_policy=remat_policy,
+                                   attn_bf16=attn_bf16)
+    plen = len(cfg.period)
+    v1 = cfg.replace(n_layers=plen, enc_layers=min(cfg.enc_layers, 1))
+    v2 = cfg.replace(n_layers=2 * plen, enc_layers=min(cfg.enc_layers, 1))
+    f1, b1, w1, _ = _variant_cost(arch, shape_name, mesh, v1, fsdp=fsdp, seq_parallel=seq_parallel, layout=layout)
+    f2, b2, w2, coll2 = _variant_cost(arch, shape_name, mesh, v2, fsdp=fsdp, seq_parallel=seq_parallel, layout=layout)
+    nP = cfg.n_periods
+    out = dict(
+        flops=f1 + (nP - 1) * (f2 - f1),
+        bytes=b1 + (nP - 1) * (b2 - b1),
+        wire=w1 + (nP - 1) * (w2 - w1),
+        per_period=dict(flops=f2 - f1, bytes=b2 - b1, wire=w2 - w1),
+        base=dict(flops=2 * f1 - f2, bytes=2 * b1 - b2, wire=2 * w1 - w2),
+        collective_kinds=coll2["by_kind_count"],
+    )
+    if cfg.enc_layers > 1:
+        v3 = cfg.replace(n_layers=plen, enc_layers=2)
+        f3, b3, w3, _ = _variant_cost(arch, shape_name, mesh, v3, fsdp=fsdp, seq_parallel=seq_parallel, layout=layout)
+        ne = cfg.enc_layers
+        out["flops"] += (ne - 1) * (f3 - f1)
+        out["bytes"] += (ne - 1) * (b3 - b1)
+        out["wire"] += (ne - 1) * (w3 - w1)
+        out["per_enc_layer"] = dict(flops=f3 - f1, bytes=b3 - b1, wire=w3 - w1)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, fsdp: bool = True,
+             seq_parallel: bool = False, accum: Optional[int] = None,
+             analyze: bool = True, layout: str = "tp",
+             remat: bool = True, remat_policy: str = "full",
+             attn_bf16: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg0 = get_config(arch)
+    cfg_ov = cfg0.replace(remat=remat, remat_policy=remat_policy,
+                          attn_bf16=attn_bf16)
+    if cfg_ov == cfg0:
+        cfg_ov = None
+    t0 = time.time()
+    lowered, meta, cfg = lower_cell(
+        arch, shape_name, mesh, fsdp=fsdp, seq_parallel=seq_parallel, accum=accum,
+        layout=layout, cfg_override=cfg_ov,
+    )
+    meta["remat"] = remat
+    meta["remat_policy"] = remat_policy
+    meta["attn_bf16"] = attn_bf16
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(mem)    # proves the per-device footprint
+    hlo = compiled.as_text()
+    coll = RL.collective_stats(hlo, mesh.size)
+    mem_d = {
+        k: getattr(mem, k)
+        for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+        )
+        if hasattr(mem, k)
+    }
+
+    # HLO-derived roofline terms (depth-extrapolated; see analysis_terms).
+    if analyze:
+        ana = analysis_terms(
+            arch, shape_name, mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+            layout=layout, remat=remat, remat_policy=remat_policy,
+            attn_bf16=attn_bf16,
+        )
+        flops_dev, bytes_dev, wire_dev = ana["flops"], ana["bytes"], ana["wire"]
+    else:
+        ana = None
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        wire_dev = coll["wire_bytes_per_device"]
+
+    terms = RL.roofline_terms(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        wire_bytes_per_device=wire_dev,
+    )
+    mf = RL.model_flops(cfg, meta["n_tokens"], "train" if meta["kind"] == "train" else "serve")
+    rec = dict(
+        meta,
+        mesh=mesh_kind,
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        wire_bytes_per_device=wire_dev,
+        raw_cost_flops=float(cost.get("flops", 0.0)),  # trip-1 caveat
+        collectives=coll,
+        analysis=ana,
+        memory=mem_d,
+        roofline=terms,
+        model_flops_total=mf,
+        useful_flops_ratio=(
+            mf / (flops_dev * mesh.size) if flops_dev else 0.0
+        ),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
+    ap.add_argument("--attn-bf16", action="store_true")
+    ap.add_argument("--no-analyze", action="store_true",
+                    help="skip roofline variants (multi-pod sweep: the "
+                    "deliverable is compile success + memory fit)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            cfg = get_config(a)
+            for s in SHAPES:
+                if cell_applicable(cfg, s):
+                    cells.append((a, s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            tag = f"{arch}__{shape}__{mk}" + (f"__{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, tag + ".json")
+            print(f"=== {tag} ===", flush=True)
+            try:
+                rec = run_cell(
+                    arch, shape, mk,
+                    fsdp=not args.no_fsdp,
+                    seq_parallel=args.seq_parallel,
+                    accum=args.accum,
+                    analyze=not args.no_analyze,
+                    layout=args.layout,
+                    remat=not args.no_remat,
+                    remat_policy=args.remat_policy,
+                    attn_bf16=args.attn_bf16,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec["roofline"]
+                print(
+                    f"    ok: compile={rec['compile_s']}s dominant={r['dominant']} "
+                    f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+                    f"coll={r['collective_s']:.4f}s frac={r['roofline_fraction']:.3f}",
+                    flush=True,
+                )
+            except Exception as e:
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"    FAIL: {type(e).__name__}: {e}", flush=True)
+    print(f"done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

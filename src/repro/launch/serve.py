@@ -1,0 +1,102 @@
+"""Serving driver: batched greedy decoding with continuous batching slots.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mistral_nemo_12b --smoke \
+      --requests 8 --prompt-len 16 --gen-len 24
+
+Rows of the decode batch are serving slots; when a request finishes (fixed
+gen length here), the slot is refilled from the queue. The decode step is a
+single jit'd function against a persistent KV/SSM cache.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import model as MDL
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = MDL.init_model(key, cfg)
+    ctx = args.prompt_len + args.gen_len
+
+    decode = jax.jit(
+        lambda p, s, t: MDL.decode_step(p, s, t, cfg), donate_argnums=(1,)
+    )
+
+    # request queue: random prompts
+    prompts = jax.random.randint(
+        key, (args.requests, args.prompt_len), 0, cfg.vocab_size
+    )
+    queue = list(range(args.requests))
+    B = args.slots
+    state = MDL.init_decode_state(cfg, B, ctx, dtype=jnp.float32)
+    slot_req = [-1] * B
+    slot_pos = np.zeros(B, np.int32)
+    outputs = {i: [] for i in range(args.requests)}
+    done_ct = 0
+    tok = jnp.zeros((B,), jnp.int32)
+
+    # NOTE (simplified): decode caches share a scalar `pos`, so slots step in
+    # lockstep; production would use per-slot positions. Requests are admitted
+    # in waves — fine for the example's purpose (exercising the serve path).
+    t0 = time.time()
+    wave = 0
+    while done_ct < args.requests:
+        # admit
+        for s in range(B):
+            if slot_req[s] < 0 and queue:
+                slot_req[s] = queue.pop(0)
+                slot_pos[s] = 0
+        if all(r < 0 for r in slot_req):
+            break
+        # feed prompts token by token, then generate
+        steps = args.prompt_len + args.gen_len
+        state = MDL.init_decode_state(cfg, B, ctx, dtype=jnp.float32)
+        for t in range(steps):
+            feed = []
+            for s in range(B):
+                r = slot_req[s]
+                if r < 0:
+                    feed.append(0)
+                elif t < args.prompt_len:
+                    feed.append(int(prompts[r, t]))
+                else:
+                    feed.append(int(tok[s]))
+            tok, state = decode(params, state, jnp.asarray(feed, jnp.int32))
+            if t >= args.prompt_len:
+                for s in range(B):
+                    r = slot_req[s]
+                    if r >= 0:
+                        outputs[r].append(int(tok[s]))
+        for s in range(B):
+            if slot_req[s] >= 0:
+                done_ct += 1
+                slot_req[s] = -1
+        wave += 1
+
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in outputs.values())
+    print(f"served {done_ct} requests, {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/max(dt,1e-9):.1f} tok/s, {wave} waves)")
+    for r in range(min(args.requests, 3)):
+        print(f"req{r}: {outputs[r][:10]}")
+
+
+if __name__ == "__main__":
+    main()

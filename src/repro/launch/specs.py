@@ -1,0 +1,190 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct, shardable SDS trees — no device
+allocation happens anywhere on the dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models import model as MDL
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train import sharding as SH
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cell_plan(cfg: ModelConfig, shape_name: str, n_dp: int) -> Dict[str, Any]:
+    """Per-cell execution plan (microbatch accumulation policy).
+
+    Napkin: with full remat, live activations ≈ layer-boundary residuals
+    = n_layers × rows/device × S × d_model × 2B. Target ≤ ~4 GB on v5e,
+    leaving room for params+optimizer. Bigger d_model ⇒ more accumulation.
+    """
+    shp = SHAPES[shape_name]
+    accum = 1
+    if shp["kind"] == "train":
+        resid_bytes_per_row = cfg.n_layers * shp["seq_len"] * cfg.d_model * 2
+        rows_per_dev = max(shp["global_batch"] // n_dp, 1)
+        budget = 4 << 30
+        while (
+            accum < rows_per_dev
+            and rows_per_dev // accum * resid_bytes_per_row > budget
+        ):
+            accum *= 2
+        accum = min(accum, rows_per_dev)
+    return dict(accum=accum, **shp)
+
+
+def input_specs(arch: str, shape_name: str, cfg: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    """SDS for the *data* inputs of one cell (excluding params/opt/cache)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shp = SHAPES[shape_name]
+    GB, S, kind = shp["global_batch"], shp["seq_len"], shp["kind"]
+    out: Dict[str, Any] = {"kind": kind}
+    if kind in ("train", "prefill"):
+        text_len = S - cfg.num_patches if cfg.num_patches else S
+        out["tokens"] = sds((GB, text_len), jnp.int32)
+        if kind == "train":
+            out["targets"] = sds((GB, text_len), jnp.int32)
+        if cfg.num_patches:
+            out["frontend"] = sds((GB, cfg.num_patches, cfg.d_model), jnp.float32)
+        if cfg.enc_layers:
+            out["frontend"] = sds((GB, cfg.enc_seq, cfg.d_model), jnp.float32)
+    else:  # decode: one new token against a seq_len-deep cache
+        out["token"] = sds((GB,), jnp.int32)
+        out["state"] = jax.eval_shape(
+            functools.partial(
+                MDL.init_decode_state,
+                cfg,
+                GB,
+                S,
+                dtype=jnp.bfloat16,
+                with_xkv=bool(cfg.enc_layers),
+            )
+        )
+    return out
+
+
+def model_state_specs(cfg: ModelConfig, opt: bool = True):
+    """SDS trees for params (and optimizer state)."""
+    params = jax.eval_shape(
+        functools.partial(MDL.init_model, cfg=cfg), jax.random.PRNGKey(0)
+    )
+    if not opt:
+        return params, None
+    opt_cfg = adamw.OptConfig(moment_dtype=cfg.param_dtype)
+    opt_state = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+    return params, opt_state
+
+
+def _fit_spec(spec, leaf, mesh):
+    """Downgrade spec dims that don't divide evenly to replicated.
+
+    (jit in_shardings require exact divisibility; vocab padding handles the
+    hot tables, this guard catches everything else — e.g. 14-head archs.)
+    """
+    from jax.sharding import PartitionSpec as P
+
+    dims = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            dims.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        dims.append(ax if leaf.shape[i] % size == 0 else None)
+    return P(*dims)
+
+
+def cell_shardings(cfg: ModelConfig, shape_name: str, mesh, *, fsdp: bool = True,
+                   layout: str = "tp"):
+    """(in_shardings pytrees) for the lowered function of one cell.
+
+    layout="tp" (default): model axis does tensor parallelism, batch over
+    data(+pod), weights 2-D sharded (TP × fsdp).
+    layout="dp": no tensor parallelism — batch over EVERY mesh axis, weights
+    ZeRO-3 sharded over all axes. The right choice for models whose
+    per-layer TP collectives dwarf their compute (small archs; see
+    EXPERIMENTS.md §Perf granite iteration 2).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if layout == "dp":
+        batch_axes = tuple(mesh.axis_names)
+        model_axis = None
+        fsdp_axes = batch_axes
+    else:
+        batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        model_axis = "model"
+        fsdp_axes = batch_axes if fsdp else None
+    shp = SHAPES[shape_name]
+    GB = shp["global_batch"]
+    n_dp = 1
+    for a in batch_axes:
+        n_dp *= mesh.shape[a]
+    shard_batch = GB % n_dp == 0 and GB >= n_dp
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    params, opt_state = model_state_specs(cfg)
+    p_specs = SH.param_specs(params, model=model_axis, fsdp=fsdp_axes)
+    p_specs = jax.tree_util.tree_map(
+        lambda s, l: _fit_spec(s, l, mesh),
+        p_specs,
+        params,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    p_sh = jax.tree_util.tree_map(ns, p_specs, is_leaf=lambda x: isinstance(x, P))
+
+    out = {"params": p_sh, "batch_axes": batch_axes, "n_dp": n_dp}
+    kind = shp["kind"]
+    b_ax = batch_axes if shard_batch else None
+    if kind == "train":
+        o_specs = adamw.OptState(step=P(), m=p_specs, v=p_specs)
+        out["opt"] = jax.tree_util.tree_map(
+            ns, o_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        out["tokens"] = ns(P(b_ax, None))
+        out["targets"] = ns(P(b_ax, None))
+        out["frontend"] = ns(P(b_ax, None, None))
+    elif kind == "prefill":
+        out["tokens"] = ns(P(b_ax, None))
+        out["frontend"] = ns(P(b_ax, None, None))
+    else:  # decode
+        out["token"] = ns(P(b_ax))
+        state_sds = jax.eval_shape(
+            functools.partial(
+                MDL.init_decode_state,
+                cfg,
+                GB,
+                shp["seq_len"],
+                dtype=jnp.bfloat16,
+                with_xkv=bool(cfg.enc_layers),
+            )
+        )
+        c_specs = SH.cache_specs(
+            state_sds,
+            batch_axes=b_ax,
+            model=model_axis,
+            shard_seq=not shard_batch,  # long_500k: shard the KV seq dim
+        )
+        c_specs = jax.tree_util.tree_map(
+            lambda s, l: _fit_spec(s, l, mesh),
+            c_specs,
+            state_sds,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        out["state"] = jax.tree_util.tree_map(
+            ns, c_specs, is_leaf=lambda x: isinstance(x, P)
+        )
+    return out

@@ -1,0 +1,88 @@
+"""Production training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internvl2_1b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+Features exercised end-to-end: config registry, sharded synthetic data
+pipeline, pjit'd train step (grad accumulation, bf16 policy), atomic+async
+checkpointing with restart (``--resume``), elastic restore onto a different
+mesh, and deterministic resumption of the data stream.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, device_batch
+from repro.launch.mesh import batch_axes_of, make_production_mesh, make_smoke_mesh
+from repro.launch.specs import cell_shardings
+from repro.optim import adamw
+from repro.train import sharding as SH
+from repro.train.train_step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the local device mesh")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_smoke_mesh() if args.smoke else make_production_mesh()
+    batch_axes = batch_axes_of(mesh)
+    opt_cfg = adamw.OptConfig(
+        lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5),
+        moment_dtype=cfg.param_dtype,
+    )
+    dc = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    )
+    step_fn = make_train_step(cfg, opt_cfg, accum=args.accum)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    params, opt_state = init_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    start = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        start = ckpt.latest_step()
+        (params, opt_state), meta = ckpt.restore(start, (params, opt_state))
+        print(f"resumed from step {start}")
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    ctx = SH.mesh_axes(batch_axes, "model", model_size=mesh.shape["model"])
+    with mesh, ctx:
+        t0 = time.time()
+        for step in range(start, args.steps):
+            tokens, targets = device_batch(dc, step, mesh, batch_axes)
+            params, opt_state, metrics = jit_step(params, opt_state, tokens, targets)
+            if (step + 1) % args.log_every == 0 or step == start:
+                m = jax.device_get(metrics)
+                print(
+                    f"step {step+1:5d} loss {float(m['loss']):.4f} "
+                    f"gnorm {float(m['grad_norm']):.3f} lr {float(m['lr']):.2e} "
+                    f"({(time.time()-t0)/(step-start+1):.2f}s/step)", flush=True,
+                )
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(step + 1, (params, opt_state))
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        print(f"final checkpoint at step {args.steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,641 @@
+"""Core model layers (pure functions over dict pytrees).
+
+Conventions
+-----------
+* Parameters are nested dicts of ``jnp.ndarray``; init fns take an rng key.
+* ``cfg.compute_dtype`` (bf16) is used inside matmuls; normalization,
+  softmax and RoPE run in float32.
+* Attention is *chunked* (online-softmax over KV blocks, ``lax.scan``):
+  O(S * chunk) memory so 32k prefill compiles without materializing S×S.
+  On TPU the same function is the reference for a flash kernel; on the
+  CPU dry-run it lowers everywhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# Chunk size for online-softmax attention (keys per block).
+KV_CHUNK = 1024
+NEG_INF = -1e30
+
+# Analysis mode (dry-run roofline extraction): disables KV/loss chunking so
+# every lax.scan in the step has trip count == n_periods only — XLA's
+# cost_analysis counts while bodies once, so the roofline extractor lowers
+# 1- and 2-period variants in this mode and extrapolates affinely in depth.
+_ANALYSIS_MODE = False
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def analysis_mode():
+    global _ANALYSIS_MODE
+    old = _ANALYSIS_MODE
+    _ANALYSIS_MODE = True
+    try:
+        yield
+    finally:
+        _ANALYSIS_MODE = old
+
+
+def scan_or_unroll(body, carry, xs, length=None):
+    """lax.scan normally; straight-line Python unroll in analysis mode
+    (keeps chunked memory behaviour while making every trip visible to
+    cost_analysis). Returns (carry, stacked_ys)."""
+    if not _ANALYSIS_MODE:
+        return jax.lax.scan(body, carry, xs, length=length)
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        xi = jax.tree_util.tree_map(lambda x: x[i], xs) if xs is not None else None
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, d_head); positions: (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (d_head/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    d, dq = cfg.d_model, cfg.d_qkv
+    dkv = cfg.n_kv_heads * cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], d, dq, dt),
+        "wk": dense_init(ks[1], d, dkv, dt),
+        "wv": dense_init(ks[2], d, dkv, dt),
+        "wo": dense_init(ks[3], dq, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dq,), jnp.float32)
+        p["bk"] = jnp.zeros((dkv,), jnp.float32)
+        p["bv"] = jnp.zeros((dkv,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, xq, xkv, cfg: ModelConfig):
+    cdt = _dtype(cfg.compute_dtype)
+    B, Sq = xq.shape[0], xq.shape[1]
+    Skv = xkv.shape[1]
+    q = xq.astype(cdt) @ p["wq"].astype(cdt)
+    k = xkv.astype(cdt) @ p["wk"].astype(cdt)
+    v = xkv.astype(cdt) @ p["wv"].astype(cdt)
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(B, Sq, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.d_head)
+    return q, k, v
+
+
+def _chunk_kv(x, n_chunks, chunk):
+    B = x.shape[0]
+    return x.reshape(B, n_chunks, chunk, *x.shape[2:]).transpose(
+        1, 0, 2, *range(3, x.ndim + 1)
+    )
+
+
+def _chunk_mask(valb, k_pos, q_pos, causal, window, B, Sq, chunk):
+    mask = jnp.broadcast_to(valb[:, None, :], (B, Sq, chunk))
+    if causal:
+        mask = mask & (k_pos[None, None, :] <= q_pos[None, :, None])
+    if window:
+        mask = mask & (k_pos[None, None, :] > q_pos[None, :, None] - window)
+    return mask
+
+
+def _flash_fwd_scan(q, kp, vp, kvv, static):
+    """Online-softmax forward. Returns (o f32, lse f32 (B,Sq,H))."""
+    causal, window, chunk, Skv0, mm_bf16 = static
+    mdt = jnp.bfloat16 if mm_bf16 else jnp.float32
+    B, Sq, H, dh = q.shape
+    Hkv = kp.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    Skv = kp.shape[1]
+    n_chunks = Skv // chunk
+    kc = _chunk_kv(kp, n_chunks, chunk)
+    vc = _chunk_kv(vp, n_chunks, chunk)
+    valc = kvv.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    qf = q.astype(mdt)
+    q_pos = jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, valb, cidx = inp
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        kbr = jnp.repeat(kb.astype(mdt), rep, axis=2)
+        s = jnp.einsum(
+            "bqhd,bkhd->bqhk", qf, kbr, preferred_element_type=jnp.float32
+        ) * scale
+        mask = _chunk_mask(valb, k_pos, q_pos, causal, window, B, Sq, chunk)
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        vbr = jnp.repeat(vb.astype(mdt), rep, axis=2)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p.astype(mdt), vbr,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+    (m, l, acc), _ = scan_or_unroll(
+        body, (m0, l0, a0), (kc, vc, valc, jnp.arange(n_chunks))
+    )
+    l = jnp.maximum(l, 1e-30)
+    o = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return o, lse
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _flash_attn(q, kp, vp, kvv, static):
+    o, _ = _flash_fwd_scan(q, kp, vp, kvv, static)
+    return o.astype(q.dtype)
+
+
+def _flash_attn_fwd(q, kp, vp, kvv, static):
+    o, lse = _flash_fwd_scan(q, kp, vp, kvv, static)
+    return o.astype(q.dtype), (q, kp, vp, kvv, o, lse)
+
+
+def _flash_attn_bwd(static, res, do):
+    """Backward that RECOMPUTES per-chunk scores (flash-attention bwd):
+    O(S·chunk) live memory instead of autodiff's O(S²) saved probs."""
+    causal, window, chunk, Skv0, mm_bf16 = static
+    mdt = jnp.bfloat16 if mm_bf16 else jnp.float32
+    q, kp, vp, kvv, o, lse = res
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = kp.shape[1], kp.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    n_chunks = Skv // chunk
+    kc = _chunk_kv(kp, n_chunks, chunk)
+    vc = _chunk_kv(vp, n_chunks, chunk)
+    valc = kvv.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    qf = q.astype(mdt)
+    dof = do.astype(mdt)
+    delta = jnp.sum(do.astype(jnp.float32) * o, axis=-1)  # (B,Sq,H)
+    q_pos = jnp.arange(Sq)
+
+    def body(dq, inp):
+        kb, vb, valb, cidx = inp
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        kbr = jnp.repeat(kb.astype(mdt), rep, axis=2)
+        vbr = jnp.repeat(vb.astype(mdt), rep, axis=2)
+        s = jnp.einsum(
+            "bqhd,bkhd->bqhk", qf, kbr, preferred_element_type=jnp.float32
+        ) * scale
+        mask = _chunk_mask(valb, k_pos, q_pos, causal, window, B, Sq, chunk)
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # exact probs (B,Sq,H,ck)
+        dp = jnp.einsum(
+            "bqhd,bkhd->bqhk", dof, vbr, preferred_element_type=jnp.float32
+        )
+        ds = p * (dp - delta[..., None])  # (B,Sq,H,ck) f32
+        dsm = ds.astype(mdt)
+        dq = dq + scale * jnp.einsum(
+            "bqhk,bkhd->bqhd", dsm, kbr, preferred_element_type=jnp.float32
+        )
+        # GQA: fold rep heads back onto kv heads
+        ds_g = dsm.reshape(B, Sq, Hkv, rep, chunk)
+        p_g = p.astype(mdt).reshape(B, Sq, Hkv, rep, chunk)
+        do_g = dof.reshape(B, Sq, Hkv, rep, dh)
+        q_g = qf.reshape(B, Sq, Hkv, rep, dh)
+        dk_c = scale * jnp.einsum(
+            "bqgrk,bqgrd->bkgd", ds_g, q_g, preferred_element_type=jnp.float32
+        )
+        dv_c = jnp.einsum(
+            "bqgrk,bqgrd->bkgd", p_g, do_g, preferred_element_type=jnp.float32
+        )
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+    dq, (dk_s, dv_s) = scan_or_unroll(body, dq0, (kc, vc, valc, jnp.arange(n_chunks)))
+    dk = dk_s.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, dh)
+    dv = dv_s.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, dh)
+    return (
+        dq.astype(q.dtype),
+        dk.astype(kp.dtype),
+        dv.astype(vp.dtype),
+        None,
+    )
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, H, dh)
+    k: jnp.ndarray,  # (B, Skv, Hkv, dh)
+    v: jnp.ndarray,  # (B, Skv, Hkv, dh)
+    *,
+    causal: bool,
+    q_offset=0,  # kept for API compat; flash path assumes q_offset == 0
+    window: int = 0,
+    kv_valid: Optional[jnp.ndarray] = None,
+    chunk: int = KV_CHUNK,
+    matmul_bf16: bool = False,
+) -> jnp.ndarray:
+    """Flash attention (custom_vjp, online softmax over KV chunks)."""
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        base_valid = jnp.arange(n_chunks * chunk) < Skv
+    else:
+        kp, vp = k, v
+        base_valid = jnp.ones((Skv,), bool)
+    if kv_valid is not None:
+        kvv = jnp.pad(kv_valid, ((0, 0), (0, pad))) & base_valid[None]
+    else:
+        kvv = jnp.broadcast_to(base_valid[None], (B, n_chunks * chunk))
+    static = (bool(causal), int(window), int(chunk), int(Skv), bool(matmul_bf16))
+    return _flash_attn(q, kp, vp, kvv, static)
+
+
+def attention_train(p, x, cfg: ModelConfig, positions=None):
+    """Causal self-attention over a full sequence (training / prefill)."""
+    from repro.train.sharding import constrain_attn_out, constrain_attn_q
+
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain_attn_q(q)
+    o = chunked_attention(
+        q, k, v, causal=True, q_offset=0, window=cfg.sliding_window,
+        matmul_bf16=cfg.attn_bf16,
+    )
+    o = constrain_attn_out(o)
+    cdt = _dtype(cfg.compute_dtype)
+    o = o.reshape(B, S, cfg.d_qkv).astype(cdt) @ p["wo"].astype(cdt)
+    return o, (k, v)
+
+
+def attention_bidir(p, x, cfg: ModelConfig):
+    """Bidirectional self-attention (encoder)."""
+    from repro.train.sharding import constrain_attn_out, constrain_attn_q
+
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain_attn_q(q)
+    o = chunked_attention(q, k, v, causal=False, q_offset=0,
+                          matmul_bf16=cfg.attn_bf16)
+    o = constrain_attn_out(o)
+    cdt = _dtype(cfg.compute_dtype)
+    return o.reshape(B, S, cfg.d_qkv).astype(cdt) @ p["wo"].astype(cdt)
+
+
+def attention_cross(p, x, enc_out, cfg: ModelConfig):
+    """Cross-attention from decoder x to encoder output."""
+    from repro.train.sharding import constrain_attn_out, constrain_attn_q
+
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, enc_out, cfg)
+    q = constrain_attn_q(q)
+    o = chunked_attention(q, k, v, causal=False, q_offset=0,
+                          matmul_bf16=cfg.attn_bf16)
+    o = constrain_attn_out(o)
+    cdt = _dtype(cfg.compute_dtype)
+    return o.reshape(B, S, cfg.d_qkv).astype(cdt) @ p["wo"].astype(cdt)
+
+
+def attention_decode(p, x, cache, cfg: ModelConfig):
+    """Single-token decode against a KV cache.
+
+    cache: {"k": (B, T, Hkv, dh), "v": ..., "pos": scalar int32}. For
+    sliding-window layers the cache is a ring buffer of size ``window``.
+    Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    pos = cache["pos"]  # number of tokens already in context
+    q, k, v = _project_qkv(p, x, x, cfg)  # Sq = 1
+    q = apply_rope(q, pos[None, None] + jnp.zeros((B, 1), jnp.int32), cfg.rope_theta)
+    k = apply_rope(k, pos[None, None] + jnp.zeros((B, 1), jnp.int32), cfg.rope_theta)
+    slot = jnp.where(cfg.sliding_window > 0, pos % T, pos) if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    idx = jnp.arange(T)
+    if cfg.sliding_window:
+        valid = (idx <= slot) | (pos >= T)  # ring buffer: all valid once wrapped
+        abs_pos = jnp.where(idx <= slot, pos - (slot - idx), pos - (slot + T - idx))
+        key_pos = jnp.where(valid, abs_pos, -1)
+    else:
+        valid = idx <= pos
+        key_pos = idx
+    # scores over full cache, masked. (decode: Skv=T, Sq=1)
+    scale = 1.0 / math.sqrt(cfg.d_head)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    # rope for cached keys was applied at insert time with absolute positions
+    kf = jnp.repeat(ck.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(cv.astype(jnp.float32), rep, axis=2)
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqhd,bkhd->bqhk", qf, kf)  # (B,1,H,T)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhk,bkhd->bqhd", w, vf)
+    cdt = _dtype(cfg.compute_dtype)
+    o = o.reshape(B, 1, cfg.d_qkv).astype(cdt) @ p["wo"].astype(cdt)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    return o, new_cache
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, ctx: int, dtype=jnp.bfloat16):
+    T = min(ctx, cfg.sliding_window) if cfg.sliding_window else ctx
+    return {
+        "k": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    dt = _dtype(cfg.param_dtype)
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, ff, dt),
+            "w_up": dense_init(ks[1], d, ff, dt),
+            "w_down": dense_init(ks[2], ff, d, dt),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, ff, dt),
+        "w_down": dense_init(ks[1], ff, d, dt),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    cdt = _dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(cdt)) * (x @ p["w_up"].astype(cdt))
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"].astype(cdt)))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["w_up"].astype(cdt))
+    return h @ p["w_down"].astype(cdt)
+
+
+# --------------------------------------------------------------------------
+# embedding / logits / loss
+# --------------------------------------------------------------------------
+
+def embed_tokens(emb, tokens, cfg: ModelConfig):
+    return emb[tokens].astype(_dtype(cfg.compute_dtype))
+
+
+def logits_from_hidden(params, h, cfg: ModelConfig):
+    cdt = _dtype(cfg.compute_dtype)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    # (.., d) @ (d, V)
+    wt = w.T if cfg.tie_embeddings else w
+    return h.astype(cdt) @ wt.astype(cdt)
+
+
+def mask_padded_vocab(logits, cfg: ModelConfig, fill=NEG_INF):
+    """-inf the vocab-padding tail (see ModelConfig.vocab_pad_to)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < cfg.vocab_size, logits, fill)
+
+
+def cross_entropy_chunked(params, h, targets, cfg: ModelConfig, chunk: int = 512):
+    """Memory-bounded LM loss.
+
+    Chunks over the *sequence* dimension (batch dim stays leading in every
+    chunk) so the batch sharding survives the scan untouched — flattening
+    tokens would force GSPMD into involuntary resharding/remat.
+    """
+    B, S, d = h.shape
+    if _ANALYSIS_MODE:
+        chunk = S
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)  # (nc,B,ck,d)
+    tc = targets.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        hi, ti = inp  # (B, ck, d), (B, ck)
+        logits = logits_from_hidden(params, hi, cfg).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        logits = mask_padded_vocab(logits, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B, ck)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(ti, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = ti >= 0
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hc, tc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# --------------------------------------------------------------------------
+# flash cross-entropy: recomputing custom_vjp (the production loss)
+# --------------------------------------------------------------------------
+
+def _ce_chunks(h, targets, chunk):
+    B, S, d = h.shape
+    n_chunks = (S + chunk - 1) // chunk
+    pad = n_chunks * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    return hc, tc, n_chunks
+
+
+def _ce_logits(hi, w, vocab_size, cdt):
+    logits = (hi.astype(cdt) @ w.astype(cdt)).astype(jnp.float32)
+    ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(ids < vocab_size, logits, NEG_INF)
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_cross_entropy(h, w, targets, static):
+    """Sum of token NLLs. h:(B,S,d), w:(d,Vp), targets:(B,S) (-1 = pad).
+
+    static = (vocab_size, chunk, compute_dtype_name). The backward
+    RECOMPUTES per-chunk logits (saves only the per-chunk LSE), so the
+    (S, V) logits tensor never persists.
+    """
+    vocab_size, chunk, cdtn = static
+    cdt = _dtype(cdtn)
+    hc, tc, _ = _ce_chunks(h, targets, min(chunk, h.shape[1]))
+
+    def body(tot, inp):
+        hi, ti = inp
+        logits = _ce_logits(hi, w, vocab_size, cdt)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(ti, 0)[..., None], -1)[..., 0]
+        nll = jnp.where(ti >= 0, lse - tgt, 0.0)
+        return tot + nll.sum(), lse
+
+    tot, _ = scan_or_unroll(body, jnp.float32(0.0), (hc, tc))
+    return tot
+
+
+def _fce_fwd(h, w, targets, static):
+    vocab_size, chunk, cdtn = static
+    cdt = _dtype(cdtn)
+    hc, tc, _ = _ce_chunks(h, targets, min(chunk, h.shape[1]))
+
+    def body(tot, inp):
+        hi, ti = inp
+        logits = _ce_logits(hi, w, vocab_size, cdt)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(ti, 0)[..., None], -1)[..., 0]
+        nll = jnp.where(ti >= 0, lse - tgt, 0.0)
+        return tot + nll.sum(), lse
+
+    tot, lses = scan_or_unroll(body, jnp.float32(0.0), (hc, tc))
+    return tot, (h, w, targets, lses)
+
+
+def _fce_bwd(static, res, g):
+    vocab_size, chunk, cdtn = static
+    cdt = _dtype(cdtn)
+    h, w, targets, lses = res
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    hc, tc, n_chunks = _ce_chunks(h, targets, chunk)
+
+    def body(dw, inp):
+        hi, ti, lse = inp  # (B,ck,d), (B,ck), (B,ck)
+        logits = _ce_logits(hi, w, vocab_size, cdt)
+        p = jnp.exp(logits - lse[..., None])  # softmax (B,ck,Vp)
+        valid = (ti >= 0).astype(jnp.float32)[..., None]
+        ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        onehot = (ids == jnp.maximum(ti, 0)[..., None]).astype(jnp.float32)
+        dlog = (p - onehot) * valid * g  # dL/dlogits (fused elementwise)
+        dh_c = jnp.einsum("bkv,dv->bkd", dlog.astype(cdt), w.astype(cdt))
+        dw = dw + jnp.einsum("bkd,bkv->dv", hi.astype(cdt), dlog.astype(cdt)).astype(
+            jnp.float32
+        )
+        return dw, dh_c
+
+    dw0 = jnp.zeros(w.shape, jnp.float32)
+    dw, dh_s = scan_or_unroll(body, dw0, (hc, tc, lses))
+    dh = dh_s.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, d)[:, :S]
+    return dh.astype(h.dtype), dw.astype(w.dtype), None
+
+
+flash_cross_entropy.defvjp(_fce_fwd, _fce_bwd)
+
+
+def lm_loss_flash(params, h, targets, cfg: ModelConfig, chunk: int = 512):
+    """Mean NLL via the recomputing flash CE (used by the train step)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    static = (cfg.vocab_size, chunk, cfg.compute_dtype)
+    tot = flash_cross_entropy(h, w, targets, static)
+    cnt = jnp.sum(targets >= 0)
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,208 @@
+"""Mamba-2 (SSD, state-space duality) block — pure-jnp chunked algorithm.
+
+Follows arXiv:2405.21060: the sequence is split into chunks; within a chunk
+the output is the masked (C Bᵀ ∘ L) x "attention-like" form, states are
+carried across chunks with a scan. Single-token decode is the O(1) recurrent
+update. The Pallas kernel in ``repro.kernels.ssd_scan`` implements the same
+contraction with VMEM tiling; this module is its oracle.
+
+Sharding note: projections are stored as *separate* matrices (wz/wx/wB/wC/
+wdt and per-segment convs) rather than one fused in_proj, so the d_inner /
+head dimensions shard cleanly on the `model` mesh axis without slicing a
+sharded dimension (Megatron column-parallel in, row-parallel out).
+
+Jamba uses the same block (its original Mamba-1 selective scan is subsumed by
+SSD with per-head scalar A; see DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dtype, dense_init
+
+
+def mamba_init(key, cfg: ModelConfig):
+    dt = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "wz": dense_init(ks[0], d, di, dt),
+        "wx": dense_init(ks[1], d, di, dt),
+        "wB": dense_init(ks[2], d, ds, dt),
+        "wC": dense_init(ks[3], d, ds, dt),
+        "wdt": dense_init(ks[4], d, nh, dt),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_conv, di), jnp.float32) * 0.1).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (cfg.ssm_conv, ds), jnp.float32) * 0.1).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (cfg.ssm_conv, ds), jnp.float32) * 0.1).astype(dt),
+        "conv_bx": jnp.zeros((di,), jnp.float32),
+        "conv_bB": jnp.zeros((ds,), jnp.float32),
+        "conv_bC": jnp.zeros((ds,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) in (-inf, 0)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus^-1(~0.12)
+        "out_proj": dense_init(ks[8], di, d, dt),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d + silu. x: (B,S,C), w: (Kc,C); state: (B,Kc-1,C)."""
+    Kc = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (Kc - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros(x.shape, jnp.float32)
+    S = x.shape[1]
+    for i in range(Kc):
+        out = out + xp[:, i : i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + b)
+    new_state = xp[:, -(Kc - 1) :, :] if Kc > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int):
+    """SSD forward.
+
+    x : (B, S, nh, hd)   dt: (B, S, nh)   A: (nh,) negative reals
+    Bm, Cm: (B, S, ds)   (single SSM group, broadcast over heads)
+    Returns y: (B, S, nh, hd).
+    """
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    pad = (-S) % Q
+    if pad:  # right-pad with dt=0 rows: exactly zero contribution (causal)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),) * (dt.ndim - 2))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xb = x.reshape(Bsz, nc, Q, nh, hd).astype(jnp.float32)
+    dtb = dt.reshape(Bsz, nc, Q, nh).astype(jnp.float32)
+    Bb = Bm.reshape(Bsz, nc, Q, ds).astype(jnp.float32)
+    Cb = Cm.reshape(Bsz, nc, Q, ds).astype(jnp.float32)
+
+    dA = dtb * A  # (B,nc,Q,nh), negative
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    seg_total = cs[:, :, -1, :]  # (B,nc,nh)
+
+    # --- intra-chunk (diagonal block)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Qt,Qs,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bctn,bcsn->bcts", Cb, Bb)  # (B,nc,Qt,Qs)
+    scores = CB[..., None] * L  # (B,nc,Qt,Qs,nh)
+    xdt = xb * dtb[..., None]  # (B,nc,Q,nh,hd)
+    y_intra = jnp.einsum("bctsh,bcshd->bcthd", scores, xdt)
+
+    # --- chunk states: h_c = sum_s exp(seg_total - cs_s) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cs)  # (B,nc,Q,nh)
+    states = jnp.einsum(
+        "bcqs,bcqh,bcqhd->bchsd", Bb, decay_to_end * dtb, xb
+    )  # (B,nc,nh,ds,hd)
+
+    # --- inter-chunk scan: H_c = exp(seg_total_c) H_{c-1} + states_c
+    seg = jnp.exp(seg_total)  # (B,nc,nh)
+
+    def scan_fn(h, inp):
+        s_c, g_c = inp  # states (B,nh,ds,hd), gate (B,nh)
+        h_new = h * g_c[..., None, None] + s_c
+        return h_new, h
+
+    states_t = states.transpose(1, 0, 2, 3, 4)  # (nc,B,nh,ds,hd)
+    seg_t = seg.transpose(1, 0, 2)  # (nc,B,nh)
+    h0 = jnp.zeros((Bsz, nh, ds, hd), jnp.float32)
+    from repro.models.layers import scan_or_unroll
+
+    _, h_prev = scan_or_unroll(scan_fn, h0, (states_t, seg_t))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,nh,ds,hd): state entering chunk c
+
+    # --- inter-chunk contribution: y_inter[t] = C_t · (exp(cs_t) h_prev)
+    decay_in = jnp.exp(cs)  # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bcqs,bchsd,bcqh->bcqhd", Cb, h_prev, decay_in)
+
+    y = y_intra + y_inter + xb * D[None, None, None, :, None]
+    return y.reshape(Bsz, S, nh, hd)[:, :S0]
+
+
+def _project(p, x, cfg: ModelConfig):
+    cdt = _dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    z = xc @ p["wz"].astype(cdt)
+    xs = xc @ p["wx"].astype(cdt)
+    Bm = xc @ p["wB"].astype(cdt)
+    Cm = xc @ p["wC"].astype(cdt)
+    dtr = xc @ p["wdt"].astype(cdt)
+    return z, xs, Bm, Cm, dtr
+
+
+def mamba_forward(p, x, cfg: ModelConfig):
+    """Full-sequence Mamba-2 block. x: (B,S,d) -> (B,S,d)."""
+    cdt = _dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    di, ds, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dtr = _project(p, x, cfg)
+    xs, _ = _causal_conv(xs, p["conv_x"], p["conv_bx"])
+    Bm, _ = _causal_conv(Bm, p["conv_B"], p["conv_bB"])
+    Cm, _ = _causal_conv(Cm, p["conv_C"], p["conv_bC"])
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    y = ssd_chunked(
+        xs.reshape(B, S, nh, hd), dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk
+    )
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (Mamba-2 norm-before-out-proj)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yz), axis=-1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]
+    return (yz.astype(cdt) @ p["out_proj"].astype(cdt)).astype(x.dtype)
+
+
+def make_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_n_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32
+        ),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), dtype),
+        "conv_B": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode(p, x, cache, cfg: ModelConfig):
+    """Single-token recurrent update. x: (B,1,d)."""
+    cdt = _dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    di, ds, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    z, xs, Bm, Cm, dtr = _project(p, x, cfg)
+    xs, ncx = _causal_conv(xs, p["conv_x"], p["conv_bx"], state=cache["conv_x"])
+    Bm, ncB = _causal_conv(Bm, p["conv_B"], p["conv_bB"], state=cache["conv_B"])
+    Cm, ncC = _causal_conv(Cm, p["conv_C"], p["conv_bC"], state=cache["conv_C"])
+    xs = xs[:, 0]
+    Bm = Bm[:, 0].astype(jnp.float32)
+    Cm = Cm[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, nh, hd).astype(jnp.float32)
+    g = jnp.exp(dt * A)  # (B,nh)
+    h = cache["ssm"] * g[..., None, None] + jnp.einsum(
+        "bs,bh,bhd->bhsd", Bm, dt, xh
+    )
+    y = jnp.einsum("bs,bhsd->bhd", Cm, h) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yz), axis=-1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"]
+    out = (yz.astype(cdt) @ p["out_proj"].astype(cdt)).astype(x.dtype)
+    return out, {"ssm": h, "conv_x": ncx, "conv_B": ncB, "conv_C": ncC}

@@ -1,0 +1,365 @@
+"""Unified model: init / train forward / prefill / decode for every family.
+
+The layer stack is a ``lax.scan`` over *periods* (see config.py): each scan
+step applies ``len(cfg.period)`` layers whose parameters are stacked along a
+leading ``n_periods`` axis. One period is traced regardless of depth, so the
+96-layer Nemotron lowers to the same HLO size as a 2-layer smoke model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _period_pos_init(key, cfg: ModelConfig, spec, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": L.norm_init(cfg), "norm2": L.norm_init(cfg)}
+    if spec.kind == "attn":
+        p["attn"] = L.attn_init(ks[0], cfg)
+    else:
+        p["mamba"] = M.mamba_init(ks[0], cfg)
+    if spec.mlp == "dense":
+        p["mlp"] = L.mlp_init(ks[1], cfg)
+    elif spec.mlp == "moe":
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    if cross:
+        p["norm_x"] = L.norm_init(cfg)
+        p["xattn"] = L.attn_init(ks[2], cfg)
+    return p
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = L._dtype(cfg.param_dtype)
+    params: Params = {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ks[1], cfg.d_model, cfg.padded_vocab, dt)
+
+    cross = cfg.enc_layers > 0
+    stack: Params = {}
+    for i, spec in enumerate(cfg.period):
+        fn = functools.partial(_period_pos_init, cfg=cfg, spec=spec, cross=cross)
+        stack[f"pos{i}"] = _stack_init(fn, ks[2 + (i % 4)], cfg.n_periods)
+    params["layers"] = stack
+
+    if cfg.enc_layers:
+        from repro.models.config import LayerSpec
+
+        enc_spec = LayerSpec(kind="attn", mlp="dense")
+        fn = functools.partial(_period_pos_init, cfg=cfg, spec=enc_spec, cross=False)
+        params["enc_layers"] = _stack_init(fn, ks[6], cfg.enc_layers)
+        params["enc_norm"] = L.norm_init(cfg)
+    if cfg.num_patches:
+        params["patch_proj"] = L.dense_init(ks[7], cfg.d_model, cfg.d_model, dt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+def _apply_pos_train(pp, h, cfg: ModelConfig, spec, enc_out=None):
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "attn":
+        a, _ = L.attention_train(pp["attn"], L.apply_norm(pp["norm1"], h, cfg), cfg)
+    else:
+        a = M.mamba_forward(pp["mamba"], L.apply_norm(pp["norm1"], h, cfg), cfg)
+    h = h + a
+    if enc_out is not None and "xattn" in pp:
+        x = L.attention_cross(pp["xattn"], L.apply_norm(pp["norm_x"], h, cfg), enc_out, cfg)
+        h = h + x
+    if spec.mlp == "dense":
+        h = h + L.apply_mlp(pp["mlp"], L.apply_norm(pp["norm2"], h, cfg), cfg)
+    elif spec.mlp == "moe":
+        mo, a2 = MOE.apply_moe(pp["moe"], L.apply_norm(pp["norm2"], h, cfg), cfg)
+        h = h + mo
+        aux = aux + a2
+    return h, aux
+
+
+def forward_hidden(
+    params: Params,
+    tokens: jnp.ndarray,  # (B, S_text) int32
+    cfg: ModelConfig,
+    *,
+    frontend_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) vlm/audio stub
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (hidden (B,S,d), aux_loss)."""
+    h = L.embed_tokens(params["embed"], tokens, cfg)
+    if cfg.num_patches and frontend_embeds is not None:
+        cdt = L._dtype(cfg.compute_dtype)
+        pe = frontend_embeds.astype(cdt) @ params["patch_proj"].astype(cdt)
+        h = jnp.concatenate([pe, h], axis=1)
+
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = encode(params, frontend_embeds, cfg)
+
+    from repro.train.sharding import constrain_acts
+
+    h = constrain_acts(h)
+
+    def period_body(h, stacked_pp):
+        aux = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.period):
+            h, a = _apply_pos_train(stacked_pp[f"pos{i}"], h, cfg, spec, enc_out)
+            h = constrain_acts(h)
+            aux = aux + a
+        return h, aux
+
+    body = period_body
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(period_body, policy=policy)
+    if L._ANALYSIS_MODE:
+        # straight-line unroll so cost_analysis sees every period exactly
+        # once (while bodies are counted once regardless of trip count).
+        aux_tot = jnp.zeros((), jnp.float32)
+        for pi in range(cfg.n_periods):
+            pp = jax.tree_util.tree_map(lambda x: x[pi], params["layers"])
+            h, a = body(h, pp)
+            aux_tot = aux_tot + a
+        h = L.apply_norm(params["final_norm"], h, cfg)
+        return h, aux_tot
+    h, auxs = jax.lax.scan(lambda c, pp: body(c, pp), h, params["layers"])
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    return h, jnp.sum(auxs)
+
+
+def encode(params: Params, frame_embeds: jnp.ndarray, cfg: ModelConfig):
+    """Encoder stack over precomputed (stub) frontend embeddings."""
+    from repro.models.config import LayerSpec
+
+    spec = LayerSpec(kind="attn", mlp="dense")
+    h = frame_embeds.astype(L._dtype(cfg.compute_dtype))
+
+    def body(h, pp):
+        a = L.attention_bidir(pp["attn"], L.apply_norm(pp["norm1"], h, cfg), cfg)
+        h = h + a
+        h = h + L.apply_mlp(pp["mlp"], L.apply_norm(pp["norm2"], h, cfg), cfg)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if L._ANALYSIS_MODE:
+        for li in range(cfg.enc_layers):
+            pp = jax.tree_util.tree_map(lambda x: x[li], params["enc_layers"])
+            h, _ = body(h, pp)
+        return L.apply_norm(params["enc_norm"], h, cfg)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], h, cfg)
+
+
+def lm_loss(params, tokens, targets, cfg: ModelConfig, frontend_embeds=None):
+    h, aux = forward_hidden(params, tokens, cfg, frontend_embeds=frontend_embeds)
+    if cfg.num_patches and frontend_embeds is not None:
+        h = h[:, cfg.num_patches :]  # loss only over text positions
+    loss = L.lm_loss_flash(params, h, targets, cfg)
+    return loss + 0.01 * aux, (loss, aux)
+
+
+# --------------------------------------------------------------------------
+# serving: decode state
+# --------------------------------------------------------------------------
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, ctx: int, dtype=jnp.bfloat16, with_xkv: bool = False
+):
+    """Stacked per-period caches (leading axis n_periods).
+
+    with_xkv: allocate encoder cross-K/V slots (whisper decode cells) —
+    normally they are produced by ``prefill``.
+    """
+
+    def per_period(_):
+        st = {}
+        for i, spec in enumerate(cfg.period):
+            if spec.kind == "attn":
+                st[f"pos{i}"] = L.make_kv_cache(cfg, batch, ctx, dtype)
+            else:
+                st[f"pos{i}"] = M.make_mamba_cache(cfg, batch, dtype)
+        return st
+
+    one = per_period(None)
+    state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), one
+    )
+    extra: Params = {}
+    if cfg.enc_layers:
+        if with_xkv:
+            kv = lambda: jnp.zeros(
+                (cfg.n_periods, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head), dtype
+            )
+            extra["xkv"] = {
+                f"pos{i}": (kv(), kv()) for i in range(len(cfg.period))
+            }
+        else:
+            extra["xkv"] = None  # filled at prefill
+    return {"layers": state, **extra}
+
+
+def decode_step(params, state, token, cfg: ModelConfig):
+    """One greedy decode step. token: (B,) int32. Returns (next_token, state)."""
+    h = L.embed_tokens(params["embed"], token[:, None], cfg)  # (B,1,d)
+    has_xkv = state.get("xkv") is not None
+
+    def body(h, inp):
+        if has_xkv:
+            pp, cache, xkv = inp
+        else:
+            pp, cache = inp
+            xkv = None
+        new_cache = {}
+        for i, spec in enumerate(cfg.period):
+            c = cache[f"pos{i}"]
+            hn = L.apply_norm(pp[f"pos{i}"]["norm1"], h, cfg)
+            if spec.kind == "attn":
+                a, c2 = L.attention_decode(pp[f"pos{i}"]["attn"], hn, c, cfg)
+            else:
+                a, c2 = M.mamba_decode(pp[f"pos{i}"]["mamba"], hn, c, cfg)
+            h = h + a
+            new_cache[f"pos{i}"] = c2
+            if xkv is not None and "xattn" in pp[f"pos{i}"]:
+                # cross-attention against cached encoder K/V (whisper)
+                h = h + _cross_decode(pp[f"pos{i}"], h, xkv[f"pos{i}"], cfg)
+            if spec.mlp == "dense":
+                h = h + L.apply_mlp(
+                    pp[f"pos{i}"]["mlp"],
+                    L.apply_norm(pp[f"pos{i}"]["norm2"], h, cfg),
+                    cfg,
+                )
+            elif spec.mlp == "moe":
+                mo, _ = MOE.apply_moe(
+                    pp[f"pos{i}"]["moe"],
+                    L.apply_norm(pp[f"pos{i}"]["norm2"], h, cfg),
+                    cfg,
+                )
+                h = h + mo
+        return h, new_cache
+
+    xs = (
+        (params["layers"], state["layers"], state["xkv"])
+        if has_xkv
+        else (params["layers"], state["layers"])
+    )
+    if L._ANALYSIS_MODE:
+        outs = []
+        for pi in range(cfg.n_periods):
+            inp = jax.tree_util.tree_map(lambda x: x[pi], xs)
+            h, nc = body(h, inp)
+            outs.append(nc)
+        new_layer_state = jax.tree_util.tree_map(
+            lambda *xs_: jnp.stack(xs_), *outs
+        )
+    else:
+        h, new_layer_state = jax.lax.scan(body, h, xs)
+    h = L.apply_norm(params["final_norm"], h, cfg)
+    logits = L.logits_from_hidden(params, h[:, 0], cfg).astype(jnp.float32)
+    logits = L.mask_padded_vocab(logits, cfg)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_state = dict(state)
+    new_state["layers"] = new_layer_state
+    return next_token, new_state
+
+
+def _cross_decode(pp, h, xkv, cfg: ModelConfig):
+    """Cross-attention during decode, using encoder K/V cached at prefill.
+
+    NOTE: per-layer xkv caching is handled via scan carry-free stacked
+    arrays in ``xkv`` (n_periods leading axis is consumed by the scan).
+    """
+    k, v = xkv
+    o = L.chunked_attention(
+        _q_only(pp["xattn"], L.apply_norm(pp["norm_x"], h, cfg), cfg),
+        k,
+        v,
+        causal=False,
+        q_offset=0,
+    )
+    cdt = L._dtype(cfg.compute_dtype)
+    B = h.shape[0]
+    return o.reshape(B, 1, cfg.d_qkv).astype(cdt) @ pp["xattn"]["wo"].astype(cdt)
+
+
+def _q_only(p, x, cfg: ModelConfig):
+    cdt = L._dtype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    q = x.astype(cdt) @ p["wq"].astype(cdt)
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+    return q.reshape(B, S, cfg.n_heads, cfg.d_head)
+
+
+def prefill(params, state, tokens, cfg: ModelConfig, frontend_embeds=None):
+    """Fill caches from a prompt; returns (state, last_token_logits_argmax).
+
+    Implemented as a scan of ``decode_step`` over prompt tokens for exactness
+    (shares one traced step); production prefill would batch this — the
+    dry-run prefill cells instead lower ``prefill_step`` below.
+    """
+    if cfg.enc_layers and frontend_embeds is not None:
+        enc_out = encode(params, frontend_embeds, cfg)
+        state = dict(state)
+        state["xkv"] = _encode_xkv(params, enc_out, cfg)
+
+    def body(st, tok):
+        nxt, st2 = decode_step(params, st, tok, cfg)
+        return st2, nxt
+
+    state, outs = jax.lax.scan(body, state, tokens.T)  # scan over S, (B,) each
+    return state, outs[-1]
+
+
+def _encode_xkv(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V per decoder period position (stacked)."""
+
+    def per_layer(pp):
+        out = {}
+        for i in range(len(cfg.period)):
+            p = pp[f"pos{i}"]["xattn"]
+            cdt = L._dtype(cfg.compute_dtype)
+            B, Skv, _ = enc_out.shape
+            k = (enc_out.astype(cdt) @ p["wk"].astype(cdt)).reshape(
+                B, Skv, cfg.n_kv_heads, cfg.d_head
+            )
+            v = (enc_out.astype(cdt) @ p["wv"].astype(cdt)).reshape(
+                B, Skv, cfg.n_kv_heads, cfg.d_head
+            )
+            out[f"pos{i}"] = (k, v)
+        return out
+
+    return jax.vmap(per_layer)(params["layers"])
+
+
+def prefill_forward(params, tokens, cfg: ModelConfig, frontend_embeds=None):
+    """Batched prefill: full-sequence forward returning last-position logits.
+    This is what the ``prefill_32k`` dry-run cells lower."""
+    h, _ = forward_hidden(params, tokens, cfg, frontend_embeds=frontend_embeds)
+    logits = L.logits_from_hidden(params, h[:, -1], cfg)
+    logits = L.mask_padded_vocab(logits.astype(jnp.float32), cfg)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,620 @@
+"""Tensor-timestepped co-simulation engine (the CODES/ROSS adaptation).
+
+One `tick` advances Δt of virtual time:
+  1. **Rank VMs** (one per job, vectorized over ranks — the Argobots-thread
+     replacement): ranks entering an (op, round) emit messages and bump
+     their cumulative send/recv thresholds; collectives are expanded
+     algorithmically (ring / recursive-doubling / binomial, §DESIGN).
+  2. **Injection**: emitted messages get pool slots (stack allocator),
+     routes (MIN or adaptive, live link demand) and latency floors.
+  3. **Network**: fluid fair-share wormhole model — each active message
+     progresses at min over its route links of (bw_l / n_msgs_on_l);
+     delivery when its bytes drain and the hop-latency floor passed.
+  4. **Bookkeeping**: deliveries unblock VMs (cumulative counting — see
+     DESIGN §9 for the matching relaxation); latency histograms, per-app
+     router-window counters (paper's 0.5 ms packet counters), link loads.
+
+Everything is dense jnp; the loop is `lax.while_loop`, so the engine jits
+once per (topology, job set) and also vmaps for ensemble sweeps.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.skeleton import OP, SkeletonProgram
+from repro.netsim.config import NetConfig
+from repro.netsim.routing import TopoArrays, compute_routes, topo_arrays
+from repro.netsim.topology import Dragonfly, KIND_GLOBAL, KIND_LOCAL
+
+MAXE = 8  # max emissions per rank per (op, round)
+
+
+class VMState(NamedTuple):
+    pc: jnp.ndarray  # (P,) int32
+    rnd: jnp.ndarray  # (P,) int32 round within current op
+    emitted: jnp.ndarray  # (P,) bool — entered current (op, round)
+    busy_until: jnp.ndarray  # (P,) f32 us
+    send_need: jnp.ndarray  # (P,) int32 cumulative deliveries required
+    send_done: jnp.ndarray
+    recv_need: jnp.ndarray
+    recv_done: jnp.ndarray
+    comm_time: jnp.ndarray  # (P,) f32 us blocked on communication
+    done: jnp.ndarray  # (P,) bool
+
+
+class URState(NamedTuple):
+    next_t: jnp.ndarray  # (P,) f32
+    count: jnp.ndarray  # (P,) int32
+
+
+class PoolState(NamedTuple):
+    active: jnp.ndarray  # (M,) bool
+    src_rank: jnp.ndarray  # (M,) int32
+    dst_rank: jnp.ndarray
+    job: jnp.ndarray  # (M,) int32 (== app id; UR uses its own id)
+    size: jnp.ndarray  # (M,) f32
+    bytes_rem: jnp.ndarray  # (M,) f32
+    inject_t: jnp.ndarray
+    min_arrive: jnp.ndarray
+    routes: jnp.ndarray  # (M, 10) int32
+    free_stack: jnp.ndarray  # (M,) int32
+    free_top: jnp.ndarray  # scalar int32 (number of free slots)
+    dropped: jnp.ndarray  # scalar int32 (allocation failures; must stay 0)
+
+
+class Metrics(NamedTuple):
+    lat_hist: jnp.ndarray  # (n_apps, BINS) int32
+    lat_sum: jnp.ndarray  # (n_apps,) f32
+    lat_min: jnp.ndarray
+    lat_max: jnp.ndarray
+    lat_cnt: jnp.ndarray
+    link_bytes: jnp.ndarray  # (L+1,) f32 cumulative per link
+    router_win: jnp.ndarray  # (n_apps, R) f32 current window (recv bytes)
+    router_wins: jnp.ndarray  # (W, n_apps, R) f32 snapshots
+    win_idx: jnp.ndarray
+    peak_inject: jnp.ndarray  # f32 max bytes injected in one tick
+
+
+class SimState(NamedTuple):
+    t: jnp.ndarray  # scalar f32 us
+    vms: Tuple[VMState, ...]
+    ur: Optional[URState]
+    pool: PoolState
+    metrics: Metrics
+    rng: jnp.ndarray  # scalar uint32 counter
+
+
+@dataclass
+class JobSpec:
+    name: str
+    skeleton: SkeletonProgram
+    rank2node: np.ndarray  # (P,) node ids
+
+
+@dataclass
+class URSpec:
+    name: str
+    rank2node: np.ndarray
+    size_bytes: float = 10 * 1024
+    interval_us: float = 1000.0
+
+
+def _n_rounds(opcode, a0, a1, P: int):
+    """Rounds for each op (vectorized over ranks)."""
+    logp = max(1, math.ceil(math.log2(max(P, 2))))
+    ring = opcode == OP["ALLREDUCE"]
+    big = a0 >= 4096
+    r = jnp.where(
+        ring, jnp.where(big, 2 * (P - 1), logp),
+        jnp.where(
+            (opcode == OP["BCAST"]) | (opcode == OP["BARRIER"]), logp,
+            jnp.where(opcode == OP["SCATTER"], (P - 2) // MAXE + 1, 1),
+        ),
+    )
+    return r
+
+
+def _hash(x):
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
+    return x ^ (x >> 16)
+
+
+def build_engine(
+    topo: Dragonfly,
+    jobs: Sequence[JobSpec],
+    *,
+    routing: str = "ADP",
+    ur: Optional[URSpec] = None,
+    net: Optional[NetConfig] = None,
+    pool_size: Optional[int] = None,
+    horizon_us: float = 500_000.0,
+    link_down: Optional[np.ndarray] = None,  # (L,) bool — failed links
+    rank_slowdown: Optional[Sequence[np.ndarray]] = None,  # per job (P,) f32
+):
+    """Returns (init_state, run_fn) where run_fn: state -> final state (jit).
+
+    Fault/straggler injection (DESIGN.md §4): ``link_down`` links carry no
+    traffic (adaptive routing steers around them via the demand estimate;
+    minimal routing stalls on them — the realistic asymmetry);
+    ``rank_slowdown`` multiplies each rank's COMPUTE durations (straggler
+    model — collectives make the whole job wait).
+    """
+    net = net or NetConfig()
+    T = topo_arrays(topo)
+    L = topo.n_links
+    M = pool_size or net.pool_size
+    n_apps = len(jobs) + (1 if ur else 0)
+    adaptive = routing.upper() in ("ADP", "ADAPTIVE")
+    dt = net.tick_us
+    BINS = net.latency_hist_bins
+    W = net.max_windows
+    R = topo.n_routers
+
+    job_ops = [jnp.asarray(j.skeleton.ops, jnp.int32) for j in jobs]
+    job_grid = [jnp.asarray(j.skeleton.grid, jnp.int32) for j in jobs]
+    job_r2n = [jnp.asarray(j.rank2node, jnp.int32) for j in jobs]
+    job_P = [j.skeleton.n_ranks for j in jobs]
+    ur_r2n = jnp.asarray(ur.rank2node, jnp.int32) if ur else None
+    link_dstr = jnp.concatenate(
+        [T.link_dst_router, jnp.zeros((1,), jnp.int32)]
+    )  # dummy row
+    link_ok = jnp.asarray(
+        ~link_down if link_down is not None else np.ones(L, bool)
+    )
+    job_slow = [
+        jnp.asarray(rank_slowdown[ji], jnp.float32)
+        if rank_slowdown is not None and rank_slowdown[ji] is not None
+        else jnp.ones((job_P[ji],), jnp.float32)
+        for ji in range(len(jobs))
+    ]
+
+    # ------------------------------------------------------------------
+    # per-job emission: compute this (op, round)'s messages for each rank
+    # ------------------------------------------------------------------
+    def vm_emit(ji: int, vm: VMState, t):
+        ops, grid, P = job_ops[ji], job_grid[ji], job_P[ji]
+        ranks = jnp.arange(P, dtype=jnp.int32)
+        row = ops[vm.pc]  # (P, 4)
+        opc, a0, a1, a2 = row[:, 0], row[:, 1], row[:, 2], row[:, 3]
+        g = grid[vm.pc]  # (P, 4)
+        enter = (~vm.emitted) & (~vm.done)
+
+        dst = jnp.full((P, MAXE), -1, jnp.int32)
+        size = jnp.zeros((P,), jnp.float32)
+        send_inc = jnp.zeros((P,), jnp.int32)
+        recv_inc = jnp.zeros((P,), jnp.int32)
+        busy = vm.busy_until
+
+        # COMPUTE (straggler factor scales the delay per rank)
+        is_comp = opc == OP["COMPUTE"]
+        busy = jnp.where(
+            enter & is_comp, t + a0.astype(jnp.float32) * job_slow[ji], busy
+        )
+
+        # P2P / IP2P
+        is_p2p = (opc == OP["P2P"]) | (opc == OP["IP2P"])
+        send_p2p = is_p2p & (ranks == a0)
+        dst = dst.at[:, 0].set(jnp.where(send_p2p, a1, dst[:, 0]))
+        size = jnp.where(send_p2p, a2.astype(jnp.float32), size)
+        send_inc = send_inc + send_p2p.astype(jnp.int32)
+        recv_inc = recv_inc + (is_p2p & (ranks == a1)).astype(jnp.int32)
+
+        # GATHER (root a0, size a1)
+        is_gather = opc == OP["GATHER"]
+        send_g = is_gather & (ranks != a0)
+        dst = dst.at[:, 0].set(jnp.where(send_g, a0, dst[:, 0]))
+        size = jnp.where(send_g, a1.astype(jnp.float32), size)
+        send_inc = send_inc + send_g.astype(jnp.int32)
+        recv_inc = recv_inc + jnp.where(is_gather & (ranks == a0), P - 1, 0)
+
+        # SCATTER (root a0, size a1), MAXE targets per round
+        is_scat = opc == OP["SCATTER"]
+        base = vm.rnd * MAXE
+        tgt = base[:, None] + jnp.arange(MAXE, dtype=jnp.int32)[None, :]
+        tgt = tgt + (tgt >= a0[:, None])  # skip root
+        valid_s = is_scat[:, None] & (ranks == a0)[:, None] & (tgt < P)
+        dst = jnp.where(valid_s, tgt, dst)
+        size = jnp.where(is_scat & (ranks == a0), a1.astype(jnp.float32), size)
+        send_inc = send_inc + jnp.where(
+            is_scat & (ranks == a0), valid_s.sum(1).astype(jnp.int32), 0
+        )
+        recv_first = is_scat & (ranks != a0) & (vm.rnd == 0)
+        recv_inc = recv_inc + recv_first.astype(jnp.int32)
+
+        # XCHG (size a0, ndims a1, dims g): one round, 2*ndims neighbors
+        is_x = opc == OP["XCHG"]
+        dims = jnp.maximum(g, 1)  # (P,4)
+        stride = jnp.concatenate(
+            [jnp.ones((P, 1), jnp.int32), jnp.cumprod(dims[:, :3], axis=1)], axis=1
+        )
+        coord = (ranks[:, None] // stride) % dims  # (P,4)
+        for d in range(4):
+            for s, dirn in ((2 * d, 1), (2 * d + 1, -1)):
+                if s >= MAXE:
+                    continue
+                nb_c = (coord[:, d] + dirn) % dims[:, d]
+                nb = ranks + (nb_c - coord[:, d]) * stride[:, d]
+                use = is_x & (d < a1)
+                dst = dst.at[:, s].set(jnp.where(use, nb, dst[:, s]))
+        size = jnp.where(is_x, a0.astype(jnp.float32), size)
+        nmsg = 2 * jnp.minimum(a1, 4)
+        send_inc = send_inc + jnp.where(is_x, nmsg, 0)
+        recv_inc = recv_inc + jnp.where(is_x, nmsg, 0)
+
+        # ALLREDUCE: ring (>=4KiB) 2(P-1) rounds of size/P; else RD log2
+        is_ar = opc == OP["ALLREDUCE"]
+        is_bar = opc == OP["BARRIER"]
+        big = a0 >= 4096
+        ring = is_ar & big
+        nb_ring = (ranks + 1) % P
+        sz_ring = jnp.ceil(a0.astype(jnp.float32) / P)
+        dst = dst.at[:, 0].set(jnp.where(ring, nb_ring, dst[:, 0]))
+        size = jnp.where(ring, sz_ring, size)
+        send_inc = send_inc + ring.astype(jnp.int32)
+        recv_inc = recv_inc + ring.astype(jnp.int32)
+
+        rd = (is_ar & ~big) | is_bar
+        peer = ranks ^ (1 << jnp.minimum(vm.rnd, 30))
+        rd_ok = rd & (peer < P)
+        dst = dst.at[:, 0].set(jnp.where(rd_ok, peer, dst[:, 0]))
+        size = jnp.where(rd_ok, jnp.maximum(a0.astype(jnp.float32), 8.0), size)
+        send_inc = send_inc + rd_ok.astype(jnp.int32)
+        recv_inc = recv_inc + rd_ok.astype(jnp.int32)
+
+        # BCAST (root a0, size a1): binomial over relative ranks
+        is_bc = opc == OP["BCAST"]
+        rel = (ranks - a0) % P
+        pow2 = 1 << jnp.minimum(vm.rnd, 30)
+        bc_send = is_bc & (rel < pow2) & (rel + pow2 < P)
+        bc_dst = (rel + pow2 + a0) % P
+        dst = dst.at[:, 0].set(jnp.where(bc_send, bc_dst, dst[:, 0]))
+        size = jnp.where(bc_send, a1.astype(jnp.float32), size)
+        send_inc = send_inc + bc_send.astype(jnp.int32)
+        bc_recv = is_bc & (rel >= pow2) & (rel < 2 * pow2)
+        recv_inc = recv_inc + bc_recv.astype(jnp.int32)
+
+        # apply entry
+        dst = jnp.where(enter[:, None], dst, -1)
+        vm = vm._replace(
+            emitted=vm.emitted | enter,
+            busy_until=busy,
+            send_need=vm.send_need + jnp.where(enter, send_inc, 0),
+            recv_need=vm.recv_need + jnp.where(enter, recv_inc, 0),
+        )
+        return vm, dst, size
+
+    # ------------------------------------------------------------------
+    # pool allocation
+    # ------------------------------------------------------------------
+    def inject(pool: PoolState, metrics: Metrics, rng, t, src_ranks, dst_ranks,
+               dsts_node, srcs_node, sizes, app_id, link_demand):
+        """Allocate + route a flat batch of candidate messages (mask: dst>=0)."""
+        mask = dst_ranks >= 0
+        k = jnp.cumsum(mask.astype(jnp.int32)) - 1  # emission order
+        n = mask.sum()
+        can = (k < pool.free_top) & mask
+        slot = pool.free_stack[jnp.maximum(pool.free_top - 1 - k, 0)]
+        slot = jnp.where(can, slot, M)  # M = dummy row
+
+        rand = _hash(rng + jnp.arange(mask.shape[0], dtype=jnp.uint32))
+        routes, hops = compute_routes(
+            T, srcs_node, dsts_node, rand.astype(jnp.int32) & 0x7FFFFFFF,
+            link_demand, adaptive,
+        )
+
+        def sc(arr, val):
+            return arr.at[slot].set(jnp.where(can, val, arr[jnp.minimum(slot, M - 1)]), mode="drop")
+
+        active = pool.active.at[slot].set(True, mode="drop")
+        src_rank = pool.src_rank.at[slot].set(src_ranks, mode="drop")
+        dst_rank = pool.dst_rank.at[slot].set(dst_ranks, mode="drop")
+        job = pool.job.at[slot].set(app_id, mode="drop")
+        size_a = pool.size.at[slot].set(sizes, mode="drop")
+        rem = pool.bytes_rem.at[slot].set(sizes, mode="drop")
+        inj = pool.inject_t.at[slot].set(t, mode="drop")
+        mina = pool.min_arrive.at[slot].set(
+            t + hops.astype(jnp.float32) * net.hop_latency_us, mode="drop"
+        )
+        rts = pool.routes.at[slot].set(routes, mode="drop")
+
+        n_alloc = jnp.minimum(n, pool.free_top)
+        pool = pool._replace(
+            active=active, src_rank=src_rank, dst_rank=dst_rank, job=job,
+            size=size_a, bytes_rem=rem, inject_t=inj, min_arrive=mina,
+            routes=rts, free_top=pool.free_top - n_alloc,
+            dropped=pool.dropped + (n - n_alloc),
+        )
+        inj_bytes = jnp.sum(jnp.where(can, sizes, 0.0))
+        metrics = metrics._replace(
+            peak_inject=jnp.maximum(metrics.peak_inject, inj_bytes)
+        )
+        return pool, metrics, rng + jnp.uint32(mask.shape[0])
+
+    # ------------------------------------------------------------------
+    # the tick
+    # ------------------------------------------------------------------
+    LOGP = {ji: max(1, math.ceil(math.log2(max(P, 2)))) for ji, P in enumerate(job_P)}
+
+    def tick(state: SimState) -> SimState:
+        t = state.t
+        pool, metrics, rng = state.pool, state.metrics, state.rng
+
+        # --- current link demand (outstanding bytes per link) ---
+        valid = (pool.routes >= 0) & pool.active[:, None]
+        lidx = jnp.where(valid, pool.routes, L)  # dummy L
+        demand = jnp.zeros((L + 1,), jnp.float32).at[lidx].add(
+            jnp.broadcast_to(pool.bytes_rem[:, None], lidx.shape) * valid
+        )
+        # failed links: infinite demand steers adaptive routes around them
+        demand = demand.at[:L].add(jnp.where(link_ok, 0.0, 1e18))
+
+        # --- 1. VM entry + emission + injection ---
+        vms = list(state.vms)
+        for ji in range(len(jobs)):
+            vm = vms[ji]
+            vm, dst, sizes = vm_emit(ji, vm, t)
+            any_emit = jnp.any(dst >= 0)
+
+            def do_inject(args):
+                pool, metrics, rng = args
+                P = job_P[ji]
+                flat_dst = dst.reshape(-1)
+                src_ranks = jnp.repeat(jnp.arange(P, dtype=jnp.int32), MAXE)
+                sizes_f = jnp.repeat(sizes, MAXE)
+                srcs_node = job_r2n[ji][src_ranks]
+                dsts_node = job_r2n[ji][jnp.maximum(flat_dst, 0)]
+                return inject(pool, metrics, rng, t, src_ranks, flat_dst,
+                              dsts_node, srcs_node, sizes_f, ji, demand)
+
+            pool, metrics, rng = jax.lax.cond(
+                any_emit, do_inject, lambda a: a, (pool, metrics, rng)
+            )
+            vms[ji] = vm
+
+        # UR background traffic
+        ur_state = state.ur
+        if ur_state is not None:
+            fire = t >= ur_state.next_t
+            Pu = ur_r2n.shape[0]
+            rnd = _hash(
+                ur_state.count.astype(jnp.uint32) * jnp.uint32(9781)
+                + jnp.arange(Pu, dtype=jnp.uint32) + rng
+            )
+            dstn = (rnd % jnp.uint32(T.n_nodes)).astype(jnp.int32)
+
+            def do_ur(args):
+                pool, metrics, rng = args
+                return inject(
+                    pool, metrics, rng, t,
+                    jnp.arange(Pu, dtype=jnp.int32),
+                    jnp.where(fire, 0, -1),  # dst_rank 0 marker (not tracked)
+                    dstn, ur_r2n,
+                    jnp.full((Pu,), float(ur.size_bytes), jnp.float32),
+                    len(jobs), demand,
+                )
+
+            pool, metrics, rng = jax.lax.cond(
+                jnp.any(fire), do_ur, lambda a: a, (pool, metrics, rng)
+            )
+            ur_state = URState(
+                next_t=jnp.where(fire, ur_state.next_t + ur.interval_us, ur_state.next_t),
+                count=ur_state.count + fire.astype(jnp.int32),
+            )
+
+        # --- 2. network drain (fluid fair share) ---
+        valid = (pool.routes >= 0) & pool.active[:, None]
+        lidx = jnp.where(valid, pool.routes, L)
+        n_l = jnp.zeros((L + 1,), jnp.float32).at[lidx].add(valid.astype(jnp.float32))
+        bw = jnp.concatenate(
+            [jnp.where(link_ok, T.link_bw, 0.0), jnp.ones((1,), jnp.float32)]
+        )
+        share = bw / jnp.maximum(n_l, 1.0) * 1e-6  # bytes per us
+        per_link_rate = jnp.where(valid, share[lidx], jnp.inf)
+        rate = jnp.min(per_link_rate, axis=1)
+        rate = jnp.where(pool.active & jnp.isfinite(rate), rate, 0.0)
+        drain = jnp.minimum(rate * dt, pool.bytes_rem)
+        new_rem = pool.bytes_rem - drain
+
+        # per-link traffic accounting (paper router counters + Table VI)
+        drain_b = jnp.where(valid, drain[:, None], 0.0)
+        link_bytes = metrics.link_bytes.at[lidx].add(drain_b)
+        appidx = jnp.broadcast_to(pool.job[:, None], lidx.shape)
+        rtr = link_dstr[lidx]
+        router_win = metrics.router_win.at[appidx, rtr].add(drain_b)
+
+        delivered = pool.active & (new_rem <= 1e-6) & (t >= pool.min_arrive)
+
+        # --- 3. latency metrics ---
+        lat = t + dt - pool.inject_t  # delivered at end of tick
+        ratio = math.log(net.latency_hist_ratio)
+        bins = jnp.clip(
+            (jnp.log(jnp.maximum(lat / net.latency_hist_lo_us, 1e-6)) / ratio),
+            0, BINS - 1,
+        ).astype(jnp.int32)
+        app_of = pool.job
+        lat_hist = metrics.lat_hist.at[
+            jnp.where(delivered, app_of, 0), jnp.where(delivered, bins, 0)
+        ].add(delivered.astype(jnp.int32))
+        lat_sum = metrics.lat_sum.at[app_of].add(jnp.where(delivered, lat, 0.0))
+        lat_cnt = metrics.lat_cnt.at[app_of].add(delivered.astype(jnp.int32))
+        lat_min = metrics.lat_min.at[app_of].min(jnp.where(delivered, lat, jnp.inf))
+        lat_max = metrics.lat_max.at[app_of].max(jnp.where(delivered, lat, -jnp.inf))
+
+        # --- 4. delivery notifications -> VMs ---
+        for ji in range(len(jobs)):
+            vm = vms[ji]
+            is_job = delivered & (pool.job == ji)
+            sd = vm.send_done.at[jnp.where(is_job, pool.src_rank, 0)].add(
+                is_job.astype(jnp.int32)
+            )
+            rd = vm.recv_done.at[jnp.where(is_job, pool.dst_rank, 0)].add(
+                is_job.astype(jnp.int32)
+            )
+            vms[ji] = vm._replace(send_done=sd, recv_done=rd)
+
+        # free delivered slots
+        freed = delivered
+        kf = jnp.cumsum(freed.astype(jnp.int32)) - 1
+        pos = pool.free_top + kf
+        free_stack = pool.free_stack.at[jnp.where(freed, pos, M)].set(
+            jnp.arange(M, dtype=jnp.int32), mode="drop"
+        )
+        pool = pool._replace(
+            active=pool.active & ~delivered,
+            bytes_rem=new_rem,
+            free_stack=free_stack,
+            free_top=pool.free_top + freed.sum(),
+        )
+
+        # --- 5. VM completion / advance ---
+        for ji in range(len(jobs)):
+            vm = vms[ji]
+            ops = job_ops[ji]
+            P = job_P[ji]
+            row = ops[vm.pc]
+            opc, a0, a1 = row[:, 0], row[:, 1], row[:, 2]
+            nr = _n_rounds(opc, a0, a1, P)
+            ready = vm.emitted & ~vm.done & (t + dt >= vm.busy_until)
+            sat = (vm.send_done >= vm.send_need) & (vm.recv_done >= vm.recv_need)
+            # IP2P / LOG / RESET never block; COMPUTE blocks on busy only
+            nonblock = (
+                (opc == OP["IP2P"]) | (opc == OP["LOG"]) | (opc == OP["RESET"])
+                | (opc == OP["COMPUTE"])
+            )
+            complete = ready & (sat | nonblock)
+            is_comm = ~(
+                (opc == OP["COMPUTE"]) | (opc == OP["LOG"]) | (opc == OP["RESET"])
+                | (opc == OP["END"])
+            )
+            blocked = vm.emitted & ~vm.done & ~complete & (t + dt >= vm.busy_until) & is_comm
+            comm_time = vm.comm_time + jnp.where(blocked, dt, 0.0)
+
+            rnd2 = jnp.where(complete, vm.rnd + 1, vm.rnd)
+            advance = complete & (rnd2 >= nr)
+            pc2 = jnp.where(advance, vm.pc + 1, vm.pc)
+            rnd2 = jnp.where(advance, 0, rnd2)
+            emitted2 = vm.emitted & ~complete
+            opc_next = ops[pc2][:, 0]
+            done2 = vm.done | (opc_next == OP["END"])
+            vms[ji] = vm._replace(
+                pc=pc2, rnd=rnd2, emitted=emitted2, done=done2, comm_time=comm_time
+            )
+
+        # --- 6. window rotation ---
+        win_t = jnp.floor((t + dt) / net.window_us).astype(jnp.int32)
+        rotate = win_t > metrics.win_idx
+
+        def do_rotate(m: Metrics):
+            wi = jnp.minimum(m.win_idx, W - 1)
+            return m._replace(
+                router_wins=m.router_wins.at[wi].set(m.router_win),
+                router_win=jnp.zeros_like(m.router_win),
+                win_idx=m.win_idx + 1,
+            )
+
+        metrics = metrics._replace(
+            lat_hist=lat_hist, lat_sum=lat_sum, lat_cnt=lat_cnt,
+            lat_min=lat_min, lat_max=lat_max,
+            link_bytes=link_bytes, router_win=router_win,
+        )
+        metrics = jax.lax.cond(rotate, do_rotate, lambda m: m, metrics)
+
+        # --- 7. event-driven time skip (PDES hybrid): when the network is
+        # empty and every live rank is inside a COMPUTE delay, jump straight
+        # to the earliest wake-up (clamped to the next metrics window).
+        any_active = jnp.any(pool.active)
+        can_act = jnp.bool_(False)
+        min_busy = jnp.float32(jnp.inf)
+        for vm in vms:
+            live = ~vm.done
+            can_act = can_act | jnp.any(live & ~vm.emitted)
+            waiting_busy = live & vm.emitted & (vm.busy_until > t + dt)
+            can_act = can_act | jnp.any(live & vm.emitted & (vm.busy_until <= t + dt))
+            min_busy = jnp.minimum(
+                min_busy, jnp.min(jnp.where(waiting_busy, vm.busy_until, jnp.inf))
+            )
+        if ur_state is not None:
+            min_busy = jnp.minimum(min_busy, jnp.min(ur_state.next_t))
+        next_window = (metrics.win_idx.astype(jnp.float32) + 1.0) * net.window_us
+        skip_to = jnp.minimum(min_busy, next_window)
+        idle = ~any_active & ~can_act & jnp.isfinite(skip_to)
+        t_new = jnp.where(idle, jnp.maximum(t + dt, skip_to), t + dt)
+
+        return SimState(
+            t=t_new, vms=tuple(vms), ur=ur_state, pool=pool,
+            metrics=metrics, rng=rng + jnp.uint32(1),
+        )
+
+    # ------------------------------------------------------------------
+    def init_state() -> SimState:
+        vms = []
+        for ji, j in enumerate(jobs):
+            P = job_P[ji]
+            z = lambda dt_=jnp.int32: jnp.zeros((P,), dt_)
+            vms.append(VMState(
+                pc=z(), rnd=z(), emitted=jnp.zeros((P,), bool),
+                busy_until=jnp.zeros((P,), jnp.float32),
+                send_need=z(), send_done=z(), recv_need=z(), recv_done=z(),
+                comm_time=jnp.zeros((P,), jnp.float32),
+                done=jnp.zeros((P,), bool),
+            ))
+        ur_state = None
+        if ur is not None:
+            Pu = ur.rank2node.shape[0]
+            ur_state = URState(
+                next_t=jnp.zeros((Pu,), jnp.float32),
+                count=jnp.zeros((Pu,), jnp.int32),
+            )
+        pool = PoolState(
+            active=jnp.zeros((M,), bool),
+            src_rank=jnp.zeros((M,), jnp.int32),
+            dst_rank=jnp.zeros((M,), jnp.int32),
+            job=jnp.zeros((M,), jnp.int32),
+            size=jnp.zeros((M,), jnp.float32),
+            bytes_rem=jnp.zeros((M,), jnp.float32),
+            inject_t=jnp.zeros((M,), jnp.float32),
+            min_arrive=jnp.zeros((M,), jnp.float32),
+            routes=jnp.full((M, net.max_route_links), -1, jnp.int32),
+            free_stack=jnp.arange(M, dtype=jnp.int32),
+            free_top=jnp.int32(M),
+            dropped=jnp.int32(0),
+        )
+        metrics = Metrics(
+            lat_hist=jnp.zeros((n_apps, BINS), jnp.int32),
+            lat_sum=jnp.zeros((n_apps,), jnp.float32),
+            lat_min=jnp.full((n_apps,), jnp.inf, jnp.float32),
+            lat_max=jnp.full((n_apps,), -jnp.inf, jnp.float32),
+            lat_cnt=jnp.zeros((n_apps,), jnp.int32),
+            link_bytes=jnp.zeros((L + 1,), jnp.float32),
+            router_win=jnp.zeros((n_apps, R), jnp.float32),
+            router_wins=jnp.zeros((W, n_apps, R), jnp.float32),
+            win_idx=jnp.int32(0),
+            peak_inject=jnp.float32(0.0),
+        )
+        return SimState(
+            t=jnp.float32(0.0), vms=tuple(vms), ur=ur_state, pool=pool,
+            metrics=metrics, rng=jnp.uint32(1),
+        )
+
+    def all_done(state: SimState):
+        d = jnp.bool_(True)
+        for vm in state.vms:
+            d = d & jnp.all(vm.done)
+        # also require in-flight messages to drain
+        return d & ~jnp.any(state.pool.active)
+
+    @jax.jit
+    def run(state: SimState) -> SimState:
+        return jax.lax.while_loop(
+            lambda s: (s.t < horizon_us) & ~all_done(s), tick, state
+        )
+
+    return init_state, run, tick

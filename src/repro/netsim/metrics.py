@@ -1,0 +1,90 @@
+"""Post-processing of SimState metrics into the paper's tables/figures."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+from repro.netsim.config import NetConfig
+from repro.netsim.topology import Dragonfly, KIND_GLOBAL, KIND_LOCAL
+
+
+def latency_summary(state, app_names: Sequence[str], net: NetConfig) -> Dict[str, Any]:
+    """Per-app message latency stats (Fig. 7): min/avg/max + quartiles from
+    the geometric histogram."""
+    m = state.metrics
+    out = {}
+    edges = net.latency_hist_lo_us * (
+        net.latency_hist_ratio ** np.arange(net.latency_hist_bins + 1)
+    )
+    mids = np.sqrt(edges[:-1] * edges[1:])
+    for i, name in enumerate(app_names):
+        cnt = int(m.lat_cnt[i])
+        hist = np.asarray(m.lat_hist[i])
+        if cnt == 0:
+            out[name] = dict(count=0)
+            continue
+        cum = np.cumsum(hist)
+        def q(p):
+            j = int(np.searchsorted(cum, p * cnt))
+            return float(mids[min(j, len(mids) - 1)])
+        out[name] = dict(
+            count=cnt,
+            avg_us=float(m.lat_sum[i]) / cnt,
+            min_us=float(m.lat_min[i]),
+            max_us=float(m.lat_max[i]),
+            p25_us=q(0.25), p50_us=q(0.50), p75_us=q(0.75),
+        )
+    return out
+
+
+def comm_time_summary(state, app_names: Sequence[str]) -> Dict[str, Any]:
+    """Per-app communication time (Fig. 9): max/avg over ranks, in ms."""
+    out = {}
+    for i, vm in enumerate(state.vms):
+        ct = np.asarray(vm.comm_time) / 1000.0
+        out[app_names[i]] = dict(
+            max_ms=float(ct.max()), avg_ms=float(ct.mean()), min_ms=float(ct.min())
+        )
+    return out
+
+
+def link_load_summary(state, topo: Dragonfly) -> Dict[str, Any]:
+    """Table VI: total + per-link load on local vs global links."""
+    lb = np.asarray(state.metrics.link_bytes)[: topo.n_links]
+    loc = topo.link_kind == KIND_LOCAL
+    glo = topo.link_kind == KIND_GLOBAL
+    n_loc, n_glo = int(loc.sum()), int(glo.sum())
+    return dict(
+        local_total_bytes=float(lb[loc].sum()),
+        global_total_bytes=float(lb[glo].sum()),
+        local_per_link_bytes=float(lb[loc].sum() / max(n_loc, 1)),
+        global_per_link_bytes=float(lb[glo].sum() / max(n_glo, 1)),
+        n_local_links=n_loc,
+        n_global_links=n_glo,
+        frac_global=float(lb[glo].sum() / max(lb[loc].sum() + lb[glo].sum(), 1)),
+    )
+
+
+def router_traffic_windows(state, app_names: Sequence[str], router_set: np.ndarray):
+    """Fig. 8: per-window bytes received by `router_set` routers, per app."""
+    wins = np.asarray(state.metrics.router_wins)  # (W, n_apps, R)
+    k = int(state.metrics.win_idx)
+    wins = wins[: max(k, 1)]
+    per_app = wins[:, :, router_set].sum(axis=2)  # (W, n_apps)
+    return {name: per_app[:, i] for i, name in enumerate(app_names)}
+
+
+def run_report(state, app_names, topo, net, sim_wall_s: float = 0.0) -> Dict[str, Any]:
+    return dict(
+        virtual_time_ms=float(state.t) / 1000.0,
+        dropped=int(state.pool.dropped),
+        peak_inject_bytes_per_tick=float(state.metrics.peak_inject),
+        peak_inject_TiBps=float(state.metrics.peak_inject)
+        / (net.tick_us * 1e-6) / 2**40,
+        latency=latency_summary(state, app_names, net),
+        comm_time=comm_time_summary(state, app_names),
+        link_load=link_load_summary(state, topo),
+        sim_wall_s=sim_wall_s,
+    )

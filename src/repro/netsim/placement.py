@@ -1,0 +1,47 @@
+"""Job placement policies (paper §IV-C): RN / RR / RG.
+
+* Random Nodes (RN): nodes drawn randomly from the whole system — nodes on
+  one router tend to serve different jobs.
+* Random Routers (RR): a random selection of routers; the nodes of each
+  chosen router are assigned consecutively.
+* Random Groups (RG): a random selection of groups; nodes within the chosen
+  groups assigned consecutively.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.netsim.topology import Dragonfly
+
+
+def place_jobs(
+    topo: Dragonfly, job_sizes: Sequence[int], policy: str, seed: int = 0
+) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    total = sum(job_sizes)
+    if total > topo.n_nodes:
+        raise ValueError(f"jobs need {total} nodes, system has {topo.n_nodes}")
+    p = topo.nodes_per_router
+    a = topo.routers_per_group
+
+    if policy == "RN":
+        order = rng.permutation(topo.n_nodes)
+    elif policy == "RR":
+        routers = rng.permutation(topo.n_routers)
+        order = (routers[:, None] * p + np.arange(p)[None, :]).reshape(-1)
+    elif policy == "RG":
+        groups = rng.permutation(topo.n_groups)
+        nodes_per_group = a * p
+        order = (
+            groups[:, None] * nodes_per_group + np.arange(nodes_per_group)[None, :]
+        ).reshape(-1)
+    else:
+        raise ValueError(f"unknown placement policy {policy!r}")
+
+    out, off = [], 0
+    for s in job_sizes:
+        out.append(np.asarray(order[off : off + s], np.int64))
+        off += s
+    return out

@@ -1,0 +1,173 @@
+"""Vectorized route computation: minimal (MIN) and adaptive (ADP, UGAL-style).
+
+Routes are fixed-width link-id sequences (MAX_LINKS, -1 padded), computed at
+message injection — MIN picks a random minimal global channel (as CODES
+does); ADP compares live link demand (bytes outstanding) on the minimal
+path against a Valiant path through a random intermediate group and takes
+the less congested one (non-minimal biased by 2×, the classic UGAL rule).
+
+Slot layout (MAX_LINKS=10):
+  [term_in, l1a, l1b, g1, l2a, l2b, g2, l3a, l3b, term_out]
+(1D uses one local hop per leg; 2D up to two — row then column.)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.netsim.topology import Dragonfly
+
+
+class TopoArrays(NamedTuple):
+    variant_2d: bool
+    G: int
+    a: int  # routers per group
+    p: int  # nodes per router
+    cols: int
+    lpp: int
+    n_links: int
+    n_routers: int
+    n_nodes: int
+    local_link_id: jnp.ndarray  # (R, a)
+    global_gw: jnp.ndarray  # (G, G, lpp) router ids
+    global_link_id: jnp.ndarray  # (G, G, lpp)
+    link_dst_router: jnp.ndarray  # (L,)
+    link_bw: jnp.ndarray  # (L,) f32
+    link_kind: jnp.ndarray  # (L,)
+
+
+def topo_arrays(t: Dragonfly) -> TopoArrays:
+    return TopoArrays(
+        variant_2d=(t.variant == "2d"),
+        G=t.n_groups, a=t.routers_per_group, p=t.nodes_per_router,
+        cols=t.cols or t.routers_per_group, lpp=t.links_per_pair,
+        n_links=t.n_links, n_routers=t.n_routers, n_nodes=t.n_nodes,
+        local_link_id=jnp.asarray(t.local_link_id, jnp.int32),
+        global_gw=jnp.asarray(np.maximum(t.global_gw, 0), jnp.int32),
+        global_link_id=jnp.asarray(np.maximum(t.global_link_id, 0), jnp.int32),
+        link_dst_router=jnp.asarray(t.link_dst_router, jnp.int32),
+        link_bw=jnp.asarray(t.link_bw, jnp.float32),
+        link_kind=jnp.asarray(t.link_kind, jnp.int32),
+    )
+
+
+def _local_leg(T: TopoArrays, r_from, r_to):
+    """Intra-group leg r_from -> r_to: returns (link_a, link_b) (-1 unused)."""
+    l_to = r_to % T.a
+    direct = T.local_link_id[r_from, l_to]  # -1 if none (2D off-row/col)
+    same = r_from == r_to
+    if not T.variant_2d:
+        la = jnp.where(same, -1, direct)
+        return la, jnp.full_like(la, -1)
+    # 2D: corner router = (row of from, col of to)
+    row_f = (r_from % T.a) // T.cols
+    col_t = l_to % T.cols
+    corner_l = row_f * T.cols + col_t
+    corner_r = (r_from // T.a) * T.a + corner_l
+    la_direct = direct
+    la_corner = T.local_link_id[r_from, corner_l]
+    lb_corner = T.local_link_id[corner_r, l_to]
+    has_direct = direct >= 0
+    la = jnp.where(same, -1, jnp.where(has_direct, la_direct, la_corner))
+    lb = jnp.where(same | has_direct, -1, lb_corner)
+    return la, lb
+
+
+def _min_route(T: TopoArrays, src_node, dst_node, rand):
+    """Minimal route; returns (MAX=10,) link ids."""
+    r_s = src_node // T.p
+    r_d = dst_node // T.p
+    g_s = r_s // T.a
+    g_d = r_d // T.a
+    ti = src_node  # terminal-in link id
+    to = T.n_nodes + dst_node  # terminal-out link id
+
+    m = rand % T.lpp
+    gw_r = T.global_gw[g_s, g_d, m]
+    glink = T.global_link_id[g_s, g_d, m]
+    r_b = T.link_dst_router[glink]
+
+    l1a, l1b = _local_leg(T, r_s, gw_r)
+    l2a, l2b = _local_leg(T, r_b, r_d)
+    la, lb = _local_leg(T, r_s, r_d)  # same-group case
+
+    same_group = g_s == g_d
+    route = jnp.stack([
+        ti,
+        jnp.where(same_group, la, l1a),
+        jnp.where(same_group, lb, l1b),
+        jnp.where(same_group, -1, glink),
+        jnp.where(same_group, -1, l2a),
+        jnp.where(same_group, -1, l2b),
+        -1 * jnp.ones_like(ti), -1 * jnp.ones_like(ti), -1 * jnp.ones_like(ti),
+        to,
+    ])
+    return route
+
+
+def _val_route(T: TopoArrays, src_node, dst_node, g_i, rand):
+    """Valiant route via intermediate group g_i (assumed != g_s, g_d)."""
+    r_s = src_node // T.p
+    r_d = dst_node // T.p
+    g_s = r_s // T.a
+    g_d = r_d // T.a
+    ti = src_node
+    to = T.n_nodes + dst_node
+
+    m1 = rand % T.lpp
+    m2 = (rand // T.lpp) % T.lpp
+    gw1 = T.global_gw[g_s, g_i, m1]
+    gl1 = T.global_link_id[g_s, g_i, m1]
+    r_mid = T.link_dst_router[gl1]
+    gw2 = T.global_gw[g_i, g_d, m2]
+    gl2 = T.global_link_id[g_i, g_d, m2]
+    r_b = T.link_dst_router[gl2]
+
+    l1a, l1b = _local_leg(T, r_s, gw1)
+    l2a, l2b = _local_leg(T, r_mid, gw2)
+    l3a, l3b = _local_leg(T, r_b, r_d)
+    return jnp.stack([ti, l1a, l1b, gl1, l2a, l2b, gl2, l3a, l3b, to])
+
+
+def _route_cost(T: TopoArrays, route, link_demand):
+    """Congestion estimate: total outstanding bytes over the route's links,
+    normalized by bandwidth."""
+    valid = route >= 0
+    idx = jnp.maximum(route, 0)
+    d = link_demand[idx] / T.link_bw[idx]
+    return jnp.sum(jnp.where(valid, d, 0.0))
+
+
+def compute_routes(
+    T: TopoArrays,
+    src_nodes: jnp.ndarray,  # (n,)
+    dst_nodes: jnp.ndarray,
+    rand: jnp.ndarray,  # (n,) uint32-ish per-message randomness
+    link_demand: jnp.ndarray,  # (L,) f32 outstanding bytes per link
+    adaptive: bool,
+):
+    """Returns (routes (n, 10) int32, n_hops (n,))."""
+    min_r = jax.vmap(lambda s, d, r: _min_route(T, s, d, r))(src_nodes, dst_nodes, rand)
+    if adaptive:
+        g_s = (src_nodes // T.p) // T.a
+        g_d = (dst_nodes // T.p) // T.a
+        # random intermediate group != g_s, g_d
+        g_i = (rand // 7) % T.G
+        g_i = jnp.where(g_i == g_s, (g_i + 1) % T.G, g_i)
+        g_i = jnp.where(g_i == g_d, (g_i + 1) % T.G, g_i)
+        g_i = jnp.where(g_i == g_s, (g_i + 1) % T.G, g_i)  # re-check after bump
+        val_r = jax.vmap(lambda s, d, gi, r: _val_route(T, s, d, gi, r))(
+            src_nodes, dst_nodes, g_i, rand
+        )
+        cost_min = jax.vmap(lambda ro: _route_cost(T, ro, link_demand))(min_r)
+        cost_val = jax.vmap(lambda ro: _route_cost(T, ro, link_demand))(val_r)
+        inter_group = g_s != g_d
+        take_val = inter_group & (cost_min > 2.0 * cost_val + 1e-6)
+        routes = jnp.where(take_val[:, None], val_r, min_r)
+    else:
+        routes = min_r
+    n_hops = jnp.sum(routes >= 0, axis=1)
+    return routes.astype(jnp.int32), n_hops.astype(jnp.int32)

@@ -1,0 +1,108 @@
+"""AdamW with cosine schedule, global-norm clipping and dtype policy.
+
+Pure pytree implementation (no optax dependency): ``init`` / ``update`` are
+jittable; optimizer state inherits the parameter sharding (ZeRO: m/v shards
+exactly like the weights). For bf16-policy archs the moments are stored in
+bf16 (on TPU this pairs with stochastic rounding; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" for the >100B archs
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr_frac * cfg.lr + 0.5 * (1 - cfg.min_lr_frac) * cfg.lr * (
+        1 + jnp.cos(math.pi * prog)
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params, cfg: OptConfig) -> OptState:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def _global_norm(tree):
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+    return jnp.sqrt(sq)
+
+
+def _decayable(path) -> bool:
+    name = getattr(path[-1], "key", str(path[-1]))
+    return name not in {
+        "scale", "bias", "A_log", "D", "dt_bias", "norm_scale",
+        "bq", "bk", "bv", "conv_bx", "conv_bB", "conv_bC",
+    }
+
+
+def update(grads, state: OptState, params, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decayable(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v), params, grads, state.m, state.v
+    )
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

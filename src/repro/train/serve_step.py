@@ -1,0 +1,38 @@
+"""Serving steps for the inference-shaped cells.
+
+* ``prefill_32k``: full-sequence forward producing the first sampled token
+  (this is what a disaggregated-prefill worker runs).
+* ``decode_32k`` / ``long_500k``: one new token against a populated KV /
+  SSM cache (``decode_step``); the dry-run lowers exactly this function.
+
+Batched request handling: requests are rows of the batch; continuous
+batching slots map 1:1 onto rows (a freed row is refilled by the server
+loop in launch/serve.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MDL
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, frontend=None):
+        return MDL.prefill_forward(params, tokens, cfg, frontend_embeds=frontend)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state, token):
+        return MDL.decode_step(params, state, token, cfg)
+
+    return decode_step
+
+
+def make_decode_state(cfg: ModelConfig, batch: int, ctx: int, dtype=jnp.bfloat16):
+    return MDL.init_decode_state(cfg, batch, ctx, dtype)

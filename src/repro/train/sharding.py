@@ -1,0 +1,237 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per mesh.
+
+Logical layout (GSPMD, 2D "model ∥ fsdp" sharding):
+
+* `model` axis: attention heads / d_ff / vocab / d_inner (Megatron TP:
+  column-parallel in-projections, row-parallel out-projections).
+* `data` (+ `pod`) axes: batch; with ``fsdp=True`` also the complementary
+  dim of every weight matrix (ZeRO-3 style fully-sharded parameters and
+  optimizer state — XLA all-gathers weights per layer inside the scan).
+* MoE expert weights are TP-sharded on the expert-ff dim (works for any
+  expert count, incl. 8 or 40 experts on a 16-wide model axis).
+* long-context decode (batch=1): KV-cache *sequence* dim sharded on `data`
+  (distributed flash-decode; baseline lets GSPMD place the collectives).
+
+Activation constraints are routed through a small context so model code can
+stay mesh-agnostic (no-op when no mesh context is installed — unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# mesh context for activation constraints
+# ---------------------------------------------------------------------------
+
+_CTX: Dict[str, Any] = {
+    "batch_axes": None,
+    "model_axis": None,
+    "seq_parallel": False,
+    "model_size": 1,
+}
+
+
+@contextlib.contextmanager
+def mesh_axes(
+    batch_axes: Tuple[str, ...],
+    model_axis: str,
+    seq_parallel: bool = False,
+    model_size: int = 1,
+):
+    old = dict(_CTX)
+    _CTX.update(
+        batch_axes=batch_axes,
+        model_axis=model_axis,
+        seq_parallel=seq_parallel,
+        model_size=model_size,
+    )
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def constrain_acts(h):
+    """Constrain (B, S, d) activations per the active policy."""
+    if _CTX["batch_axes"] is None:
+        return h
+    if _CTX["seq_parallel"] and h.shape[1] % max(_CTX["model_size"], 1) == 0:
+        # Megatron sequence-parallel between blocks: shard S on `model`
+        spec = P(_CTX["batch_axes"], _CTX["model_axis"], None)
+    else:
+        spec = P(_CTX["batch_axes"], None, None)
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def constrain_attn_q(q):
+    """Shard (B, S, H, dh) attention activations.
+
+    Heads shard on `model` when the head count divides the axis; otherwise
+    fall back to context-parallel attention (shard the query sequence dim) —
+    GSPMD would otherwise shard d_head and all-reduce S×S score tensors.
+    """
+    if _CTX["batch_axes"] is None:
+        return q
+    b, m, ms = _CTX["batch_axes"], _CTX["model_axis"], _CTX["model_size"]
+    if ms <= 1:  # dp-only layout: the model axis carries batch
+        return jax.lax.with_sharding_constraint(
+            q, P(b, *([None] * (q.ndim - 1)))
+        )
+    if q.shape[2] % max(ms, 1) == 0:
+        spec = P(b, None, m, None)
+    elif q.shape[1] % max(ms, 1) == 0 and q.shape[1] > 1:
+        spec = P(b, m, None, None)
+    else:
+        spec = P(b, None, None, None)
+    return jax.lax.with_sharding_constraint(q, spec)
+
+
+def constrain_attn_out(o):
+    return constrain_attn_q(o)
+
+
+def constrain(x, dims: Tuple):
+    """Generic constraint: dims entries are 'batch' | 'model' | None.
+    Dims that don't divide the axis size are silently replicated."""
+    if _CTX["batch_axes"] is None:
+        return x
+    ms = max(_CTX["model_size"], 1)
+    spec = []
+    for i, d in enumerate(dims):
+        if d == "batch":
+            spec.append(_CTX["batch_axes"])
+        elif d == "model":
+            spec.append(
+                _CTX["model_axis"] if (ms > 1 and x.shape[i] % ms == 0) else None
+            )
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL = {"wq", "wk", "wv", "wz", "wx", "wdt", "w_gate", "w_up"}
+_ROW_PARALLEL = {"wo", "w_down", "out_proj"}
+_REPLICATED_LEAVES = {
+    "scale", "bias", "router", "conv_B", "conv_C", "conv_bB", "conv_bC",
+    "wB", "wC",
+}
+_MODEL_VECTOR = {"A_log", "D", "dt_bias", "norm_scale", "bq", "bk", "bv", "conv_bx"}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", str(last))
+
+
+def _path_str(path) -> str:
+    return "/".join(getattr(k, "key", str(k)) for k in path)
+
+
+def param_spec(path, leaf, *, model: str, fsdp, stacked: bool) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    stacked: whether the leaf has a leading n_periods/layers axis.
+    fsdp: axis name(s) for the fully-sharded dim, or None.
+    """
+    name = _leaf_name(path)
+    pstr = _path_str(path)
+    lead: Tuple = (None,) if stacked else ()
+    nd = leaf.ndim - (1 if stacked else 0)
+
+    if name in _REPLICATED_LEAVES:
+        if name in ("wB", "wC"):  # (d, ds): shard input dim on fsdp only
+            return P(*lead, fsdp, None)
+        return P(*lead, *([None] * nd))
+    if name in _MODEL_VECTOR:
+        return P(*lead, model)
+    if name == "embed":
+        return P(model, fsdp)
+    if name == "unembed":
+        return P(fsdp, model)
+    if name == "patch_proj":
+        return P(None, model)
+    if name == "conv_x":  # (K, di)
+        return P(*lead, None, model)
+    if name in _COL_PARALLEL:
+        if nd == 3:  # MoE stacked experts (E, d, ff): TP on ff
+            return P(*lead, None, fsdp, model)
+        return P(*lead, fsdp, model)
+    if name in _ROW_PARALLEL:
+        if nd == 3:  # MoE (E, ff, d)
+            return P(*lead, None, model, fsdp)
+        return P(*lead, model, fsdp)
+    # fallback: replicate
+    return P(*lead, *([None] * nd))
+
+
+def param_specs(params, *, model: str = "model", fsdp=None):
+    """Tree of PartitionSpecs mirroring the param tree."""
+
+    def spec_for(path, leaf):
+        pstr = _path_str(path)
+        stacked = pstr.startswith("layers/") or pstr.startswith("enc_layers/")
+        return param_spec(path, leaf, model=model, fsdp=fsdp, stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_axes) -> Dict[str, P]:
+    return {
+        "tokens": P(batch_axes, None),
+        "targets": P(batch_axes, None),
+        "frontend": P(batch_axes, None, None),
+    }
+
+
+def cache_specs(state, *, batch_axes, model: str, shard_seq: bool):
+    """Specs for a decode state pytree (leading n_periods axis on layers).
+
+    shard_seq: shard the KV-cache sequence dim on `data` (long_500k, batch=1).
+    """
+    seq_axes = batch_axes if not shard_seq else None
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        pstr = _path_str(path)
+        stacked = "/layers/" in f"/{pstr}/" or pstr.startswith("layers/")
+        lead = (None,) if stacked else ()
+        if name in ("k", "v"):  # (B, T, Hkv, dh)
+            if shard_seq:
+                return P(*lead, None, "data", None, None)
+            return P(*lead, batch_axes, None, None, None)
+        if name == "pos":
+            return P(*lead)
+        if name == "ssm":  # (B, nh, ds, hd)
+            b = None if shard_seq else batch_axes
+            return P(*lead, b, model, None, None)
+        if name.startswith("conv_"):  # (B, K-1, ch)
+            b = None if shard_seq else batch_axes
+            ch = model if name == "conv_x" else None
+            return P(*lead, b, None, ch)
+        if pstr.startswith("xkv"):  # (n_periods, B, Skv, Hkv, dh) tuples
+            return P(None, batch_axes, None, None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, state)
+
+
+def shardings_from_specs(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

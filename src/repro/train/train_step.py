@@ -1,0 +1,82 @@
+"""Train step: loss + grad (with microbatch accumulation) + AdamW update.
+
+Gradient accumulation is a ``lax.scan`` over microbatches with f32 grad
+accumulators — the standard memory lever that lets the 340B cells hold
+activations for one microbatch at a time while keeping the HLO small.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as MDL
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, tokens, targets, frontend_embeds=None):
+        total, (loss, aux) = MDL.lm_loss(
+            params, tokens, targets, cfg, frontend_embeds=frontend_embeds
+        )
+        return total, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    accum: int = 1,
+):
+    """Returns train_step(params, opt_state, tokens, targets[, frontend]).
+
+    tokens/targets: (global_batch, S); frontend: (global_batch, P, d) or None.
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, tokens, targets, frontend=None):
+        if accum == 1:
+            (total, metrics), grads = grad_fn(params, tokens, targets, frontend)
+        else:
+            def split(x):
+                return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+            mbs = (split(tokens), split(targets))
+            fes = split(frontend) if frontend is not None else None
+
+            def body(carry, inp):
+                g_acc, tot_acc = carry
+                if fes is not None:
+                    tok, tgt, fe = inp
+                else:
+                    (tok, tgt), fe = inp, None
+                (total, metrics), g = grad_fn(params, tok, tgt, fe)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32) / accum, g_acc, g
+                )
+                return (g_acc, tot_acc + total / accum), metrics
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            xs = mbs + (fes,) if fes is not None else mbs
+            (g_acc, total), ms = jax.lax.scan(body, (g0, 0.0), xs)
+            grads = jax.tree_util.tree_map(lambda g, p: g.astype(p.dtype), g_acc, params)
+            metrics = jax.tree_util.tree_map(jnp.mean, ms)
+
+        params, opt_state, opt_metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, **opt_metrics, total_loss=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    params = MDL.init_model(key, cfg)
+    opt_state = adamw.init(params, opt_cfg)
+    return params, opt_state

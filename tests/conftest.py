@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting xla_force_host_platform_device_count here —
+# tests must see the real single CPU device (the 512-device flag is owned
+# exclusively by repro.launch.dryrun).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

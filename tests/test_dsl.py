@@ -1,0 +1,102 @@
+"""Union DSL: lexer/parser/translator unit + property tests."""
+import numpy as np
+import pytest
+
+from repro.core import ast_nodes as A
+from repro.core import dsl
+from repro.core.translator import TranslateError, generate_c_stub, translate_source
+
+PING = '''
+# A ping-pong latency test
+Require language version "1.5".
+reps is "Number of repetitions" and comes from "--reps" or "-r" with default 1000.
+msgsize is "Message size" and comes from "--msgsize" or "-m" with default 1024.
+Assert that "the latency test requires at least two tasks" with num_tasks >= 2.
+For reps repetitions {
+  task 0 sends a msgsize byte message to task 1 then
+  task 1 sends a msgsize byte message to task 0
+}
+'''
+
+
+def test_parse_pingpong():
+    p = dsl.parse(PING, "pingpong")
+    assert p.version == "1.5"
+    assert [d.name for d in p.params] == ["reps", "msgsize"]
+    assert p.params[0].default == 1000
+    assert p.asserts[0].min_tasks == 2
+    assert len(p.body) == 1 and isinstance(p.body[0], A.For)
+    assert len(p.body[0].body) == 2
+
+
+def test_units_and_arith():
+    p = dsl.parse(
+        "all tasks allreduce a 28.15 MiB message", "x"
+    )
+    ar = p.body[0]
+    assert isinstance(ar, A.Allreduce)
+    assert abs(A.eval_expr(ar.size, {}) - 28.15 * 2**20) < 1
+
+
+def test_expression_env():
+    p = dsl.parse(
+        'n is "n" and comes from "--n" with default 4.\n'
+        "all tasks compute for n * 2 + 1 milliseconds",
+        "x",
+    )
+    c = p.body[0]
+    assert A.eval_expr(c.usecs, {"n": 4.0}) == 9000.0
+
+
+def test_translate_pingpong_skeleton():
+    sk = translate_source(PING, "pingpong_t", 2, {"reps": 3, "msgsize": 64})
+    # 3 reps x 2 sends + END
+    assert sk.n_ops == 7
+    assert (sk.ops[:-1, 3] == 64).all()
+    ec = sk.event_counts()
+    assert ec["MPI_Send"] == 6
+    assert ec["MPI_Init"] == 2
+    b = sk.bytes_per_rank()
+    assert b.tolist() == [192, 192]
+
+
+def test_assert_enforced():
+    with pytest.raises(TranslateError):
+        translate_source(PING, "pp_fail", 1)
+
+
+def test_unknown_param_rejected():
+    with pytest.raises(TranslateError):
+        translate_source(PING, "pp_bad", 2, {"nope": 1})
+
+
+def test_grid_mismatch_rejected():
+    src = "all tasks exchange a 64 byte message with their neighbors in a 4x4 grid"
+    with pytest.raises(TranslateError):
+        translate_source(src, "bad_grid", 15)
+
+
+def test_parse_error_unknown_verb():
+    with pytest.raises(dsl.ParseError):
+        dsl.parse("task 0 frobnicates a 10 byte message", "x")
+
+
+def test_c_stub_backend():
+    sk = translate_source(PING, "pp_stub", 2, {"reps": 1})
+    c = generate_c_stub(sk)
+    assert "union_skeleton_model" in c
+    assert "UNION_MPI_Send" in c
+    assert "conceptual_main" in c
+
+
+def test_multicast_and_gather():
+    src = (
+        "all tasks send a 25 byte message to task 0 then "
+        "task 0 multicasts a 25 byte message to all other tasks"
+    )
+    sk = translate_source(src, "negotiate", 8)
+    ec = sk.event_counts()
+    assert ec["MPI_Send"] == 7
+    assert ec["MPI_Bcast"] == 8
+    b = sk.bytes_per_rank()
+    assert b[0] == 25 and (b[1:] == 25).all()

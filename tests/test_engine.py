@@ -1,0 +1,116 @@
+"""Engine behaviour: conservation, latency sanity, paper-qualitative checks.
+
+Engine builds jit a while_loop once per job-set; tests share small configs.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.translator import translate_source
+from repro.core import workloads as W
+from repro.netsim import metrics as MET
+from repro.netsim.config import NetConfig
+from repro.netsim.engine import JobSpec, URSpec, build_engine
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import dragonfly_1d_small, dragonfly_2d_small
+
+NET = NetConfig(pool_size=512, tick_us=2.0)
+
+
+def _run(topo, jobs, routing="MIN", ur=None, horizon_us=200_000.0, pool=512,
+         tick_us=2.0):
+    net = NetConfig(pool_size=pool, tick_us=tick_us)
+    init, run, _ = build_engine(
+        topo, jobs, routing=routing, ur=ur, net=net, pool_size=pool,
+        horizon_us=horizon_us,
+    )
+    return jax.block_until_ready(run(init())), net
+
+
+@pytest.fixture(scope="module")
+def topo1d():
+    return dragonfly_1d_small()
+
+
+def test_pingpong_latency_floor(topo1d):
+    src = (
+        "For 4 repetitions {\n"
+        " task 0 sends a 1024 byte message to task 1 then\n"
+        " task 1 sends a 1024 byte message to task 0 }"
+    )
+    skel = translate_source(src, "pp_e", 2)
+    r2n = place_jobs(topo1d, [2], "RG", seed=0)[0]
+    st, net = _run(topo1d, [JobSpec("pp", skel, r2n)])
+    m = MET.latency_summary(st, ["pp"], net)["pp"]
+    assert m["count"] == 8
+    # latency >= hop floor (>=2 links x 0.5us) and bounded by something sane
+    assert 1.0 <= m["min_us"] <= 50.0
+    assert bool(st.vms[0].done.all())
+    assert int(st.pool.dropped) == 0
+
+
+def test_message_conservation(topo1d):
+    """Messages injected == delivered (+0 in flight at completion)."""
+    skel = W.build_skeleton("nn", "small", overrides={"iters": 2})
+    r2n = place_jobs(topo1d, [skel.n_ranks], "RN", seed=2)[0]
+    st, net = _run(topo1d, [JobSpec("nn", skel, r2n)], pool=2048)
+    assert bool(st.vms[0].done.all())
+    assert not bool(st.pool.active.any())
+    delivered = int(st.metrics.lat_cnt[0])
+    expected = 2 * 64 * 6  # iters x ranks x 2*ndims
+    assert delivered == expected
+    assert int(st.pool.dropped) == 0
+
+
+def test_vm_counters_consistent(topo1d):
+    skel = W.build_skeleton("cosmoflow", "small", overrides={"iters": 2})
+    r2n = place_jobs(topo1d, [skel.n_ranks], "RR", seed=3)[0]
+    st, net = _run(topo1d, [JobSpec("cf", skel, r2n)], pool=1024,
+                   horizon_us=400_000.0)
+    vm = st.vms[0]
+    assert bool(vm.done.all())
+    np.testing.assert_array_equal(np.asarray(vm.send_done), np.asarray(vm.send_need))
+    np.testing.assert_array_equal(np.asarray(vm.recv_done), np.asarray(vm.recv_need))
+    assert (np.asarray(vm.comm_time) > 0).all()
+
+
+def test_interference_slows_latency(topo1d):
+    """Paper core qualitative: co-running with UR background increases
+    message latency vs the baseline (exclusive network)."""
+    skel = W.build_skeleton("lammps", "small", overrides={"iters": 3})
+    pl_alone = place_jobs(topo1d, [skel.n_ranks], "RN", seed=4)
+    st_a, net = _run(topo1d, [JobSpec("lmp", skel, pl_alone[0])], pool=2048)
+    base = MET.latency_summary(st_a, ["lmp"], net)["lmp"]["avg_us"]
+
+    pl_mix = place_jobs(topo1d, [skel.n_ranks, 128], "RN", seed=4)
+    ur = URSpec("ur", pl_mix[1], size_bytes=64 * 1024, interval_us=50.0)
+    st_b, net = _run(topo1d, [JobSpec("lmp", skel, pl_mix[0])], ur=ur, pool=4096)
+    mixed = MET.latency_summary(st_b, ["lmp", "ur"], net)["lmp"]["avg_us"]
+    assert mixed > base * 1.02, (base, mixed)
+
+
+def test_rg_confines_traffic(topo1d):
+    """Paper: random-group placement keeps traffic off global links relative
+    to random-node placement (messages confined within groups)."""
+    skel = W.build_skeleton("nn", "small", overrides={"iters": 2})
+
+    def global_frac(policy, seed):
+        r2n = place_jobs(topo1d, [skel.n_ranks], policy, seed=seed)[0]
+        st, net = _run(topo1d, [JobSpec("nn", skel, r2n)], pool=2048)
+        return MET.link_load_summary(st, topo1d)["frac_global"]
+
+    fg_rg = global_frac("RG", 5)
+    fg_rn = global_frac("RN", 5)
+    assert fg_rg < fg_rn, (fg_rg, fg_rn)
+
+
+def test_2d_runs_and_reports():
+    topo = dragonfly_2d_small()
+    skel = W.build_skeleton("cosmoflow", "small", overrides={"iters": 1})
+    r2n = place_jobs(topo, [skel.n_ranks], "RG", seed=6)[0]
+    st, net = _run(topo, [JobSpec("cf", skel, r2n)], routing="ADP",
+                   pool=1024, horizon_us=400_000.0)
+    assert bool(st.vms[0].done.all())
+    rep = MET.run_report(st, ["cf"], topo, net)
+    assert rep["latency"]["cf"]["count"] > 0
+    assert rep["link_load"]["local_total_bytes"] > 0

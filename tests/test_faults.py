@@ -1,0 +1,90 @@
+"""Failure & straggler injection (the fault-tolerance validation vehicle)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.translator import translate_source
+from repro.netsim import metrics as MET
+from repro.netsim.config import NetConfig
+from repro.netsim.engine import JobSpec, build_engine
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import KIND_GLOBAL, dragonfly_1d_small
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return dragonfly_1d_small()
+
+
+def _run(topo, jobs, horizon=300_000.0, **kw):
+    net = NetConfig(pool_size=1024, tick_us=2.0)
+    init, run, _ = build_engine(
+        topo, jobs, net=net, pool_size=1024, horizon_us=horizon, **kw
+    )
+    return jax.block_until_ready(run(init())), net
+
+
+def _cross_group_job(topo):
+    """Two ranks in different groups exchanging messages."""
+    src = (
+        "For 6 repetitions {\n"
+        " task 0 sends a 65536 byte message to task 1 then\n"
+        " task 1 sends a 65536 byte message to task 0 }"
+    )
+    skel = translate_source(src, f"xgroup_{np.random.randint(1e9)}", 2)
+    nodes_per_group = topo.routers_per_group * topo.nodes_per_router
+    r2n = np.asarray([0, nodes_per_group])  # group 0 and group 1
+    return skel, r2n
+
+
+def test_adaptive_survives_link_failure(topo):
+    """Kill ALL direct global links between groups 0 and 1: adaptive routing
+    detours via intermediate groups and the job still completes."""
+    skel, r2n = _cross_group_job(topo)
+    down = np.zeros(topo.n_links, bool)
+    for m in range(topo.links_per_pair):
+        down[topo.global_link_id[0, 1, m]] = True
+        down[topo.global_link_id[1, 0, m]] = True
+
+    st_ok, net = _run(topo, [JobSpec("x", skel, r2n)], routing="ADP")
+    st_f, _ = _run(topo, [JobSpec("x", skel, r2n)], routing="ADP", link_down=down)
+    assert bool(st_f.vms[0].done.all()), "job must survive the failure"
+    lat_ok = MET.latency_summary(st_ok, ["x"], net)["x"]["avg_us"]
+    lat_f = MET.latency_summary(st_f, ["x"], net)["x"]["avg_us"]
+    assert lat_f > lat_ok, "detour must cost latency"
+
+
+def test_minimal_routing_stalls_on_failure(topo):
+    """Same failure under MIN routing: messages stall (honest asymmetry —
+    adaptive routing is the fault-tolerance mechanism)."""
+    skel, r2n = _cross_group_job(topo)
+    down = np.zeros(topo.n_links, bool)
+    for m in range(topo.links_per_pair):
+        down[topo.global_link_id[0, 1, m]] = True
+        down[topo.global_link_id[1, 0, m]] = True
+    st, _ = _run(topo, [JobSpec("x", skel, r2n)], routing="MIN",
+                 link_down=down, horizon=50_000.0)
+    assert not bool(st.vms[0].done.all())
+    assert bool(st.pool.active.any())  # stuck in flight
+
+
+def test_straggler_slows_whole_job(topo):
+    """One 4x-slow rank inflates every rank's comm time (collective wait) —
+    the straggler effect the runtime must mitigate."""
+    skel = W.build_skeleton("cosmoflow", "small", overrides={"iters": 2})
+    r2n = place_jobs(topo, [skel.n_ranks], "RG", seed=0)[0]
+    st_ok, _ = _run(topo, [JobSpec("cf", skel, r2n)], routing="ADP",
+                    horizon=900_000.0)
+    slow = np.ones(skel.n_ranks, np.float32)
+    slow[3] = 4.0
+    st_s, _ = _run(topo, [JobSpec("cf", skel, r2n)], routing="ADP",
+                   rank_slowdown=[slow], horizon=2_000_000.0)
+    assert bool(st_s.vms[0].done.all())
+    ct_ok = np.asarray(st_ok.vms[0].comm_time)
+    ct_s = np.asarray(st_s.vms[0].comm_time)
+    others = [r for r in range(skel.n_ranks) if r != 3]
+    # non-straggler ranks now spend far longer blocked in the allreduce
+    assert ct_s[others].mean() > 2.0 * ct_ok[others].mean()
+    # total virtual time stretched by the straggler's compute factor
+    assert float(st_s.t) > float(st_ok.t) * 1.5

@@ -1,0 +1,205 @@
+"""Model zoo: per-arch smoke, decode==prefill consistency, flash-op grads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import layers as L
+from repro.models import model as MDL
+
+
+def _batch(cfg, key, B=2, S=24):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    tgts = jnp.roll(toks, -1, axis=1)
+    fe = None
+    if cfg.enc_layers:
+        fe = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model))
+    if cfg.num_patches:
+        toks = toks[:, : S - cfg.num_patches]
+        tgts = tgts[:, : toks.shape[1]]
+        fe = jax.random.normal(key, (B, cfg.num_patches, cfg.d_model))
+    return toks, tgts, fe
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_shapes(arch):
+    """Reduced same-family config: one forward, finite loss, right shapes."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = MDL.init_model(key, cfg)
+    toks, tgts, fe = _batch(cfg, key)
+    h, aux = MDL.forward_hidden(params, toks, cfg, frontend_embeds=fe)
+    S_total = toks.shape[1] + (cfg.num_patches if cfg.num_patches else 0)
+    assert h.shape == (2, S_total, cfg.d_model)
+    assert jnp.isfinite(h.astype(jnp.float32)).all()
+    loss, (l, a) = MDL.lm_loss(params, toks, tgts, cfg, frontend_embeds=fe)
+    assert jnp.isfinite(loss)
+    assert 0 < float(l) < 2 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One optimizer step on CPU: loss finite, grads update params, no NaNs."""
+    from repro.optim import adamw
+    from repro.train.train_step import make_train_step
+
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = MDL.init_model(key, cfg)
+    opt_cfg = adamw.OptConfig(lr=1e-3, total_steps=10, warmup_steps=2)
+    opt = adamw.init(params, opt_cfg)
+    step = make_train_step(cfg, opt_cfg, accum=1)
+    toks, tgts, fe = _batch(cfg, key)
+    args = (params, opt, toks, tgts) + ((fe,) if fe is not None else ())
+    p2, o2, m = jax.jit(step)(*args)
+    assert jnp.isfinite(m["loss"])
+    leaves0 = jax.tree_util.tree_leaves(params)
+    leaves1 = jax.tree_util.tree_leaves(p2)
+    changed = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(leaves0, leaves1)
+    )
+    assert changed
+    for leaf in leaves1:
+        assert jnp.isfinite(leaf.astype(jnp.float32)).all()
+
+
+def test_grad_accum_equivalence():
+    """accum=2 gradients match accum=1 on the same global batch."""
+    from repro.optim import adamw
+    from repro.train.train_step import make_train_step
+
+    cfg = get_smoke_config("mistral_nemo_12b")
+    key = jax.random.PRNGKey(2)
+    params = MDL.init_model(key, cfg)
+    opt_cfg = adamw.OptConfig(lr=1e-3, total_steps=10, warmup_steps=2)
+    toks = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+    tgts = jnp.roll(toks, -1, axis=1)
+    outs = []
+    for accum in (1, 2):
+        opt = adamw.init(params, opt_cfg)
+        step = make_train_step(cfg, opt_cfg, accum=accum)
+        p2, _, m = jax.jit(step)(params, opt, toks, tgts)
+        outs.append((p2, float(m["total_loss"])))
+    assert abs(outs[0][1] - outs[1][1]) < 1e-4
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0][0]),
+                    jax.tree_util.tree_leaves(outs[1][0])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-4, atol=2e-5,
+        )
+
+
+@pytest.mark.parametrize("arch", ["mistral_nemo_12b", "mamba2_370m",
+                                  "jamba_v01_52b", "mixtral_8x22b",
+                                  "granite_moe_3b_a800m"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(3)
+    params = MDL.init_model(key, cfg)
+    B, S = 2, 14
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    h, _ = MDL.forward_hidden(params, toks, cfg)
+    full = jnp.argmax(
+        L.mask_padded_vocab(
+            L.logits_from_hidden(params, h, cfg).astype(jnp.float32), cfg
+        ),
+        axis=-1,
+    )
+    state = MDL.init_decode_state(cfg, B, ctx=S, dtype=jnp.float32)
+    step = jax.jit(lambda p, s, t: MDL.decode_step(p, s, t, cfg))
+    preds = []
+    for t in range(S):
+        nxt, state = step(params, state, toks[:, t])
+        preds.append(nxt)
+    preds = jnp.stack(preds, axis=1)
+    match = float(jnp.mean((preds == full).astype(jnp.float32)))
+    assert match >= 0.95, match  # ties can flip an argmax
+
+
+# ---------------------------------------------------------------------------
+# flash attention / flash CE property tests
+# ---------------------------------------------------------------------------
+
+def _naive_attn(q, k, v, causal, window):
+    B, Sq, H, dh = q.shape
+    rep = H // k.shape[2]
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bqhk", q, kf) / np.sqrt(dh)
+    pos = jnp.arange(Sq)
+    mask = jnp.ones((Sq, Sq), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, :, None, :], s, -1e30)
+    return jnp.einsum("bqhk,bkhd->bqhd", jax.nn.softmax(s, -1), vf)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    S=st.integers(3, 40),
+    hkv=st.sampled_from([1, 2]),
+    rep=st.sampled_from([1, 3]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 5]),
+    chunk=st.sampled_from([4, 16, 64]),
+)
+def test_flash_attention_matches_naive(S, hkv, rep, causal, window, chunk):
+    key = jax.random.PRNGKey(S * 7 + hkv)
+    B, dh = 2, 8
+    H = hkv * rep
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, hkv, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, hkv, dh))
+    f1 = lambda q, k, v: (L.chunked_attention(
+        q, k, v, causal=causal, window=window, chunk=chunk) ** 2).sum()
+    f2 = lambda q, k, v: (_naive_attn(q, k, v, causal, window) ** 2).sum()
+    v1, g1 = jax.value_and_grad(f1, argnums=(0, 1, 2))(q, k, v)
+    v2, g2 = jax.value_and_grad(f2, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-4)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    S=st.integers(2, 30),
+    V=st.integers(7, 300),
+    chunk=st.sampled_from([3, 8, 64]),
+)
+def test_flash_ce_matches_reference(S, V, chunk):
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=1, d_head=8, d_ff=32, vocab_size=V,
+        compute_dtype="float32",
+    )
+    key = jax.random.PRNGKey(V)
+    h = jax.random.normal(key, (2, S, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, cfg.padded_vocab)) * 0.3
+    t = jax.random.randint(jax.random.fold_in(key, 2), (2, S), 0, V)
+
+    ref_fn = lambda h, w: L.cross_entropy_chunked({"unembed": w}, h, t, cfg, chunk=chunk)
+    fl_fn = lambda h, w: L.flash_cross_entropy(
+        h, w, t, (V, chunk, "float32")) / (t >= 0).sum()
+    v1, g1 = jax.value_and_grad(ref_fn, argnums=(0, 1))(h, w)
+    v2, g2 = jax.value_and_grad(fl_fn, argnums=(0, 1))(h, w)
+    np.testing.assert_allclose(float(v1), float(v2), rtol=1e-5)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_param_count_matches_init():
+    """Analytic 6ND param count equals actual initialized leaves."""
+    for arch in ["mistral_nemo_12b", "granite_moe_3b_a800m", "mamba2_370m"]:
+        cfg = get_smoke_config(arch).replace(vocab_pad_to=0)
+        params = MDL.init_model(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        analytic = cfg.param_count()
+        # analytic ignores small vectors (norm scales etc.) -> within 2%
+        assert abs(actual - analytic) / actual < 0.02, (arch, actual, analytic)

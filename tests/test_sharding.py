@@ -1,0 +1,75 @@
+"""Sharding rules: coverage, divisibility guard, spec shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import model as MDL
+from repro.train import sharding as SH
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_cover_every_leaf_and_rank(arch):
+    cfg = get_smoke_config(arch)
+    params = jax.eval_shape(
+        lambda k: MDL.init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+    specs = SH.param_specs(params, model="model", fsdp=("data",))
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(flat_p) == len(flat_s)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+
+
+def test_matrix_leaves_are_sharded():
+    """Every >=2D weight in a dense arch must shard on some axis (no
+    accidentally-replicated big tensors)."""
+    cfg = get_smoke_config("mistral_nemo_12b")
+    params = jax.eval_shape(lambda k: MDL.init_model(k, cfg), jax.random.PRNGKey(0))
+    specs = SH.param_specs(params, model="model", fsdp=("data",))
+
+    def check(path, leaf, spec):
+        name = SH._leaf_name(path)
+        if leaf.ndim >= 2 and name not in ("scale", "bias"):
+            assert any(ax is not None for ax in spec), (path, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), params, specs,
+        is_leaf=lambda x: isinstance(x, P) or hasattr(x, "shape"),
+    )
+
+
+def test_divisibility_guard():
+    from repro.launch.specs import _fit_spec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+
+    leaf = jax.ShapeDtypeStruct((14, 64), jnp.float32)
+    fixed = _fit_spec(P("model", "data"), leaf, FakeMesh())
+    assert fixed == P(None, "data")  # 14 % 16 != 0 -> replicated
+    leaf2 = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    assert _fit_spec(P("model", "data"), leaf2, FakeMesh()) == P("model", "data")
+    leaf3 = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    assert _fit_spec(P(("pod", "data"), None), leaf3, FakeMesh()) == P(("pod", "data"), None)
+
+
+def test_vocab_padding_divisible():
+    for arch in ARCH_IDS:
+        from repro.configs import get_config
+
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_constrain_noop_outside_mesh_ctx():
+    x = jnp.ones((2, 4, 8))
+    assert SH.constrain_acts(x) is x
+    q = jnp.ones((2, 4, 2, 4))
+    assert SH.constrain_attn_q(q) is q

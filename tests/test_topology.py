@@ -1,0 +1,74 @@
+"""Dragonfly construction invariants (paper Table II)."""
+import numpy as np
+import pytest
+
+from repro.netsim.topology import (
+    KIND_GLOBAL, KIND_LOCAL, KIND_TERM_IN, KIND_TERM_OUT,
+    dragonfly_1d_paper, dragonfly_1d_small, dragonfly_2d_paper,
+    dragonfly_2d_small,
+)
+
+ALL = [dragonfly_1d_paper, dragonfly_2d_paper, dragonfly_1d_small, dragonfly_2d_small]
+
+
+def test_paper_sizes():
+    t1 = dragonfly_1d_paper()
+    assert t1.n_nodes == 8448 and t1.n_routers == 1056 and t1.n_groups == 33
+    assert t1.links_per_pair == 4  # paper: 4 global links per group pair
+    t2 = dragonfly_2d_paper()
+    assert t2.n_nodes == 8448 and t2.n_routers == 2112 and t2.n_groups == 22
+    assert t2.links_per_pair == 32
+
+
+@pytest.mark.parametrize("builder", ALL)
+def test_link_counts(builder):
+    t = builder()
+    k = t.link_kind
+    assert (k == KIND_TERM_IN).sum() == t.n_nodes
+    assert (k == KIND_TERM_OUT).sum() == t.n_nodes
+    a, G = t.routers_per_group, t.n_groups
+    if t.variant == "1d":
+        assert (k == KIND_LOCAL).sum() == G * a * (a - 1)
+    else:
+        per_router = (t.cols - 1) + (t.rows - 1)
+        assert (k == KIND_LOCAL).sum() == G * a * per_router
+    assert (k == KIND_GLOBAL).sum() == G * (G - 1) * t.links_per_pair
+
+
+@pytest.mark.parametrize("builder", ALL)
+def test_global_wiring_complete_and_consistent(builder):
+    t = builder()
+    G = t.n_groups
+    for g in range(G):
+        for tg in range(G):
+            if g == tg:
+                continue
+            assert (t.global_gw[g, tg] >= 0).all()
+            # every global link lands in the right group
+            for m in range(t.links_per_pair):
+                lid = t.global_link_id[g, tg, m]
+                dst_r = t.link_dst_router[lid]
+                assert dst_r // t.routers_per_group == tg
+
+
+@pytest.mark.parametrize("builder", ALL)
+def test_local_links_within_group(builder):
+    t = builder()
+    R, a = t.n_routers, t.routers_per_group
+    for r in range(0, R, max(R // 16, 1)):
+        g = r // a
+        for l2 in range(a):
+            lid = t.local_link_id[r, l2]
+            if lid >= 0:
+                assert t.link_dst_router[lid] == g * a + l2
+
+
+def test_2d_row_col_structure():
+    t = dragonfly_2d_small()
+    a, cols = t.routers_per_group, t.cols
+    for r in range(a):  # first group
+        r1, c1 = divmod(r, cols)
+        for l2 in range(a):
+            r2, c2 = divmod(l2, cols)
+            has = t.local_link_id[r, l2] >= 0
+            assert has == ((r != l2) and (r1 == r2 or c1 == c2))

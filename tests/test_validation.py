@@ -1,0 +1,92 @@
+"""Paper §V validation: skeleton == application (Tables IV/V, Fig. 6),
+for every built-in workload and for hypothesis-generated random programs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workloads as W
+from repro.core.interp import run_source, skeleton_trace
+from repro.core.translator import translate_source
+
+ALL_APPS = ["cosmoflow", "alexnet", "nn", "milc", "nekbone", "lammps"]
+
+
+@pytest.mark.parametrize("app", ALL_APPS)
+def test_event_counts_match(app):
+    """Table IV analog: per-MPI-function event counts equal."""
+    a = W.build_application(app, "small")
+    s = W.build_skeleton(app, "small")
+    assert a.as_table() == s.event_counts()
+
+
+@pytest.mark.parametrize("app", ALL_APPS)
+def test_bytes_per_rank_match(app):
+    """Table V analog: bytes transmitted by each rank equal."""
+    a = W.build_application(app, "small")
+    s = W.build_skeleton(app, "small")
+    assert (a.bytes == s.bytes_per_rank()).all()
+
+
+@pytest.mark.parametrize("app", ALL_APPS)
+def test_control_flow_match(app):
+    """Fig. 6 analog: operation sequences identical."""
+    a = W.build_application(app, "small")
+    s = W.build_skeleton(app, "small")
+    assert a.trace == skeleton_trace(s)
+
+
+@pytest.mark.parametrize("app", ["alexnet", "milc"])
+def test_paper_scale_match(app):
+    a = W.build_application(app, "paper")
+    s = W.build_skeleton(app, "paper")
+    assert a.as_table() == s.event_counts()
+    assert (a.bytes == s.bytes_per_rank()).all()
+
+
+# ---------------------------------------------------------------------------
+# property-based: random DSL programs validate too
+# ---------------------------------------------------------------------------
+
+_stmt = st.sampled_from([
+    "all tasks allreduce a {n} byte message",
+    "all tasks synchronize",
+    "all tasks compute for {n} microseconds",
+    "task 0 multicasts a {n} byte message to all other tasks",
+    "all tasks send a {n} byte message to task 0",
+    "task 0 sends a {n} byte message to task 1",
+    "all tasks exchange a {n} byte message with their neighbors in a 2x2x2 grid",
+])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    stmts=st.lists(st.tuples(_stmt, st.integers(1, 10**6)), min_size=1, max_size=6),
+    reps=st.integers(1, 4),
+)
+def test_random_program_validates(stmts, reps):
+    body = " then\n  ".join(t.format(n=n) for t, n in stmts)
+    src = f"For {reps} repetitions {{\n  {body}\n}}"
+    name = f"rand_{abs(hash(src)) % 10**9}"
+    app = run_source(src, name, 8)
+    sk = translate_source(src, name, 8)
+    assert app.as_table() == sk.event_counts()
+    assert (app.bytes == sk.bytes_per_rank()).all()
+    assert app.trace == skeleton_trace(sk)
+
+
+def test_hlo2skeleton_roundtrip():
+    """Auto-extracted ML skeletons flow through the same validation."""
+    from repro.core.hlo2skeleton import ml_workload_source
+
+    src = ml_workload_source(
+        name="fake-12b:train_4k",
+        flops_per_device=1e12,
+        grad_bytes_per_rank=3e8,
+        steps=4,
+    )
+    app = run_source(src, "ml_fake", 16)
+    sk = translate_source(src, "ml_fake", 16)
+    assert app.as_table() == sk.event_counts()
+    assert (app.bytes == sk.bytes_per_rank()).all()
+    n_buckets = -(-int(3e8) // (128 << 20))
+    assert sk.event_counts()["MPI_Allreduce"] == 4 * n_buckets * 16
