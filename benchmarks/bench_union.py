@@ -1,0 +1,102 @@
+"""Ensemble-throughput bench: vmapped vs looped campaigns (members/sec).
+
+The engine's vmap claim, measured: an N-member campaign (same scenario
+shape, different seeds × placements) through one ``jax.vmap``'d run vs a
+Python loop over the same jitted engine. Writes a ``BENCH_union.json``
+entry at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.bench_union [--members 8] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def bench_scenario(quick: bool):
+    from repro.union.scenario import Scenario, ScenarioJob
+
+    reps = 4 if quick else 12
+    ar = (
+        f"For {reps} repetitions {{\n"
+        " all tasks allreduce a 1 MiB message then\n"
+        " all tasks compute for 1 milliseconds }"
+    )
+    return Scenario(
+        name="bench-ensemble",
+        jobs=[
+            ScenarioJob(app="ar32", source=ar, ranks=32),
+            ScenarioJob(app="nn", overrides={"iters": 2}, start_us=1000.0),
+        ],
+        placement="RN", routing="ADP", tick_us=10.0, horizon_ms=200.0,
+        pool_size=4096,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--members", type=int, default=8)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from repro.union.ensemble import build_campaign_engine, run_campaign
+
+    sc = bench_scenario(args.quick)
+    print(f"scenario={sc.name} members={args.members}")
+
+    # one engine shared across all runs: the cold run of each mode pays that
+    # mode's trace+compile, the warm run (fresh seeds, same shape) hits the
+    # jit cache and measures steady-state members/sec.
+    engine = build_campaign_engine(sc, base_seed=0)
+    results = {}
+    for mode in ("vmapped", "looped"):
+        vm = mode == "vmapped"
+        cold = run_campaign(sc, members=args.members, base_seed=0, vmapped=vm,
+                            engine=engine)
+        warm = run_campaign(sc, members=args.members, base_seed=100, vmapped=vm,
+                            engine=engine)
+        results[mode] = dict(
+            cold_wall_s=cold.wall_s,
+            warm_wall_s=warm.wall_s,
+            cold_members_per_sec=cold.members_per_sec,
+            warm_members_per_sec=warm.members_per_sec,
+            all_done=warm.summary["all_done"],
+            dropped=warm.summary["dropped_total"],
+        )
+        print(f"  {mode:>8}: cold {cold.wall_s:6.1f}s "
+              f"({cold.members_per_sec:.2f} members/s) | "
+              f"warm {warm.wall_s:6.1f}s ({warm.members_per_sec:.2f} members/s)")
+
+    entry = dict(
+        bench="union_ensemble_throughput",
+        members=args.members,
+        scenario=sc.to_dict(),
+        **{f"{m}_{k}": v for m, r in results.items() for k, v in r.items()},
+        warm_speedup_vmapped_over_looped=(
+            results["looped"]["warm_wall_s"]
+            / max(results["vmapped"]["warm_wall_s"], 1e-9)
+        ),
+    )
+    path = os.path.join(ROOT, "BENCH_union.json")
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+            if not isinstance(existing, list):
+                existing = [existing]
+    existing.append(entry)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, default=float)
+    print(f"speedup (warm, vmapped/looped): "
+          f"{entry['warm_speedup_vmapped_over_looped']:.2f}x")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,11 @@
 """Full hybrid-workload sweep (paper §VI): placements × routing × topologies,
-plus per-app baselines. Writes JSON per config; EXPERIMENTS.md summarizes.
+plus per-app baselines — a thin loop over `repro.union` scenarios.
 
-  PYTHONPATH=src python -m benchmarks.sweep_netsim [--quick]
+  PYTHONPATH=src python -m benchmarks.sweep_netsim [--quick] [--members N]
+
+With ``--members > 1`` each cell becomes a vmapped ensemble campaign
+(seeds × placements) instead of a single run, and the JSON carries the
+campaign summary; EXPERIMENTS.md summarizes.
 """
 from __future__ import annotations
 
@@ -20,9 +24,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--workload", default="workload1")
+    ap.add_argument("--members", type=int, default=1,
+                    help=">1: run each cell as a vmapped ensemble campaign")
     args = ap.parse_args()
 
-    from repro.launch.sim import MIXES, run_sim
+    from repro.union.ensemble import run_campaign
+    from repro.union.manager import run_scenario
+    from repro.union.scenario import MIXES, mix_scenario
 
     os.makedirs(OUT, exist_ok=True)
     combos = []
@@ -42,17 +50,28 @@ def main():
 
     for wl, topo, pl, rt in combos:
         tag = f"{wl}__{topo}__{pl}__{rt}__small_s0"
+        if args.members > 1:
+            tag += f"_m{args.members}"
         path = os.path.join(OUT, tag + ".json")
         if os.path.exists(path):
             print(f"skip {tag}")
             continue
         t0 = time.time()
         try:
-            rep = run_sim(wl, topo, pl, rt, scale="small", seed=0,
-                          horizon_ms=500.0, tick_us=5.0, iters_override=2)
+            sc = mix_scenario(wl, topo=topo, scale="small", placement=pl,
+                              routing=rt, iters_override=2,
+                              horizon_ms=500.0, tick_us=5.0)
+            if args.members > 1:
+                camp = run_campaign(sc, members=args.members, base_seed=0)
+                rep = dict(scenario=sc.to_dict(), summary=camp.summary,
+                           members=camp.reports)
+                virtual = camp.summary["virtual_time_ms"]["mean"]
+            else:
+                rep = run_scenario(sc, seed=0)
+                virtual = rep["virtual_time_ms"]
             with open(path, "w") as f:
                 json.dump(rep, f, indent=1, default=float)
-            print(f"{tag}: {time.time()-t0:.0f}s virtual={rep['virtual_time_ms']:.0f}ms",
+            print(f"{tag}: {time.time()-t0:.0f}s virtual={virtual:.0f}ms",
                   flush=True)
         except Exception as e:
             print(f"{tag}: FAIL {e}", flush=True)

@@ -12,6 +12,16 @@ from typing import Optional, Tuple
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType / make_mesh(axis_types=...) only exist on newer
+    # jax; Auto is the default there, so older versions just omit it.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -24,17 +34,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 
         grid = np.array(devs[:need]).reshape(shape)
         return jax.sharding.Mesh(grid, axes)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1-device mesh with the same logical axes (CPU tests)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 def batch_axes_of(mesh) -> Tuple[str, ...]:

@@ -1,39 +1,25 @@
-"""Hybrid-workload simulation runner (the paper's experiment driver).
+"""Hybrid-workload simulation runner — thin wrapper over `repro.union`.
 
   python -m repro.launch.sim --workload workload3 --topo 2d --placement RG \
       --routing ADP --scale small --out results/netsim
 
 Workload mixes follow paper Table III; ``baseline-<app>`` simulates one
 application alone (the grey boxes of Figs. 7/9). Reports land as JSON.
+
+The scenario/campaign machinery lives in :mod:`repro.union`; this module
+keeps the historical one-run CLI and the ``run_sim`` entry point used by
+benchmarks/examples. For ensembles and custom mixes use
+``python -m repro.union``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import numpy as np
-
-import jax
-
-from repro.core import workloads as W
-from repro.netsim import metrics as MET
-from repro.netsim.config import NetConfig
-from repro.netsim.engine import JobSpec, URSpec, build_engine
-from repro.netsim.placement import place_jobs
-from repro.netsim.topology import get_topology
-
-# paper Table III
-MIXES: Dict[str, List[str]] = {
-    "workload1": ["cosmoflow", "alexnet", "lammps", "nn"],
-    "workload2": ["cosmoflow", "alexnet", "lammps", "milc", "nn"],
-    "workload3": ["cosmoflow", "alexnet", "nekbone", "milc", "nn"],
-}
-MIX_HAS_UR = {"workload1"}
-
-UR_RANKS = {"paper": 4096, "small": 128}
+from repro.union.manager import run_scenario
+from repro.union.scenario import MIXES, MIX_HAS_UR, UR_RANKS, mix_scenario  # noqa: F401 (re-export)
 
 
 def run_sim(
@@ -47,52 +33,16 @@ def run_sim(
     tick_us: float = 5.0,
     iters_override: Optional[int] = None,
     pool_size: Optional[int] = None,
+    stagger_us: float = 0.0,
 ) -> Dict:
-    if workload.startswith("baseline-"):
-        apps = [workload.split("-", 1)[1]]
-        with_ur = False
-    else:
-        apps = MIXES[workload]
-        with_ur = workload in MIX_HAS_UR
-
-    topo = get_topology(topo_variant, scale)
-    ov = {"iters": iters_override} if iters_override else None
-    skels = [
-        W.build_skeleton(a, scale, overrides=(
-            {"updates": iters_override} if (a == "alexnet" and iters_override) else ov
-        ))
-        for a in apps
-    ]
-    sizes = [s.n_ranks for s in skels]
-    if with_ur:
-        sizes = sizes + [UR_RANKS[scale]]
-    placements = place_jobs(topo, sizes, placement, seed=seed)
-    jobs = [
-        JobSpec(a, s, placements[i]) for i, (a, s) in enumerate(zip(apps, skels))
-    ]
-    ur = (
-        URSpec("ur", placements[-1], size_bytes=10 * 1024, interval_us=1000.0)
-        if with_ur
-        else None
+    """One simulation of a builtin mix (kept for compatibility; scenario
+    construction + execution are delegated to the union subsystem)."""
+    scenario = mix_scenario(
+        workload, topo=topo_variant, scale=scale, placement=placement,
+        routing=routing, iters_override=iters_override, tick_us=tick_us,
+        horizon_ms=horizon_ms, pool_size=pool_size, stagger_us=stagger_us,
     )
-    if pool_size is None:
-        pool_size = 8192 if scale == "small" else 65536
-    net = NetConfig(pool_size=pool_size, tick_us=tick_us)
-    init, run, _ = build_engine(
-        topo, jobs, routing=routing, ur=ur, net=net,
-        pool_size=pool_size, horizon_us=horizon_ms * 1000.0,
-    )
-    t0 = time.time()
-    state = jax.block_until_ready(run(init()))
-    wall = time.time() - t0
-    names = apps + (["ur"] if with_ur else [])
-    rep = MET.run_report(state, names, topo, net, wall)
-    rep["config"] = dict(
-        workload=workload, topo=topo_variant, placement=placement,
-        routing=routing, scale=scale, seed=seed, ranks=sizes,
-        all_done=[bool(np.asarray(vm.done).all()) for vm in state.vms],
-    )
-    return rep
+    return run_scenario(scenario, seed=seed)
 
 
 def main():
@@ -107,6 +57,8 @@ def main():
     ap.add_argument("--horizon-ms", type=float, default=600.0)
     ap.add_argument("--tick-us", type=float, default=5.0)
     ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--stagger-us", type=float, default=0.0,
+                    help="stagger job arrivals by this offset per job index")
     ap.add_argument("--out", default="results/netsim")
     args = ap.parse_args()
 
@@ -115,6 +67,7 @@ def main():
         args.workload, args.topo, args.placement, args.routing,
         scale=args.scale, seed=args.seed, horizon_ms=args.horizon_ms,
         tick_us=args.tick_us, iters_override=args.iters,
+        stagger_us=args.stagger_us,
     )
     tag = f"{args.workload}__{args.topo}__{args.placement}__{args.routing}__{args.scale}_s{args.seed}"
     path = os.path.join(args.out, tag + ".json")

@@ -89,6 +89,12 @@ class SimState(NamedTuple):
     pool: PoolState
     metrics: Metrics
     rng: jnp.ndarray  # scalar uint32 counter
+    # runtime (vmap-able) per-member inputs: placements live in the state so
+    # one jitted engine can batch ensemble members with different placements,
+    # seeds, and arrival schedules.
+    r2n: Tuple[jnp.ndarray, ...]  # per job (P,) int32 rank -> node
+    ur_nodes: Optional[jnp.ndarray]  # (Pu,) int32 (None when no UR source)
+    job_start: jnp.ndarray  # (n_jobs,) f32 us — ranks idle until their job arrives
 
 
 @dataclass
@@ -96,6 +102,7 @@ class JobSpec:
     name: str
     skeleton: SkeletonProgram
     rank2node: np.ndarray  # (P,) node ids
+    start_us: float = 0.0  # arrival offset (staggered co-scheduling)
 
 
 @dataclass
@@ -104,6 +111,7 @@ class URSpec:
     rank2node: np.ndarray
     size_bytes: float = 10 * 1024
     interval_us: float = 1000.0
+    start_us: float = 0.0
 
 
 def _n_rounds(opcode, a0, a1, P: int):
@@ -138,6 +146,7 @@ def build_engine(
     horizon_us: float = 500_000.0,
     link_down: Optional[np.ndarray] = None,  # (L,) bool — failed links
     rank_slowdown: Optional[Sequence[np.ndarray]] = None,  # per job (P,) f32
+    job_start_us: Optional[Sequence[float]] = None,  # per job arrival offsets
 ):
     """Returns (init_state, run_fn) where run_fn: state -> final state (jit).
 
@@ -146,6 +155,12 @@ def build_engine(
     minimal routing stalls on them — the realistic asymmetry);
     ``rank_slowdown`` multiplies each rank's COMPUTE durations (straggler
     model — collectives make the whole job wait).
+
+    Staggered arrivals: each job's ranks idle until ``max(job_start_us[ji],
+    jobs[ji].start_us)`` of virtual time — dynamic co-scheduling, where a job
+    lands on a network already carrying traffic. Placements, arrival times,
+    and the RNG seed are carried in ``SimState`` (see ``init_state``), so
+    ``jax.vmap(run)`` batches ensemble members that differ in any of them.
     """
     net = net or NetConfig()
     T = topo_arrays(topo)
@@ -163,6 +178,13 @@ def build_engine(
     job_r2n = [jnp.asarray(j.rank2node, jnp.int32) for j in jobs]
     job_P = [j.skeleton.n_ranks for j in jobs]
     ur_r2n = jnp.asarray(ur.rank2node, jnp.int32) if ur else None
+    default_start = np.asarray(
+        [
+            max(float(j.start_us), float(job_start_us[ji]) if job_start_us is not None else 0.0)
+            for ji, j in enumerate(jobs)
+        ],
+        np.float32,
+    )
     link_dstr = jnp.concatenate(
         [T.link_dst_router, jnp.zeros((1,), jnp.int32)]
     )  # dummy row
@@ -179,13 +201,13 @@ def build_engine(
     # ------------------------------------------------------------------
     # per-job emission: compute this (op, round)'s messages for each rank
     # ------------------------------------------------------------------
-    def vm_emit(ji: int, vm: VMState, t):
+    def vm_emit(ji: int, vm: VMState, t, start):
         ops, grid, P = job_ops[ji], job_grid[ji], job_P[ji]
         ranks = jnp.arange(P, dtype=jnp.int32)
         row = ops[vm.pc]  # (P, 4)
         opc, a0, a1, a2 = row[:, 0], row[:, 1], row[:, 2], row[:, 3]
         g = grid[vm.pc]  # (P, 4)
-        enter = (~vm.emitted) & (~vm.done)
+        enter = (~vm.emitted) & (~vm.done) & (t >= start)
 
         dst = jnp.full((P, MAXE), -1, jnp.int32)
         size = jnp.zeros((P,), jnp.float32)
@@ -360,17 +382,18 @@ def build_engine(
         vms = list(state.vms)
         for ji in range(len(jobs)):
             vm = vms[ji]
-            vm, dst, sizes = vm_emit(ji, vm, t)
+            vm, dst, sizes = vm_emit(ji, vm, t, state.job_start[ji])
             any_emit = jnp.any(dst >= 0)
+            r2n = state.r2n[ji]
 
-            def do_inject(args):
+            def do_inject(args, r2n=r2n, dst=dst, sizes=sizes, ji=ji):
                 pool, metrics, rng = args
                 P = job_P[ji]
                 flat_dst = dst.reshape(-1)
                 src_ranks = jnp.repeat(jnp.arange(P, dtype=jnp.int32), MAXE)
                 sizes_f = jnp.repeat(sizes, MAXE)
-                srcs_node = job_r2n[ji][src_ranks]
-                dsts_node = job_r2n[ji][jnp.maximum(flat_dst, 0)]
+                srcs_node = r2n[src_ranks]
+                dsts_node = r2n[jnp.maximum(flat_dst, 0)]
                 return inject(pool, metrics, rng, t, src_ranks, flat_dst,
                               dsts_node, srcs_node, sizes_f, ji, demand)
 
@@ -396,7 +419,7 @@ def build_engine(
                     pool, metrics, rng, t,
                     jnp.arange(Pu, dtype=jnp.int32),
                     jnp.where(fire, 0, -1),  # dst_rank 0 marker (not tracked)
-                    dstn, ur_r2n,
+                    dstn, state.ur_nodes,
                     jnp.full((Pu,), float(ur.size_bytes), jnp.float32),
                     len(jobs), demand,
                 )
@@ -528,18 +551,26 @@ def build_engine(
         metrics = jax.lax.cond(rotate, do_rotate, lambda m: m, metrics)
 
         # --- 7. event-driven time skip (PDES hybrid): when the network is
-        # empty and every live rank is inside a COMPUTE delay, jump straight
-        # to the earliest wake-up (clamped to the next metrics window).
+        # empty and every live rank is inside a COMPUTE delay (or its job has
+        # not arrived yet), jump straight to the earliest wake-up (clamped to
+        # the next metrics window).
         any_active = jnp.any(pool.active)
         can_act = jnp.bool_(False)
         min_busy = jnp.float32(jnp.inf)
-        for vm in vms:
+        for ji, vm in enumerate(vms):
+            start = state.job_start[ji]
+            started = t >= start
             live = ~vm.done
-            can_act = can_act | jnp.any(live & ~vm.emitted)
+            can_act = can_act | (started & jnp.any(live & ~vm.emitted))
             waiting_busy = live & vm.emitted & (vm.busy_until > t + dt)
             can_act = can_act | jnp.any(live & vm.emitted & (vm.busy_until <= t + dt))
             min_busy = jnp.minimum(
                 min_busy, jnp.min(jnp.where(waiting_busy, vm.busy_until, jnp.inf))
+            )
+            # a job still pending arrival wakes the sim at its start time
+            min_busy = jnp.minimum(
+                min_busy,
+                jnp.where(~started & jnp.any(live), start, jnp.float32(jnp.inf)),
             )
         if ur_state is not None:
             min_busy = jnp.minimum(min_busy, jnp.min(ur_state.next_t))
@@ -551,10 +582,23 @@ def build_engine(
         return SimState(
             t=t_new, vms=tuple(vms), ur=ur_state, pool=pool,
             metrics=metrics, rng=rng + jnp.uint32(1),
+            r2n=state.r2n, ur_nodes=state.ur_nodes, job_start=state.job_start,
         )
 
     # ------------------------------------------------------------------
-    def init_state() -> SimState:
+    def init_state(
+        seed: int = 1,
+        placements: Optional[Sequence[np.ndarray]] = None,
+        start_us: Optional[Sequence[float]] = None,
+    ) -> SimState:
+        """Build an initial state; the vmap-able knobs live here.
+
+        ``placements`` (jobs' rank2node arrays, plus UR's as the final entry
+        when a UR source exists) overrides the build-time placements;
+        ``start_us`` overrides per-job arrival offsets; ``seed`` sets the
+        engine RNG (routing tiebreaks + UR destinations). Ensemble members
+        built from the same engine may differ in any of these.
+        """
         vms = []
         for ji, j in enumerate(jobs):
             P = job_P[ji]
@@ -567,12 +611,29 @@ def build_engine(
                 done=jnp.zeros((P,), bool),
             ))
         ur_state = None
+        ur_nodes = None
         if ur is not None:
             Pu = ur.rank2node.shape[0]
             ur_state = URState(
-                next_t=jnp.zeros((Pu,), jnp.float32),
+                next_t=jnp.full((Pu,), float(ur.start_us), jnp.float32),
                 count=jnp.zeros((Pu,), jnp.int32),
             )
+            ur_nodes = (
+                jnp.asarray(placements[len(jobs)], jnp.int32)
+                if placements is not None and len(placements) > len(jobs)
+                else ur_r2n
+            )
+        r2n = tuple(
+            jnp.asarray(placements[ji], jnp.int32)
+            if placements is not None
+            else job_r2n[ji]
+            for ji in range(len(jobs))
+        )
+        job_start = (
+            jnp.asarray(np.asarray(start_us, np.float32))
+            if start_us is not None
+            else jnp.asarray(default_start)
+        )
         pool = PoolState(
             active=jnp.zeros((M,), bool),
             src_rank=jnp.zeros((M,), jnp.int32),
@@ -601,7 +662,8 @@ def build_engine(
         )
         return SimState(
             t=jnp.float32(0.0), vms=tuple(vms), ur=ur_state, pool=pool,
-            metrics=metrics, rng=jnp.uint32(1),
+            metrics=metrics, rng=jnp.uint32(seed),
+            r2n=r2n, ur_nodes=ur_nodes, job_start=job_start,
         )
 
     def all_done(state: SimState):
@@ -611,10 +673,17 @@ def build_engine(
         # also require in-flight messages to drain
         return d & ~jnp.any(state.pool.active)
 
+    def live(s: SimState):
+        return (s.t < horizon_us) & ~all_done(s)
+
+    def guarded_tick(s: SimState) -> SimState:
+        # no-op once this member is done/at horizon: under vmap the while
+        # loop keeps stepping until *every* member finishes, and the guard
+        # keeps finished members bit-identical to a sequential run.
+        return jax.lax.cond(live(s), tick, lambda x: x, s)
+
     @jax.jit
     def run(state: SimState) -> SimState:
-        return jax.lax.while_loop(
-            lambda s: (s.t < horizon_us) & ~all_done(s), tick, state
-        )
+        return jax.lax.while_loop(live, guarded_tick, state)
 
     return init_state, run, tick

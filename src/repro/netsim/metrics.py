@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Any, Dict, List, Sequence
 
 import numpy as np
@@ -76,10 +77,34 @@ def router_traffic_windows(state, app_names: Sequence[str], router_set: np.ndarr
     return {name: per_app[:, i] for i, name in enumerate(app_names)}
 
 
-def run_report(state, app_names, topo, net, sim_wall_s: float = 0.0) -> Dict[str, Any]:
+class PoolExhausted(RuntimeError):
+    """The message pool dropped allocations — results are corrupted."""
+
+
+def check_dropped(state, strict: bool = False) -> int:
+    """Surface pool-allocation failures: warn (default) or raise (strict).
+
+    A nonzero ``pool.dropped`` means emitted messages silently vanished —
+    conservation breaks and latency/comm-time numbers are invalid. Rerun
+    with a larger ``pool_size``.
+    """
+    dropped = int(state.pool.dropped)
+    if dropped:
+        msg = (
+            f"message pool exhausted: {dropped} allocation(s) dropped — "
+            f"results are corrupted; increase pool_size"
+        )
+        if strict:
+            raise PoolExhausted(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=2)
+    return dropped
+
+
+def run_report(state, app_names, topo, net, sim_wall_s: float = 0.0,
+               strict: bool = False) -> Dict[str, Any]:
     return dict(
         virtual_time_ms=float(state.t) / 1000.0,
-        dropped=int(state.pool.dropped),
+        dropped=check_dropped(state, strict=strict),
         peak_inject_bytes_per_tick=float(state.metrics.peak_inject),
         peak_inject_TiBps=float(state.metrics.peak_inject)
         / (net.tick_us * 1e-6) / 2**40,

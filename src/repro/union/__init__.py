@@ -1,0 +1,33 @@
+"""repro.union — the paper's workload manager as a first-class subsystem.
+
+Union composes hybrid workloads and drives the network simulator:
+
+* :mod:`repro.union.scenario` — declarative, JSON-loadable **Scenario**
+  specs (apps, rank counts, overrides, arrival offsets, placement,
+  routing, topology, UR background) replacing the hardcoded mix table;
+* :mod:`repro.union.manager` — resolves a Scenario into engine inputs
+  (skeletons, placements, NetConfig) and runs a single member;
+* :mod:`repro.union.ensemble` — batches N ensemble members (seeds ×
+  placements × arrival jitter) of one scenario shape through a single
+  ``jax.vmap``'d engine, jitting once;
+* :mod:`repro.union.report` — aggregates per-member metrics into the
+  paper's interference summary (latency variation for HPC apps,
+  comm-time inflation for ML apps, baseline-vs-co-run deltas).
+
+CLI::
+
+    python -m repro.union --scenario workload1 --members 8
+    python -m repro.union --scenario my_mix.json --members 8 --baselines
+"""
+from repro.union.scenario import (  # noqa: F401
+    MIXES,
+    MIX_HAS_UR,
+    Scenario,
+    ScenarioJob,
+    URDecl,
+    load_scenario,
+    mix_scenario,
+)
+from repro.union.manager import ResolvedScenario, resolve, run_scenario  # noqa: F401
+from repro.union.ensemble import CampaignResult, run_campaign  # noqa: F401
+from repro.union.report import campaign_summary, interference_summary  # noqa: F401

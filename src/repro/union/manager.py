@@ -1,0 +1,156 @@
+"""The workload manager: Scenario -> engine inputs -> one simulation.
+
+``resolve`` turns a declarative :class:`~repro.union.scenario.Scenario`
+into everything ``netsim.engine.build_engine`` needs (skeletons, topology,
+placements, NetConfig, arrival offsets); ``build`` compiles the engine;
+``run_scenario`` runs a single member and returns the standard report.
+Ensemble campaigns over many members live in :mod:`repro.union.ensemble`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core import workloads as W
+from repro.core.translator import translate_source
+from repro.netsim import metrics as MET
+from repro.netsim.config import NetConfig
+from repro.netsim.engine import JobSpec, URSpec, build_engine
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import Dragonfly, get_topology
+from repro.union.scenario import Scenario, ScenarioJob, UR_RANKS
+
+DEFAULT_POOL = {"small": 8192, "paper": 65536}
+
+
+def build_job_skeleton(job: ScenarioJob, scale: str):
+    """One ScenarioJob -> a registered SkeletonProgram.
+
+    Three app sources: an inline DSL ``source``, an hlo2skeleton dry-run
+    record (``hlo:<arch>:<shape>[:<mesh>]``), or a `workloads.SPECS` name.
+    """
+    if job.source is not None:
+        return translate_source(
+            job.source, f"{job.app}_{job.ranks}", job.ranks, job.overrides
+        )
+    if job.app.startswith("hlo:"):
+        from repro.core.hlo2skeleton import build_ml_skeleton
+
+        parts = job.app.split(":")
+        if len(parts) not in (3, 4):
+            raise ValueError(f"bad hlo app spec {job.app!r}; want hlo:<arch>:<shape>[:<mesh>]")
+        arch, shape = parts[1], parts[2]
+        mesh = parts[3] if len(parts) == 4 else "single"
+        return build_ml_skeleton(
+            arch, shape, mesh=mesh, n_ranks=job.ranks or 256,
+            overrides=job.overrides,
+        )
+    if job.ranks is None:
+        return W.build_skeleton(job.app, scale, overrides=job.overrides)
+    src, default_ranks, ov = W.get_source(job.app, scale)
+    ov.update(job.overrides)
+    return translate_source(src, f"{job.app}_{scale}_{job.ranks}", job.ranks, ov)
+
+
+@dataclass
+class ResolvedScenario:
+    scenario: Scenario
+    topo: Dragonfly
+    jobs: List[JobSpec]  # placement for placement_seed baked in
+    ur: Optional[URSpec]
+    net: NetConfig
+    app_names: List[str]  # jobs + ["ur"] when UR present
+    job_sizes: List[int]  # jobs + UR ranks when present (placement order)
+    pool_size: int
+    horizon_us: float
+    placement_seed: int
+
+    def placements(self, seed: int) -> List[np.ndarray]:
+        """Per-member placements: same scenario shape, a fresh draw."""
+        return place_jobs(self.topo, self.job_sizes, self.scenario.placement, seed=seed)
+
+    @property
+    def start_us(self) -> List[float]:
+        return [j.start_us for j in self.jobs]
+
+
+def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
+    scenario.validate()
+    topo = get_topology(scenario.topo, scenario.scale)
+    skels = [build_job_skeleton(j, scenario.scale) for j in scenario.jobs]
+    sizes = [s.n_ranks for s in skels]
+    ur_decl = scenario.ur
+    if ur_decl is not None:
+        sizes = sizes + [ur_decl.ranks or UR_RANKS[scenario.scale]]
+    placements = place_jobs(topo, sizes, scenario.placement, seed=seed)
+    jobs = [
+        JobSpec(j.app, skel, placements[i], start_us=j.start_us)
+        for i, (j, skel) in enumerate(zip(scenario.jobs, skels))
+    ]
+    ur = (
+        URSpec(
+            "ur", placements[-1], size_bytes=ur_decl.size_bytes,
+            interval_us=ur_decl.interval_us, start_us=ur_decl.start_us,
+        )
+        if ur_decl is not None
+        else None
+    )
+    pool_size = scenario.pool_size or DEFAULT_POOL[scenario.scale]
+    net = NetConfig(pool_size=pool_size, tick_us=scenario.tick_us)
+    return ResolvedScenario(
+        scenario=scenario, topo=topo, jobs=jobs, ur=ur, net=net,
+        app_names=[j.app for j in scenario.jobs] + (["ur"] if ur else []),
+        job_sizes=sizes, pool_size=pool_size,
+        horizon_us=scenario.horizon_ms * 1000.0, placement_seed=seed,
+    )
+
+
+def build(rs: ResolvedScenario):
+    """Compile the engine for a resolved scenario: (init_state, run, tick)."""
+    return build_engine(
+        rs.topo, rs.jobs, routing=rs.scenario.routing, ur=rs.ur, net=rs.net,
+        pool_size=rs.pool_size, horizon_us=rs.horizon_us,
+    )
+
+
+def member_report(state, rs: ResolvedScenario, wall_s: float = 0.0,
+                  seed: int = 0, strict: bool = False,
+                  start_us: Optional[Sequence[float]] = None) -> Dict:
+    """``start_us`` records this member's *actual* arrival schedule when it
+    differs from the scenario's (e.g. campaign arrival jitter)."""
+    rep = MET.run_report(state, rs.app_names, rs.topo, rs.net, wall_s,
+                         strict=strict)
+    sc = rs.scenario
+    rep["config"] = dict(
+        workload=sc.name, topo=sc.topo, placement=sc.placement,
+        routing=sc.routing, scale=sc.scale, seed=seed, ranks=rs.job_sizes,
+        start_us=[float(s) for s in (start_us if start_us is not None
+                                     else rs.start_us)],
+        all_done=[bool(np.asarray(vm.done).all()) for vm in state.vms],
+    )
+    return rep
+
+
+def run_scenario(
+    scenario: Scenario, seed: int = 0, strict: bool = False
+) -> Dict:
+    """Resolve, compile, and run a single scenario member; return the report.
+
+    ``seed`` drives both the placement draw and the engine RNG, so a
+    vmapped campaign member with the same seed reproduces this run exactly.
+    """
+    rs = resolve(scenario, seed=seed)
+    init, run, _ = build(rs)
+    t0 = time.time()
+    state = jax.block_until_ready(run(init(seed=_engine_seed(seed))))
+    return member_report(state, rs, time.time() - t0, seed=seed, strict=strict)
+
+
+def _engine_seed(seed: int) -> int:
+    """Placement seed -> engine RNG stream (keep 0 and 1 distinct, nonzero)."""
+    return (seed * 2654435761 + 1) % (2**32)

@@ -1,0 +1,106 @@
+"""Campaign aggregation — the paper's interference summary, over ensembles.
+
+The paper's finding (§VI): network interference shows up for *HPC* apps as
+**message-latency variation** and for *ML* apps as **communication-time
+inflation**. A campaign gives distributions over ensemble members, so both
+are reported per app: latency avg/max spread across members, comm-time
+spread, and (given a baseline campaign of the app running alone)
+co-run-vs-baseline inflation factors.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def _spread(xs: List[float]) -> Dict[str, float]:
+    a = np.asarray(xs, np.float64)
+    mean = float(a.mean()) if a.size else 0.0
+    return dict(
+        mean=mean,
+        std=float(a.std()) if a.size else 0.0,
+        min=float(a.min()) if a.size else 0.0,
+        max=float(a.max()) if a.size else 0.0,
+        # (max-min)/mean — the latency-variation metric of Fig. 7
+        rel_spread=float((a.max() - a.min()) / mean) if a.size and mean else 0.0,
+    )
+
+
+def campaign_summary(campaign) -> Dict[str, Any]:
+    """Aggregate per-member reports of one CampaignResult."""
+    reports = campaign.reports
+    apps = list(reports[0]["latency"].keys()) if reports else []
+    per_app: Dict[str, Any] = {}
+    for app in apps:
+        lat = [r["latency"][app] for r in reports if r["latency"][app].get("count")]
+        ct = [r["comm_time"].get(app) for r in reports]
+        ct = [c for c in ct if c is not None]
+        per_app[app] = dict(
+            members_with_traffic=len(lat),
+            avg_latency_us=_spread([m["avg_us"] for m in lat]),
+            max_latency_us=_spread([m["max_us"] for m in lat]),
+            max_comm_ms=_spread([c["max_ms"] for c in ct]),
+            avg_comm_ms=_spread([c["avg_ms"] for c in ct]),
+        )
+    return dict(
+        members=campaign.members,
+        vmapped=campaign.vmapped,
+        wall_s=campaign.wall_s,
+        members_per_sec=campaign.members_per_sec,
+        virtual_time_ms=_spread([r["virtual_time_ms"] for r in reports]),
+        dropped_total=int(sum(r["dropped"] for r in reports)),
+        all_done=all(all(r["config"]["all_done"]) for r in reports),
+        apps=per_app,
+    )
+
+
+def interference_summary(
+    corun: Dict[str, Any], baselines: Dict[str, Dict[str, Any]]
+) -> Dict[str, Any]:
+    """Co-run campaign vs per-app baseline campaigns (the grey boxes of
+    Figs. 7/9): latency and comm-time inflation per app.
+
+    ``baselines`` maps app name -> that app's *alone* campaign summary.
+    """
+    out: Dict[str, Any] = {}
+    for app, co in corun["apps"].items():
+        base = baselines.get(app)
+        if base is None or app not in base.get("apps", {}):
+            continue
+        b = base["apps"][app]
+
+        def ratio(key, stat="mean"):
+            denom = b[key][stat]
+            return float(co[key][stat] / denom) if denom else float("nan")
+
+        out[app] = dict(
+            # HPC signature: latency variation grows under interference
+            latency_inflation=ratio("avg_latency_us"),
+            max_latency_inflation=ratio("max_latency_us"),
+            latency_variation_corun=co["avg_latency_us"]["rel_spread"],
+            latency_variation_baseline=b["avg_latency_us"]["rel_spread"],
+            # ML signature: communication time inflates
+            comm_time_inflation=ratio("max_comm_ms"),
+        )
+    return out
+
+
+def format_summary(summary: Dict[str, Any]) -> str:
+    lines = [
+        f"members={summary['members']} vmapped={summary['vmapped']} "
+        f"wall={summary['wall_s']:.1f}s "
+        f"({summary['members_per_sec']:.2f} members/s) "
+        f"all_done={summary['all_done']} dropped={summary['dropped_total']}",
+        f"virtual_time_ms: mean={summary['virtual_time_ms']['mean']:.1f} "
+        f"spread={summary['virtual_time_ms']['rel_spread']:.2%}",
+    ]
+    for app, s in summary["apps"].items():
+        lines.append(
+            f"  {app:>12}: avg latency {s['avg_latency_us']['mean']:9.1f}us "
+            f"(±{s['avg_latency_us']['std']:.1f}, "
+            f"spread {s['avg_latency_us']['rel_spread']:.1%}) | "
+            f"max comm {s['max_comm_ms']['mean']:8.1f}ms "
+            f"(±{s['max_comm_ms']['std']:.1f})"
+        )
+    return "\n".join(lines)

@@ -1,5 +1,8 @@
 """Data pipeline: determinism, shard disjointness, resumability."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, host_batch

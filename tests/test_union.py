@@ -1,0 +1,208 @@
+"""repro.union: scenario round-trips, staggered arrivals, vmapped ensembles."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.netsim import metrics as MET
+from repro.union import manager as MGR
+from repro.union.ensemble import run_campaign
+from repro.union.report import interference_summary
+from repro.union.scenario import Scenario, ScenarioJob, URDecl, mix_scenario
+
+PP = (
+    "For 4 repetitions {\n"
+    " task 0 sends a 1024 byte message to task 1 then\n"
+    " task 1 sends a 1024 byte message to task 0 }"
+)
+
+
+def tiny_scenario(start_us=0.0, placement="RN"):
+    return Scenario(
+        name="tiny",
+        jobs=[
+            ScenarioJob(app="pp0", source=PP, ranks=2),
+            ScenarioJob(app="pp1", source=PP, ranks=2, start_us=start_us),
+        ],
+        placement=placement, tick_us=2.0, horizon_ms=50.0, pool_size=256,
+    )
+
+
+# ---------------------------------------------------------------------------
+# scenario spec
+# ---------------------------------------------------------------------------
+
+def test_scenario_dict_roundtrip():
+    sc = Scenario(
+        name="mix",
+        jobs=[
+            ScenarioJob(app="cosmoflow", overrides={"iters": 2}),
+            ScenarioJob(app="nn", ranks=27, start_us=1500.0),
+        ],
+        topo="1d", scale="small", placement="RR", routing="MIN",
+        ur=URDecl(ranks=16, size_bytes=2048.0, interval_us=500.0),
+        tick_us=4.0, horizon_ms=100.0, pool_size=512,
+    )
+    d = sc.to_dict()
+    assert d["jobs"][1]["start_us"] == 1500.0
+    assert "source" not in d["jobs"][0]  # None fields pruned
+    sc2 = Scenario.from_dict(d)
+    assert sc2 == sc
+
+
+def test_scenario_from_plain_json_dict():
+    d = {
+        "name": "j", "placement": "RG",
+        "jobs": [{"app": "lammps", "overrides": {"iters": 1}}],
+        "ur": {"ranks": 8},
+    }
+    sc = Scenario.from_dict(d)
+    assert sc.jobs[0].app == "lammps"
+    assert sc.ur.ranks == 8 and sc.ur.interval_us == 1000.0
+
+
+def test_scenario_validation_errors():
+    with pytest.raises(ValueError, match="at least one job"):
+        Scenario.from_dict({"name": "x", "jobs": []})
+    with pytest.raises(ValueError, match="unknown scenario keys"):
+        Scenario.from_dict({"name": "x", "jobs": [{"app": "nn"}], "tpo": "1d"})
+    with pytest.raises(ValueError, match="start_us"):
+        Scenario.from_dict(
+            {"name": "x", "jobs": [{"app": "nn", "start_us": -5.0}]})
+    with pytest.raises(ValueError, match="explicit ranks"):
+        ScenarioJob(app="x", source=PP).validate()
+
+
+def test_resolve_to_engine_inputs():
+    sc = tiny_scenario(start_us=300.0)
+    rs = MGR.resolve(sc, seed=3)
+    assert [j.skeleton.n_ranks for j in rs.jobs] == [2, 2]
+    assert rs.app_names == ["pp0", "pp1"]
+    assert rs.start_us == [0.0, 300.0]
+    assert rs.net.tick_us == 2.0 and rs.pool_size == 256
+    # per-member placements: deterministic per seed, fresh across seeds
+    p3, p3b, p4 = rs.placements(3), rs.placements(3), rs.placements(4)
+    assert all(np.array_equal(a, b) for a, b in zip(p3, p3b))
+    assert any(not np.array_equal(a, b) for a, b in zip(p3, p4))
+    # rank-count override of a SPECS app flows into the skeleton
+    sc_rk = Scenario(name="r", jobs=[ScenarioJob(app="cosmoflow", ranks=8,
+                                                 overrides={"iters": 1})])
+    rs_rk = MGR.resolve(sc_rk)
+    assert rs_rk.jobs[0].skeleton.n_ranks == 8
+
+
+def test_mix_scenario_matches_table3():
+    sc = mix_scenario("workload1", iters_override=2)
+    assert [j.app for j in sc.jobs] == ["cosmoflow", "alexnet", "lammps", "nn"]
+    assert sc.ur is not None  # workload1 carries UR background
+    assert sc.jobs[1].overrides == {"updates": 2}  # alexnet key
+    base = mix_scenario("baseline-nn")
+    assert [j.app for j in base.jobs] == ["nn"] and base.ur is None
+    with pytest.raises(ValueError, match="unknown workload"):
+        mix_scenario("workload9")
+
+
+# ---------------------------------------------------------------------------
+# staggered arrivals
+# ---------------------------------------------------------------------------
+
+def test_staggered_job_emits_nothing_before_start():
+    start = 500.0
+    sc = tiny_scenario(start_us=start)
+    rs = MGR.resolve(sc, seed=0)
+    init, run, tick = MGR.build(rs)
+    state = init(seed=1)
+    # drive ticks up to (but not past) the arrival time
+    while float(state.t) < start - rs.net.tick_us:
+        state = tick(state)
+        vm1 = state.vms[1]
+        assert int(np.asarray(vm1.send_need).sum()) == 0
+        assert not bool(np.asarray(vm1.emitted).any())
+        assert not bool((np.asarray(state.pool.active)
+                         & (np.asarray(state.pool.job) == 1)).any())
+    # job 0 meanwhile made progress
+    assert int(np.asarray(state.vms[0].send_need).sum()) > 0
+    # resume to completion: the late job arrives, runs, and finishes
+    final = jax.block_until_ready(run(state))
+    assert bool(np.asarray(final.vms[1].done).all())
+    assert int(final.metrics.lat_cnt[1]) == 8
+    assert float(final.t) >= start
+
+
+def test_idle_network_skips_to_arrival():
+    """With only a far-future job pending, the PDES skip jumps the clock."""
+    sc = Scenario(
+        name="late", jobs=[ScenarioJob(app="pp", source=PP, ranks=2,
+                                       start_us=40_000.0)],
+        tick_us=2.0, horizon_ms=100.0, pool_size=128,
+    )
+    rs = MGR.resolve(sc, seed=0)
+    init, run, _ = MGR.build(rs)
+    final = jax.block_until_ready(run(init()))
+    assert bool(np.asarray(final.vms[0].done).all())
+    assert 40_000.0 <= float(final.t) < 60_000.0
+    # far fewer ticks than 40000/2: rng counts ticks
+    assert int(final.rng) < 2_000
+
+
+# ---------------------------------------------------------------------------
+# vmapped ensembles
+# ---------------------------------------------------------------------------
+
+def test_vmapped_member_matches_sequential_run():
+    sc = tiny_scenario(start_us=200.0)
+    members = 3
+    camp = run_campaign(sc, members=members, base_seed=0, vmapped=True)
+    assert camp.summary["all_done"] and camp.summary["dropped_total"] == 0
+    for i, rep in enumerate(camp.reports):
+        seq = MGR.run_scenario(sc, seed=i)
+        assert rep["virtual_time_ms"] == seq["virtual_time_ms"]
+        for app in ("pp0", "pp1"):
+            assert rep["latency"][app]["count"] == seq["latency"][app]["count"]
+            np.testing.assert_allclose(
+                rep["latency"][app]["avg_us"], seq["latency"][app]["avg_us"],
+                rtol=1e-6)
+            np.testing.assert_allclose(
+                rep["comm_time"][app]["max_ms"], seq["comm_time"][app]["max_ms"],
+                rtol=1e-6)
+
+
+def test_campaign_placements_differ_across_members():
+    sc = tiny_scenario(placement="RN")
+    camp = run_campaign(sc, members=3, base_seed=0)
+    # distinct placement draws -> latency spread across members
+    assert camp.summary["apps"]["pp0"]["avg_latency_us"]["rel_spread"] > 0
+
+
+def test_interference_summary_shape():
+    co = run_campaign(tiny_scenario(), members=2, base_seed=0).summary
+    base_sc = Scenario(name="b", jobs=[ScenarioJob(app="pp0", source=PP,
+                                                   ranks=2)],
+                       placement="RN", tick_us=2.0, horizon_ms=50.0,
+                       pool_size=256)
+    base = run_campaign(base_sc, members=2, base_seed=0).summary
+    inf = interference_summary(co, {"pp0": base})
+    assert set(inf) == {"pp0"}
+    assert inf["pp0"]["latency_inflation"] > 0
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion surfacing
+# ---------------------------------------------------------------------------
+
+def test_dropped_warns_and_strict_raises():
+    ar = "For 1 repetitions { all tasks allreduce a 8 byte message }"
+    sc = Scenario(
+        name="tiny-pool",
+        jobs=[ScenarioJob(app="ar8", source=ar, ranks=8)],
+        tick_us=2.0, horizon_ms=2.0, pool_size=4,
+    )
+    rs = MGR.resolve(sc, seed=0)
+    init, run, _ = MGR.build(rs)
+    state = jax.block_until_ready(run(init()))
+    assert int(state.pool.dropped) > 0
+    with pytest.warns(RuntimeWarning, match="pool exhausted"):
+        rep = MET.run_report(state, rs.app_names, rs.topo, rs.net)
+    assert rep["dropped"] > 0
+    with pytest.raises(MET.PoolExhausted):
+        MET.run_report(state, rs.app_names, rs.topo, rs.net, strict=True)

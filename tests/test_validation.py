@@ -2,6 +2,7 @@
 for every built-in workload and for hypothesis-generated random programs."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import workloads as W
