@@ -1,9 +1,11 @@
-"""Ensemble-throughput bench: vmapped vs looped campaigns (members/sec).
+"""Ensemble-throughput bench: batched vs looped campaigns (members/sec).
 
-The engine's vmap claim, measured: an N-member campaign (same scenario
-shape, different seeds × placements) through one ``jax.vmap``'d run vs a
-Python loop over the same jitted engine. Writes a ``BENCH_union.json``
-entry at the repo root.
+The engine's batching claim, measured: an N-member campaign (different
+seeds × placements) through the natively-batched engine — member chunks
+sharded across XLA devices (CPU cores are exposed as host devices
+automatically) — vs a Python loop over the same jitted engine. Each
+``BENCH_union.json`` entry records its provenance (git commit, jax
+version, backend, device count). ``--quick`` is the CI smoke profile.
 
   PYTHONPATH=src python -m benchmarks.bench_union [--members 8] [--quick]
 """
@@ -12,6 +14,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -29,26 +32,69 @@ def bench_scenario(quick: bool):
         " all tasks compute for 1 milliseconds }"
     )
     return Scenario(
-        name="bench-ensemble",
+        name="bench-ensemble-quick" if quick else "bench-ensemble",
         jobs=[
             ScenarioJob(app="ar32", source=ar, ranks=32),
-            ScenarioJob(app="nn", overrides={"iters": 2}, start_us=1000.0),
+            ScenarioJob(app="nn", overrides={"iters": 1 if quick else 2},
+                        start_us=1000.0),
         ],
-        placement="RN", routing="ADP", tick_us=10.0, horizon_ms=200.0,
+        placement="RN", routing="ADP", tick_us=10.0,
+        horizon_ms=80.0 if quick else 200.0,
         pool_size=4096,
     )
 
 
+def provenance():
+    """Record where each BENCH entry came from: commit, jax, backend."""
+    import jax
+
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        commit = None
+    return dict(
+        git_commit=commit,
+        jax_version=jax.__version__,
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        python=sys.version.split()[0],
+    )
+
+
+def enable_host_devices(n: int) -> None:
+    """Expose up to ``n`` XLA host devices (capped at the core count) so
+    the batched campaign can shard members across CPU cores. Must run
+    before jax is imported; a pre-set flag is left untouched."""
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    n = min(n, os.cpu_count() or 1)
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--members", type=int, default=8)
-    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--members", type=int, default=None,
+                    help="ensemble members (default 8; 2 with --quick)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke profile: tiny scenario, 2 members")
     args = ap.parse_args()
+    members = args.members if args.members is not None else (
+        2 if args.quick else 8)
+    enable_host_devices(members)
 
     from repro.union.ensemble import build_campaign_engine, run_campaign
 
     sc = bench_scenario(args.quick)
-    print(f"scenario={sc.name} members={args.members}")
+    print(f"scenario={sc.name} members={members}")
 
     # one engine shared across all runs: the cold run of each mode pays that
     # mode's trace+compile, the warm run (fresh seeds, same shape) hits the
@@ -57,9 +103,9 @@ def main():
     results = {}
     for mode in ("vmapped", "looped"):
         vm = mode == "vmapped"
-        cold = run_campaign(sc, members=args.members, base_seed=0, vmapped=vm,
+        cold = run_campaign(sc, members=members, base_seed=0, vmapped=vm,
                             engine=engine)
-        warm = run_campaign(sc, members=args.members, base_seed=100, vmapped=vm,
+        warm = run_campaign(sc, members=members, base_seed=100, vmapped=vm,
                             engine=engine)
         results[mode] = dict(
             cold_wall_s=cold.wall_s,
@@ -75,7 +121,8 @@ def main():
 
     entry = dict(
         bench="union_ensemble_throughput",
-        members=args.members,
+        members=members,
+        provenance=provenance(),
         scenario=sc.to_dict(),
         **{f"{m}_{k}": v for m, r in results.items() for k, v in r.items()},
         warm_speedup_vmapped_over_looped=(

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.drain_tick import drain_tick_pallas
+from repro.kernels.drain_tick import BLOCK_M as DRAIN_BLOCK_M
 from repro.kernels.router_tick import BLOCK_M, router_rate_drain_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -31,6 +33,39 @@ def router_rate_drain(routes, bytes_rem, active, share, dt,
         routes, bytes_rem, active, share, dt, interpret=interpret
     )
     return new_rem[:M], rate[:M], drained[:M]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_apps", "n_routers", "use_pallas", "interpret"),
+)
+def drain_tick(routes, bytes_rem, active, job, min_arrive, t, dt, bw_eff,
+               link_dst_router, *, n_apps: int, n_routers: int,
+               use_pallas: bool = False, interpret: bool = True):
+    """Fused drain tick (engine steps 2-3) over an explicit member batch.
+
+    See `ref.drain_tick_ref` for shapes/semantics. The jnp path is the
+    engine's default off-TPU: its scatters fold the member index into one
+    flat index, which is what fixes the vmapped-campaign regression.
+    """
+    if not use_pallas:
+        return ref.drain_tick_ref(
+            routes, bytes_rem, active, job, min_arrive, t, dt, bw_eff,
+            link_dst_router, n_apps, n_routers,
+        )
+    B, M, K = routes.shape
+    pad = (-M) % DRAIN_BLOCK_M
+    if pad:
+        routes = jnp.pad(routes, ((0, 0), (0, pad), (0, 0)), constant_values=-1)
+        bytes_rem = jnp.pad(bytes_rem, ((0, 0), (0, pad)))
+        active = jnp.pad(active, ((0, 0), (0, pad)))
+        job = jnp.pad(job, ((0, 0), (0, pad)))
+        min_arrive = jnp.pad(min_arrive, ((0, 0), (0, pad)))
+    new_rem, rate, delivered, lb, rw = drain_tick_pallas(
+        routes, bytes_rem, active, job, min_arrive, t, dt, bw_eff,
+        link_dst_router, n_apps, n_routers, interpret=interpret,
+    )
+    return new_rem[:, :M], rate[:, :M], delivered[:, :M], lb, rw
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -24,6 +24,65 @@ def router_rate_drain_ref(routes, bytes_rem, active, share, dt):
     return new_rem, rate, drained
 
 
+def drain_tick_ref(routes, bytes_rem, active, job, min_arrive, t, dt,
+                   bw_eff, link_dst_router, n_apps, n_routers):
+    """Reference for the fused drain tick (engine steps 2-3, batched).
+
+    One pass per tick over every member x message: link demand (messages
+    per link) -> fair-share rate -> per-message drain -> delivery mask,
+    plus the per-link byte counters the paper's router windows need. The
+    member batch dimension B is explicit; all scatters fold the member
+    index into a single flat index so XLA emits one scatter instead of a
+    serialized batch of scatters (the vmap regression this replaces).
+
+    routes: (B, M, K) int32 link ids (-1 pad); bytes_rem: (B, M) f32;
+    active: (B, M) bool; job: (B, M) int32 app ids (< n_apps);
+    min_arrive: (B, M) f32; t: (B,) f32; dt: scalar f32;
+    bw_eff: (L+1,) f32 per-link bandwidth (0 for failed links, dummy last);
+    link_dst_router: (L+1,) int32 destination router per link (dummy last).
+
+    Returns (new_rem (B,M), rate (B,M), delivered (B,M) bool,
+             link_bytes_delta (B, L+1), router_win_delta (B, n_apps, R)).
+    """
+    B, M, K = routes.shape
+    Lp = bw_eff.shape[0]
+    valid = (routes >= 0) & active[:, :, None]
+    lidx = jnp.where(valid, routes, Lp - 1)
+    boff = (jnp.arange(B, dtype=jnp.int32) * Lp)[:, None, None]
+    flat = (lidx + boff).reshape(-1)
+
+    n_l = (
+        jnp.zeros((B * Lp,), jnp.float32)
+        .at[flat].add(valid.reshape(-1).astype(jnp.float32))
+    )
+    share = bw_eff[None, :] / jnp.maximum(n_l.reshape(B, Lp), 1.0) * 1e-6
+    per_link = jnp.where(valid, share.reshape(-1)[flat].reshape(B, M, K), jnp.inf)
+    rate = jnp.min(per_link, axis=2)
+    rate = jnp.where(active & jnp.isfinite(rate), rate, 0.0)
+    drain = jnp.minimum(rate * dt, bytes_rem)
+    new_rem = bytes_rem - drain
+
+    drain_b = jnp.where(valid, drain[:, :, None], 0.0)
+    link_bytes_delta = (
+        jnp.zeros((B * Lp,), jnp.float32)
+        .at[flat].add(drain_b.reshape(-1))
+        .reshape(B, Lp)
+    )
+    rtr = link_dst_router[lidx]  # (B, M, K)
+    appidx = jnp.broadcast_to(job[:, :, None], lidx.shape)
+    rw_flat = (
+        appidx * n_routers + rtr
+        + (jnp.arange(B, dtype=jnp.int32) * n_apps * n_routers)[:, None, None]
+    )
+    router_win_delta = (
+        jnp.zeros((B * n_apps * n_routers,), jnp.float32)
+        .at[rw_flat.reshape(-1)].add(drain_b.reshape(-1))
+        .reshape(B, n_apps, n_routers)
+    )
+    delivered = active & (new_rem <= 1e-6) & (t[:, None] >= min_arrive)
+    return new_rem, rate, delivered, link_bytes_delta, router_win_delta
+
+
 def ssd_chunk_ref(x, dt, A, Bm, Cm, h0):
     """Reference for one head's SSD over all chunks (sequential).
 

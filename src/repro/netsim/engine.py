@@ -1,27 +1,42 @@
 """Tensor-timestepped co-simulation engine (the CODES/ROSS adaptation).
 
 One `tick` advances Δt of virtual time:
-  1. **Rank VMs** (one per job, vectorized over ranks — the Argobots-thread
-     replacement): ranks entering an (op, round) emit messages and bump
-     their cumulative send/recv thresholds; collectives are expanded
-     algorithmically (ring / recursive-doubling / binomial, §DESIGN).
+  1. **Rank VMs** (stacked over jobs, vectorized over ranks — the
+     Argobots-thread replacement): ranks entering an (op, round) emit
+     messages and bump their cumulative send/recv thresholds; collectives
+     are expanded algorithmically (ring / recursive-doubling / binomial,
+     §DESIGN).
   2. **Injection**: emitted messages get pool slots (stack allocator),
      routes (MIN or adaptive, live link demand) and latency floors.
-  3. **Network**: fluid fair-share wormhole model — each active message
-     progresses at min over its route links of (bw_l / n_msgs_on_l);
-     delivery when its bytes drain and the hop-latency floor passed.
+  3. **Network**: fluid fair-share wormhole model — the fused drain tick
+     (`kernels/drain_tick.py`): link demand → fair-share rate →
+     per-message drain → delivery mask in one pass.
   4. **Bookkeeping**: deliveries unblock VMs (cumulative counting — see
      DESIGN §9 for the matching relaxation); latency histograms, per-app
      router-window counters (paper's 0.5 ms packet counters), link loads.
 
-Everything is dense jnp; the loop is `lax.while_loop`, so the engine jits
-once per (topology, job set) and also vmaps for ensemble sweeps.
+**Stacked layout** (the one-engine-per-envelope design): all jobs' VM
+state lives in `(J, Pmax)` padded tensors and the job *programs* are
+runtime data — a :class:`JobTable` of `(J, OPmax, 4)` op/grid tables with
+per-job rank counts — carried inside :class:`SimState`. The engine
+compiles once per **capacity envelope** `(Jmax, Pmax, OPmax)` (plus
+topology/net config) and serves any job set that fits: different
+scenarios, different placements, different arrival schedules, all without
+re-tracing. Padded ranks/jobs are born `done` and never emit.
+
+**Explicit member batch**: every state leaf has a leading member
+dimension `B`. `run`/`tick` accept a single member state (auto-promoted
+to `B=1`) or a stacked batch; all scatters fold the member index into one
+flat index so an 8-member campaign costs one scatter per pass, not eight
+serialized ones. Member *i* of a batched run is bit-identical to its own
+`B=1` run, and to the historical per-job-loop engine (the equivalence
+goldens in tests/ assert this).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -29,36 +44,54 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.skeleton import OP, SkeletonProgram
+from repro.kernels import ops as KOPS
 from repro.netsim.config import NetConfig
-from repro.netsim.routing import TopoArrays, compute_routes, topo_arrays
-from repro.netsim.topology import Dragonfly, KIND_GLOBAL, KIND_LOCAL
+from repro.netsim.routing import compute_routes, topo_arrays
+from repro.netsim.topology import Dragonfly
 
 MAXE = 8  # max emissions per rank per (op, round)
 
 
+class JobTable(NamedTuple):
+    """The job set as runtime data: stacked, padded program/placement tables.
+
+    Leaves are `(J, ...)` for a member state and `(B, J, ...)` when
+    batched. Padded jobs have ``P=1``, an END-only program, and
+    ``start=inf``; padded ranks (``p >= P[j]``) are born done.
+    """
+
+    ops: jnp.ndarray  # (J, OPmax, 4) int32, END-padded
+    grid: jnp.ndarray  # (J, OPmax, 4) int32 cartesian dims for XCHG
+    P: jnp.ndarray  # (J,) int32 actual ranks per job (>= 1)
+    logp: jnp.ndarray  # (J,) int32 ceil(log2(max(P, 2)))
+    r2n: jnp.ndarray  # (J, Pmax) int32 rank -> node (0-padded)
+    slowdown: jnp.ndarray  # (J, Pmax) f32 per-rank COMPUTE stretch
+    start: jnp.ndarray  # (J,) f32 arrival offset (inf for padded jobs)
+
+
 class VMState(NamedTuple):
-    pc: jnp.ndarray  # (P,) int32
-    rnd: jnp.ndarray  # (P,) int32 round within current op
-    emitted: jnp.ndarray  # (P,) bool — entered current (op, round)
-    busy_until: jnp.ndarray  # (P,) f32 us
-    send_need: jnp.ndarray  # (P,) int32 cumulative deliveries required
+    pc: jnp.ndarray  # (J, Pmax) int32
+    rnd: jnp.ndarray  # (J, Pmax) int32 round within current op
+    emitted: jnp.ndarray  # (J, Pmax) bool — entered current (op, round)
+    busy_until: jnp.ndarray  # (J, Pmax) f32 us
+    send_need: jnp.ndarray  # (J, Pmax) int32 cumulative deliveries required
     send_done: jnp.ndarray
     recv_need: jnp.ndarray
     recv_done: jnp.ndarray
-    comm_time: jnp.ndarray  # (P,) f32 us blocked on communication
-    done: jnp.ndarray  # (P,) bool
+    comm_time: jnp.ndarray  # (J, Pmax) f32 us blocked on communication
+    done: jnp.ndarray  # (J, Pmax) bool
 
 
 class URState(NamedTuple):
-    next_t: jnp.ndarray  # (P,) f32
-    count: jnp.ndarray  # (P,) int32
+    next_t: jnp.ndarray  # (Pu,) f32
+    count: jnp.ndarray  # (Pu,) int32
 
 
 class PoolState(NamedTuple):
     active: jnp.ndarray  # (M,) bool
     src_rank: jnp.ndarray  # (M,) int32
     dst_rank: jnp.ndarray
-    job: jnp.ndarray  # (M,) int32 (== app id; UR uses its own id)
+    job: jnp.ndarray  # (M,) int32 (== app id; UR uses id Jmax)
     size: jnp.ndarray  # (M,) f32
     bytes_rem: jnp.ndarray  # (M,) f32
     inject_t: jnp.ndarray
@@ -79,22 +112,22 @@ class Metrics(NamedTuple):
     router_win: jnp.ndarray  # (n_apps, R) f32 current window (recv bytes)
     router_wins: jnp.ndarray  # (W, n_apps, R) f32 snapshots
     win_idx: jnp.ndarray
-    peak_inject: jnp.ndarray  # f32 max bytes injected in one tick
+    peak_inject: jnp.ndarray  # f32 max bytes injected in one (tick, app)
 
 
 class SimState(NamedTuple):
-    t: jnp.ndarray  # scalar f32 us
-    vms: Tuple[VMState, ...]
+    t: jnp.ndarray  # (B,) f32 us ((,) for a member state)
+    vms: VMState
     ur: Optional[URState]
     pool: PoolState
     metrics: Metrics
-    rng: jnp.ndarray  # scalar uint32 counter
-    # runtime (vmap-able) per-member inputs: placements live in the state so
-    # one jitted engine can batch ensemble members with different placements,
-    # seeds, and arrival schedules.
-    r2n: Tuple[jnp.ndarray, ...]  # per job (P,) int32 rank -> node
+    rng: jnp.ndarray  # uint32 counter
+    # runtime per-member inputs: the whole job set (programs, placements,
+    # arrival schedule) lives in the state, so one jitted engine batches
+    # members that differ in any of them — including different job sets,
+    # as long as they fit the engine's (Jmax, Pmax, OPmax) envelope.
+    jobs: JobTable
     ur_nodes: Optional[jnp.ndarray]  # (Pu,) int32 (None when no UR source)
-    job_start: jnp.ndarray  # (n_jobs,) f32 us — ranks idle until their job arrives
 
 
 @dataclass
@@ -114,25 +147,145 @@ class URSpec:
     start_us: float = 0.0
 
 
-def _n_rounds(opcode, a0, a1, P: int):
-    """Rounds for each op (vectorized over ranks)."""
-    logp = max(1, math.ceil(math.log2(max(P, 2))))
-    ring = opcode == OP["ALLREDUCE"]
-    big = a0 >= 4096
-    r = jnp.where(
-        ring, jnp.where(big, 2 * (P - 1), logp),
-        jnp.where(
-            (opcode == OP["BCAST"]) | (opcode == OP["BARRIER"]), logp,
-            jnp.where(opcode == OP["SCATTER"], (P - 2) // MAXE + 1, 1),
-        ),
+@dataclass(frozen=True)
+class EngineCapacity:
+    """The envelope one compiled engine serves: any job set with
+    ``n_jobs <= Jmax``, every job's ``n_ranks <= Pmax`` and
+    ``n_ops <= OPmax`` runs through the same jit cache entry."""
+
+    Jmax: int
+    Pmax: int
+    OPmax: int
+
+    @staticmethod
+    def of_jobs(jobs: Sequence[JobSpec]) -> "EngineCapacity":
+        return EngineCapacity(
+            Jmax=max(len(jobs), 1),
+            Pmax=max((j.skeleton.n_ranks for j in jobs), default=1),
+            OPmax=max((j.skeleton.n_ops for j in jobs), default=1),
+        )
+
+    def union(self, other: "EngineCapacity") -> "EngineCapacity":
+        return EngineCapacity(
+            max(self.Jmax, other.Jmax), max(self.Pmax, other.Pmax),
+            max(self.OPmax, other.OPmax),
+        )
+
+
+def _ceil_log2(P: int) -> int:
+    return max(1, math.ceil(math.log2(max(P, 2))))
+
+
+def pack_jobs(
+    jobs: Sequence[JobSpec],
+    cap: EngineCapacity,
+    *,
+    placements: Optional[Sequence[np.ndarray]] = None,
+    start_us: Optional[Sequence[float]] = None,
+    job_start_us: Optional[Sequence[float]] = None,
+    rank_slowdown: Optional[Sequence[Optional[np.ndarray]]] = None,
+) -> JobTable:
+    """Stack a job list into the padded (Jmax, Pmax/OPmax) runtime tables.
+
+    ``start_us`` *replaces* each job's arrival offset outright (a member's
+    actual schedule); ``job_start_us`` provides build-time defaults that
+    are maxed with each job's own ``start_us`` attribute.
+    """
+    J, Pmax, OPmax = cap.Jmax, cap.Pmax, cap.OPmax
+    if len(jobs) > J:
+        raise ValueError(f"{len(jobs)} jobs exceed engine capacity Jmax={J}")
+    ops = np.zeros((J, OPmax, 4), np.int32)
+    ops[:, :, 0] = OP["END"]
+    grid = np.zeros((J, OPmax, 4), np.int32)
+    P = np.ones((J,), np.int32)
+    r2n = np.zeros((J, Pmax), np.int32)
+    slow = np.ones((J, Pmax), np.float32)
+    start = np.full((J,), np.inf, np.float32)
+    for ji, j in enumerate(jobs):
+        sk = j.skeleton
+        if sk.n_ranks > Pmax or sk.n_ops > OPmax:
+            raise ValueError(
+                f"job {j.name!r} ({sk.n_ranks} ranks, {sk.n_ops} ops) exceeds "
+                f"engine capacity (Pmax={Pmax}, OPmax={OPmax})"
+            )
+        ops[ji, : sk.n_ops] = sk.ops
+        grid[ji, : sk.n_ops] = sk.grid
+        P[ji] = sk.n_ranks
+        pl = placements[ji] if placements is not None else j.rank2node
+        r2n[ji, : sk.n_ranks] = np.asarray(pl, np.int32)
+        if rank_slowdown is not None and rank_slowdown[ji] is not None:
+            slow[ji, : sk.n_ranks] = np.asarray(rank_slowdown[ji], np.float32)
+        s = float(j.start_us)
+        if job_start_us is not None and job_start_us[ji] is not None:
+            s = max(s, float(job_start_us[ji]))
+        if start_us is not None and start_us[ji] is not None:
+            s = float(start_us[ji])
+        start[ji] = s
+    logp = np.asarray([_ceil_log2(int(p)) for p in P], np.int32)
+    return JobTable(
+        ops=jnp.asarray(ops), grid=jnp.asarray(grid), P=jnp.asarray(P),
+        logp=jnp.asarray(logp), r2n=jnp.asarray(r2n),
+        slowdown=jnp.asarray(slow), start=jnp.asarray(start),
     )
-    return r
 
 
 def _hash(x):
     x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
     x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B)
     return x ^ (x >> 16)
+
+
+# ---------------------------------------------------------------------------
+# flat-index batched scatters: fold the member index into the scatter index
+# so XLA sees ONE scatter over (B * size,) instead of B serialized ones.
+# ---------------------------------------------------------------------------
+
+def _flat(target, idx, valid=None):
+    """target (B, *S); idx member-local flat index (B, ...). Returns the
+    flattened view, the globalized index, and the original shape."""
+    B = target.shape[0]
+    size = int(np.prod(target.shape[1:]))
+    off = (jnp.arange(B, dtype=jnp.int32) * size).reshape(
+        (B,) + (1,) * (idx.ndim - 1)
+    )
+    gidx = idx + off
+    if valid is not None:
+        gidx = jnp.where(valid, gidx, B * size)  # dropped
+    return target.reshape(-1), gidx.reshape(-1), target.shape
+
+
+def _flat_add(target, idx, vals, valid=None):
+    flat, gidx, shape = _flat(target, idx, valid)
+    return flat.at[gidx].add(vals.reshape(-1), mode="drop").reshape(shape)
+
+
+def _flat_set(target, idx, vals, valid=None):
+    flat, gidx, shape = _flat(target, idx, valid)
+    vals = jnp.broadcast_to(vals, idx.shape)
+    return flat.at[gidx].set(vals.reshape(-1), mode="drop").reshape(shape)
+
+
+def _flat_min(target, idx, vals):
+    flat, gidx, shape = _flat(target, idx)
+    return flat.at[gidx].min(vals.reshape(-1), mode="drop").reshape(shape)
+
+
+def _flat_max(target, idx, vals):
+    flat, gidx, shape = _flat(target, idx)
+    return flat.at[gidx].max(vals.reshape(-1), mode="drop").reshape(shape)
+
+
+def _member_batched(fn):
+    """Promote a member state (scalar t) to a B=1 batch around ``fn``."""
+
+    def wrapper(state: SimState):
+        if state.t.ndim == 0:
+            batched = jax.tree_util.tree_map(lambda x: x[None], state)
+            out = fn(batched)
+            return jax.tree_util.tree_map(lambda x: x[0], out)
+        return fn(state)
+
+    return wrapper
 
 
 def build_engine(
@@ -147,8 +300,16 @@ def build_engine(
     link_down: Optional[np.ndarray] = None,  # (L,) bool — failed links
     rank_slowdown: Optional[Sequence[np.ndarray]] = None,  # per job (P,) f32
     job_start_us: Optional[Sequence[float]] = None,  # per job arrival offsets
+    capacity: Optional[EngineCapacity] = None,
+    use_pallas: Optional[bool] = None,
 ):
-    """Returns (init_state, run_fn) where run_fn: state -> final state (jit).
+    """Returns (init_state, run, tick); run: state -> final state (jit).
+
+    ``jobs`` provides the *default* job set and sizes the capacity envelope
+    when ``capacity`` is not given; ``init_state(jobs=...)`` swaps in any
+    other job set that fits the envelope without re-tracing. ``run`` and
+    ``tick`` accept a member state or a stacked batch of members (leading
+    ``B`` dim) — the whole campaign is one call either way.
 
     Fault/straggler injection (DESIGN.md §4): ``link_down`` links carry no
     traffic (adaptive routing steers around them via the demand estimate;
@@ -157,74 +318,98 @@ def build_engine(
     model — collectives make the whole job wait).
 
     Staggered arrivals: each job's ranks idle until ``max(job_start_us[ji],
-    jobs[ji].start_us)`` of virtual time — dynamic co-scheduling, where a job
-    lands on a network already carrying traffic. Placements, arrival times,
-    and the RNG seed are carried in ``SimState`` (see ``init_state``), so
-    ``jax.vmap(run)`` batches ensemble members that differ in any of them.
+    jobs[ji].start_us)`` of virtual time — dynamic co-scheduling, where a
+    job lands on a network already carrying traffic.
+
+    ``use_pallas`` routes the drain tick through the Pallas kernel
+    (default: only on TPU backends; the pure-jnp fused path elsewhere).
     """
     net = net or NetConfig()
     T = topo_arrays(topo)
     L = topo.n_links
     M = pool_size or net.pool_size
-    n_apps = len(jobs) + (1 if ur else 0)
+    cap = capacity or EngineCapacity.of_jobs(jobs)
+    J, Pmax, OPmax = cap.Jmax, cap.Pmax, cap.OPmax
+    n_apps = J + (1 if ur else 0)
     adaptive = routing.upper() in ("ADP", "ADAPTIVE")
     dt = net.tick_us
     BINS = net.latency_hist_bins
     W = net.max_windows
     R = topo.n_routers
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    # compiled Mosaic on real TPUs; interpret-mode emulation elsewhere
+    kernel_interpret = jax.default_backend() != "tpu"
 
-    job_ops = [jnp.asarray(j.skeleton.ops, jnp.int32) for j in jobs]
-    job_grid = [jnp.asarray(j.skeleton.grid, jnp.int32) for j in jobs]
-    job_r2n = [jnp.asarray(j.rank2node, jnp.int32) for j in jobs]
-    job_P = [j.skeleton.n_ranks for j in jobs]
-    ur_r2n = jnp.asarray(ur.rank2node, jnp.int32) if ur else None
-    default_start = np.asarray(
-        [
-            max(float(j.start_us), float(job_start_us[ji]) if job_start_us is not None else 0.0)
-            for ji, j in enumerate(jobs)
-        ],
-        np.float32,
+    default_table = pack_jobs(
+        jobs, cap, job_start_us=job_start_us, rank_slowdown=rank_slowdown
     )
+    ur_r2n = jnp.asarray(ur.rank2node, jnp.int32) if ur else None
+    Pu = int(ur.rank2node.shape[0]) if ur else 0
     link_dstr = jnp.concatenate(
         [T.link_dst_router, jnp.zeros((1,), jnp.int32)]
     )  # dummy row
     link_ok = jnp.asarray(
         ~link_down if link_down is not None else np.ones(L, bool)
     )
-    job_slow = [
-        jnp.asarray(rank_slowdown[ji], jnp.float32)
-        if rank_slowdown is not None and rank_slowdown[ji] is not None
-        else jnp.ones((job_P[ji],), jnp.float32)
-        for ji in range(len(jobs))
-    ]
+    bw_eff = jnp.concatenate(
+        [jnp.where(link_ok, T.link_bw, 0.0), jnp.ones((1,), jnp.float32)]
+    )
+
+    # static candidate-index patterns for the stacked injection pass:
+    # candidates are job-major, rank-major, emission-minor — the same order
+    # the historical per-job loop allocated slots in.
+    N = J * Pmax * MAXE
+    cand_job = np.repeat(np.arange(J, dtype=np.int32), Pmax * MAXE)  # (N,)
+    cand_rank = np.tile(
+        np.repeat(np.arange(Pmax, dtype=np.int32), MAXE), J
+    )  # (N,)
+    cand_local = np.tile(
+        np.arange(Pmax * MAXE, dtype=np.uint32), J
+    )  # (N,) p*MAXE+e within each job block
+    cand_job_j = jnp.asarray(cand_job)
+    cand_rank_j = jnp.asarray(cand_rank)
+    cand_local_j = jnp.asarray(cand_local)
 
     # ------------------------------------------------------------------
-    # per-job emission: compute this (op, round)'s messages for each rank
+    # stacked emission: one pass computes this (op, round)'s messages for
+    # every (job, rank) — batched over members.
     # ------------------------------------------------------------------
-    def vm_emit(ji: int, vm: VMState, t, start):
-        ops, grid, P = job_ops[ji], job_grid[ji], job_P[ji]
-        ranks = jnp.arange(P, dtype=jnp.int32)
-        row = ops[vm.pc]  # (P, 4)
-        opc, a0, a1, a2 = row[:, 0], row[:, 1], row[:, 2], row[:, 3]
-        g = grid[vm.pc]  # (P, 4)
-        enter = (~vm.emitted) & (~vm.done) & (t >= start)
+    def vm_emit(jt: JobTable, vm: VMState, t, live_m):
+        B = t.shape[0]
+        ranks = jnp.arange(Pmax, dtype=jnp.int32)[None, None, :]  # (1,1,Pmax)
+        P = jt.P[:, :, None]  # (B, J, 1)
+        row = jnp.take_along_axis(
+            jt.ops, vm.pc[:, :, :, None], axis=2
+        )  # (B, J, Pmax, 4)
+        opc, a0, a1, a2 = row[..., 0], row[..., 1], row[..., 2], row[..., 3]
+        g = jnp.take_along_axis(jt.grid, vm.pc[:, :, :, None], axis=2)
+        # live_m gates finished/horizon-frozen members in place of a
+        # whole-state select: a non-live member never enters an (op, round),
+        # so every downstream write is a no-op for it.
+        enter = (
+            (~vm.emitted) & (~vm.done)
+            & (t[:, None, None] >= jt.start[:, :, None])
+            & live_m[:, None, None]
+        )
 
-        dst = jnp.full((P, MAXE), -1, jnp.int32)
-        size = jnp.zeros((P,), jnp.float32)
-        send_inc = jnp.zeros((P,), jnp.int32)
-        recv_inc = jnp.zeros((P,), jnp.int32)
+        dst = jnp.full((B, J, Pmax, MAXE), -1, jnp.int32)
+        size = jnp.zeros((B, J, Pmax), jnp.float32)
+        send_inc = jnp.zeros((B, J, Pmax), jnp.int32)
+        recv_inc = jnp.zeros((B, J, Pmax), jnp.int32)
         busy = vm.busy_until
 
         # COMPUTE (straggler factor scales the delay per rank)
         is_comp = opc == OP["COMPUTE"]
         busy = jnp.where(
-            enter & is_comp, t + a0.astype(jnp.float32) * job_slow[ji], busy
+            enter & is_comp,
+            t[:, None, None] + a0.astype(jnp.float32) * jt.slowdown, busy,
         )
 
         # P2P / IP2P
         is_p2p = (opc == OP["P2P"]) | (opc == OP["IP2P"])
         send_p2p = is_p2p & (ranks == a0)
-        dst = dst.at[:, 0].set(jnp.where(send_p2p, a1, dst[:, 0]))
+        dst = dst.at[..., 0].set(jnp.where(send_p2p, a1, dst[..., 0]))
         size = jnp.where(send_p2p, a2.astype(jnp.float32), size)
         send_inc = send_inc + send_p2p.astype(jnp.int32)
         recv_inc = recv_inc + (is_p2p & (ranks == a1)).astype(jnp.int32)
@@ -232,7 +417,7 @@ def build_engine(
         # GATHER (root a0, size a1)
         is_gather = opc == OP["GATHER"]
         send_g = is_gather & (ranks != a0)
-        dst = dst.at[:, 0].set(jnp.where(send_g, a0, dst[:, 0]))
+        dst = dst.at[..., 0].set(jnp.where(send_g, a0, dst[..., 0]))
         size = jnp.where(send_g, a1.astype(jnp.float32), size)
         send_inc = send_inc + send_g.astype(jnp.int32)
         recv_inc = recv_inc + jnp.where(is_gather & (ranks == a0), P - 1, 0)
@@ -240,32 +425,35 @@ def build_engine(
         # SCATTER (root a0, size a1), MAXE targets per round
         is_scat = opc == OP["SCATTER"]
         base = vm.rnd * MAXE
-        tgt = base[:, None] + jnp.arange(MAXE, dtype=jnp.int32)[None, :]
-        tgt = tgt + (tgt >= a0[:, None])  # skip root
-        valid_s = is_scat[:, None] & (ranks == a0)[:, None] & (tgt < P)
+        tgt = base[..., None] + jnp.arange(MAXE, dtype=jnp.int32)
+        tgt = tgt + (tgt >= a0[..., None])  # skip root
+        valid_s = (
+            is_scat[..., None] & (ranks == a0)[..., None] & (tgt < P[..., None])
+        )
         dst = jnp.where(valid_s, tgt, dst)
         size = jnp.where(is_scat & (ranks == a0), a1.astype(jnp.float32), size)
         send_inc = send_inc + jnp.where(
-            is_scat & (ranks == a0), valid_s.sum(1).astype(jnp.int32), 0
+            is_scat & (ranks == a0), valid_s.sum(-1).astype(jnp.int32), 0
         )
         recv_first = is_scat & (ranks != a0) & (vm.rnd == 0)
         recv_inc = recv_inc + recv_first.astype(jnp.int32)
 
         # XCHG (size a0, ndims a1, dims g): one round, 2*ndims neighbors
         is_x = opc == OP["XCHG"]
-        dims = jnp.maximum(g, 1)  # (P,4)
+        dims = jnp.maximum(g, 1)  # (B, J, Pmax, 4)
         stride = jnp.concatenate(
-            [jnp.ones((P, 1), jnp.int32), jnp.cumprod(dims[:, :3], axis=1)], axis=1
+            [jnp.ones_like(dims[..., :1]), jnp.cumprod(dims[..., :3], axis=-1)],
+            axis=-1,
         )
-        coord = (ranks[:, None] // stride) % dims  # (P,4)
+        coord = (ranks[..., None] // stride) % dims
         for d in range(4):
             for s, dirn in ((2 * d, 1), (2 * d + 1, -1)):
                 if s >= MAXE:
                     continue
-                nb_c = (coord[:, d] + dirn) % dims[:, d]
-                nb = ranks + (nb_c - coord[:, d]) * stride[:, d]
+                nb_c = (coord[..., d] + dirn) % dims[..., d]
+                nb = ranks + (nb_c - coord[..., d]) * stride[..., d]
                 use = is_x & (d < a1)
-                dst = dst.at[:, s].set(jnp.where(use, nb, dst[:, s]))
+                dst = dst.at[..., s].set(jnp.where(use, nb, dst[..., s]))
         size = jnp.where(is_x, a0.astype(jnp.float32), size)
         nmsg = 2 * jnp.minimum(a1, 4)
         send_inc = send_inc + jnp.where(is_x, nmsg, 0)
@@ -278,7 +466,7 @@ def build_engine(
         ring = is_ar & big
         nb_ring = (ranks + 1) % P
         sz_ring = jnp.ceil(a0.astype(jnp.float32) / P)
-        dst = dst.at[:, 0].set(jnp.where(ring, nb_ring, dst[:, 0]))
+        dst = dst.at[..., 0].set(jnp.where(ring, nb_ring, dst[..., 0]))
         size = jnp.where(ring, sz_ring, size)
         send_inc = send_inc + ring.astype(jnp.int32)
         recv_inc = recv_inc + ring.astype(jnp.int32)
@@ -286,7 +474,7 @@ def build_engine(
         rd = (is_ar & ~big) | is_bar
         peer = ranks ^ (1 << jnp.minimum(vm.rnd, 30))
         rd_ok = rd & (peer < P)
-        dst = dst.at[:, 0].set(jnp.where(rd_ok, peer, dst[:, 0]))
+        dst = dst.at[..., 0].set(jnp.where(rd_ok, peer, dst[..., 0]))
         size = jnp.where(rd_ok, jnp.maximum(a0.astype(jnp.float32), 8.0), size)
         send_inc = send_inc + rd_ok.astype(jnp.int32)
         recv_inc = recv_inc + rd_ok.astype(jnp.int32)
@@ -297,14 +485,14 @@ def build_engine(
         pow2 = 1 << jnp.minimum(vm.rnd, 30)
         bc_send = is_bc & (rel < pow2) & (rel + pow2 < P)
         bc_dst = (rel + pow2 + a0) % P
-        dst = dst.at[:, 0].set(jnp.where(bc_send, bc_dst, dst[:, 0]))
+        dst = dst.at[..., 0].set(jnp.where(bc_send, bc_dst, dst[..., 0]))
         size = jnp.where(bc_send, a1.astype(jnp.float32), size)
         send_inc = send_inc + bc_send.astype(jnp.int32)
         bc_recv = is_bc & (rel >= pow2) & (rel < 2 * pow2)
         recv_inc = recv_inc + bc_recv.astype(jnp.int32)
 
         # apply entry
-        dst = jnp.where(enter[:, None], dst, -1)
+        dst = jnp.where(enter[..., None], dst, -1)
         vm = vm._replace(
             emitted=vm.emitted | enter,
             busy_until=busy,
@@ -314,275 +502,343 @@ def build_engine(
         return vm, dst, size
 
     # ------------------------------------------------------------------
-    # pool allocation
+    # pool allocation: one flat batch of candidates per member
     # ------------------------------------------------------------------
-    def inject(pool: PoolState, metrics: Metrics, rng, t, src_ranks, dst_ranks,
-               dsts_node, srcs_node, sizes, app_id, link_demand):
-        """Allocate + route a flat batch of candidate messages (mask: dst>=0)."""
+    def inject(pool: PoolState, metrics: Metrics, t, src_ranks, dst_ranks,
+               dsts_node, srcs_node, sizes, app_id, rand, demand,
+               job_of_cand=None):
+        """Allocate + route a flat batch of candidate messages (mask:
+        dst>=0), batched over members.
+
+        All per-candidate args are (B, n); ``rand`` carries the per-job rng
+        schedule so the draw stream matches a per-job sequential injection.
+        ``job_of_cand`` (n,) groups candidates per app for the peak-inject
+        metric (None: the whole call is one app).
+        """
+        B, n = dst_ranks.shape
         mask = dst_ranks >= 0
-        k = jnp.cumsum(mask.astype(jnp.int32)) - 1  # emission order
-        n = mask.sum()
-        can = (k < pool.free_top) & mask
-        slot = pool.free_stack[jnp.maximum(pool.free_top - 1 - k, 0)]
+        k = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # emission order
+        n_emit = mask.sum(axis=1)  # (B,)
+        can = (k < pool.free_top[:, None]) & mask
+        slot_pos = jnp.clip(pool.free_top[:, None] - 1 - k, 0, M - 1)
+        slot = jnp.take_along_axis(pool.free_stack, slot_pos, axis=1)
         slot = jnp.where(can, slot, M)  # M = dummy row
 
-        rand = _hash(rng + jnp.arange(mask.shape[0], dtype=jnp.uint32))
+        demand_f = demand.reshape(-1)  # (B * (L+1),)
+        offs = jnp.repeat(jnp.arange(B, dtype=jnp.int32) * (L + 1), n)
         routes, hops = compute_routes(
-            T, srcs_node, dsts_node, rand.astype(jnp.int32) & 0x7FFFFFFF,
-            link_demand, adaptive,
+            T, srcs_node.reshape(-1), dsts_node.reshape(-1),
+            rand.reshape(-1).astype(jnp.int32) & 0x7FFFFFFF,
+            demand_f, adaptive, demand_offsets=offs,
         )
+        routes = routes.reshape(B, n, -1)
+        hops = hops.reshape(B, n)
 
-        def sc(arr, val):
-            return arr.at[slot].set(jnp.where(can, val, arr[jnp.minimum(slot, M - 1)]), mode="drop")
-
-        active = pool.active.at[slot].set(True, mode="drop")
-        src_rank = pool.src_rank.at[slot].set(src_ranks, mode="drop")
-        dst_rank = pool.dst_rank.at[slot].set(dst_ranks, mode="drop")
-        job = pool.job.at[slot].set(app_id, mode="drop")
-        size_a = pool.size.at[slot].set(sizes, mode="drop")
-        rem = pool.bytes_rem.at[slot].set(sizes, mode="drop")
-        inj = pool.inject_t.at[slot].set(t, mode="drop")
-        mina = pool.min_arrive.at[slot].set(
-            t + hops.astype(jnp.float32) * net.hop_latency_us, mode="drop"
+        active = _flat_set(pool.active, slot, True, valid=can)
+        src_rank = _flat_set(pool.src_rank, slot, src_ranks, valid=can)
+        dst_rank = _flat_set(pool.dst_rank, slot, dst_ranks, valid=can)
+        job = _flat_set(pool.job, slot, app_id, valid=can)
+        size_a = _flat_set(pool.size, slot, sizes, valid=can)
+        rem = _flat_set(pool.bytes_rem, slot, sizes, valid=can)
+        inj = _flat_set(pool.inject_t, slot, t[:, None], valid=can)
+        mina = _flat_set(
+            pool.min_arrive, slot,
+            t[:, None] + hops.astype(jnp.float32) * net.hop_latency_us,
+            valid=can,
         )
-        rts = pool.routes.at[slot].set(routes, mode="drop")
+        # route rows: scatter whole (K,) rows per slot
+        rts_flat = pool.routes.reshape(B * M, -1)
+        row_idx = slot + (jnp.arange(B, dtype=jnp.int32) * M)[:, None]
+        row_idx = jnp.where(can, row_idx, B * M)
+        rts = rts_flat.at[row_idx.reshape(-1)].set(
+            routes.reshape(B * n, -1), mode="drop"
+        ).reshape(pool.routes.shape)
 
-        n_alloc = jnp.minimum(n, pool.free_top)
+        n_alloc = jnp.minimum(n_emit, pool.free_top)
         pool = pool._replace(
             active=active, src_rank=src_rank, dst_rank=dst_rank, job=job,
             size=size_a, bytes_rem=rem, inject_t=inj, min_arrive=mina,
             routes=rts, free_top=pool.free_top - n_alloc,
-            dropped=pool.dropped + (n - n_alloc),
+            dropped=pool.dropped + (n_emit - n_alloc),
         )
-        inj_bytes = jnp.sum(jnp.where(can, sizes, 0.0))
+        inj_bytes = jnp.where(can, sizes, 0.0)
+        if job_of_cand is not None:
+            # per-app bytes this tick (candidates are job-major blocks)
+            per_job = inj_bytes.reshape(B, J, -1).sum(axis=2)
+            peak = jnp.max(per_job, axis=1)
+        else:
+            peak = inj_bytes.sum(axis=1)
         metrics = metrics._replace(
-            peak_inject=jnp.maximum(metrics.peak_inject, inj_bytes)
+            peak_inject=jnp.maximum(metrics.peak_inject, peak)
         )
-        return pool, metrics, rng + jnp.uint32(mask.shape[0])
+        return pool, metrics
 
     # ------------------------------------------------------------------
-    # the tick
+    # the tick (batched: every leaf carries the member dim B)
     # ------------------------------------------------------------------
-    LOGP = {ji: max(1, math.ceil(math.log2(max(P, 2)))) for ji, P in enumerate(job_P)}
+    def _n_rounds(opc, a0, a1, P, logp):
+        ring = opc == OP["ALLREDUCE"]
+        big = a0 >= 4096
+        return jnp.where(
+            ring, jnp.where(big, 2 * (P - 1), logp),
+            jnp.where(
+                (opc == OP["BCAST"]) | (opc == OP["BARRIER"]), logp,
+                jnp.where(opc == OP["SCATTER"], (P - 2) // MAXE + 1, 1),
+            ),
+        )
 
-    def tick(state: SimState) -> SimState:
-        t = state.t
+    def tick_batched(state: SimState) -> SimState:
+        jt = state.jobs
+        t = state.t  # (B,)
+        B = t.shape[0]
         pool, metrics, rng = state.pool, state.metrics, state.rng
-
-        # --- current link demand (outstanding bytes per link) ---
-        valid = (pool.routes >= 0) & pool.active[:, None]
-        lidx = jnp.where(valid, pool.routes, L)  # dummy L
-        demand = jnp.zeros((L + 1,), jnp.float32).at[lidx].add(
-            jnp.broadcast_to(pool.bytes_rem[:, None], lidx.shape) * valid
+        # per-member freeze mask: finished / horizon-capped members must not
+        # mutate (bit-identity with their own B=1 run). The mask is threaded
+        # through every write instead of double-buffering the whole state —
+        # a full-state select per tick is what made batching memory-bound.
+        live_m = (t < horizon_us) & ~(
+            jnp.all(state.vms.done, axis=(1, 2))
+            & ~jnp.any(pool.active, axis=1)
         )
-        # failed links: infinite demand steers adaptive routes around them
-        demand = demand.at[:L].add(jnp.where(link_ok, 0.0, 1e18))
 
-        # --- 1. VM entry + emission + injection ---
-        vms = list(state.vms)
-        for ji in range(len(jobs)):
-            vm = vms[ji]
-            vm, dst, sizes = vm_emit(ji, vm, t, state.job_start[ji])
-            any_emit = jnp.any(dst >= 0)
-            r2n = state.r2n[ji]
+        # --- 1. VM entry + emission + injection (one stacked pass) ---
+        vms, dst, sizes = vm_emit(jt, state.vms, t, live_m)
+        fired = jnp.any(dst >= 0, axis=(2, 3))  # (B, J)
 
-            def do_inject(args, r2n=r2n, dst=dst, sizes=sizes, ji=ji):
-                pool, metrics, rng = args
-                P = job_P[ji]
-                flat_dst = dst.reshape(-1)
-                src_ranks = jnp.repeat(jnp.arange(P, dtype=jnp.int32), MAXE)
-                sizes_f = jnp.repeat(sizes, MAXE)
-                srcs_node = r2n[src_ranks]
-                dsts_node = r2n[jnp.maximum(flat_dst, 0)]
-                return inject(pool, metrics, rng, t, src_ranks, flat_dst,
-                              dsts_node, srcs_node, sizes_f, ji, demand)
+        # per-job rng offsets reproduce the per-job-loop draw schedule:
+        # each *fired* job advanced the stream by its P*MAXE candidates.
+        adv = (
+            (jt.P * MAXE).astype(jnp.uint32) * fired.astype(jnp.uint32)
+        )  # (B, J)
+        base = rng[:, None] + jnp.cumsum(adv, axis=1) - adv  # exclusive
+        rng_jobs = rng + jnp.sum(adv, axis=1)
 
-            pool, metrics, rng = jax.lax.cond(
-                any_emit, do_inject, lambda a: a, (pool, metrics, rng)
-            )
-            vms[ji] = vm
+        dst_f = dst.reshape(B, N)
+        sizes_f = jnp.broadcast_to(
+            sizes[:, :, :, None], (B, J, Pmax, MAXE)
+        ).reshape(B, N)
+        r2n_f = jt.r2n.reshape(B, J * Pmax)
+        srcs_node = r2n_f[:, cand_job_j * Pmax + cand_rank_j]
+        dst_node_idx = cand_job_j[None, :] * Pmax + jnp.maximum(dst_f, 0)
+        dsts_node = jnp.take_along_axis(r2n_f, dst_node_idx, axis=1)
+        rand = _hash(base[:, cand_job_j] + cand_local_j[None, :])
 
-        # UR background traffic
         ur_state = state.ur
+        rng2 = rng_jobs
+        any_inject = jnp.any(fired)
         if ur_state is not None:
-            fire = t >= ur_state.next_t
-            Pu = ur_r2n.shape[0]
+            fire = (t[:, None] >= ur_state.next_t) & live_m[:, None]  # (B,Pu)
             rnd = _hash(
                 ur_state.count.astype(jnp.uint32) * jnp.uint32(9781)
-                + jnp.arange(Pu, dtype=jnp.uint32) + rng
+                + jnp.arange(Pu, dtype=jnp.uint32)[None, :]
+                + rng_jobs[:, None]
             )
             dstn = (rnd % jnp.uint32(T.n_nodes)).astype(jnp.int32)
+            ur_rand = _hash(
+                rng_jobs[:, None] + jnp.arange(Pu, dtype=jnp.uint32)[None, :]
+            )
+            any_inject = any_inject | jnp.any(fire)
 
-            def do_ur(args):
-                pool, metrics, rng = args
-                return inject(
-                    pool, metrics, rng, t,
-                    jnp.arange(Pu, dtype=jnp.int32),
+        # injection hides behind one real cond over the whole batch:
+        # pure-drain ticks (the majority) skip the demand scatter AND all
+        # route computation. Inside, non-emitting members'/jobs' candidates
+        # are fully masked, so taking the branch for them is a bit-exact
+        # no-op (rng schedules are handled outside via ``fired``).
+        def do_inject(args):
+            pool, metrics = args
+            # link demand (outstanding bytes per link) from the
+            # PRE-injection pool — the job pass and the UR pass both route
+            # against this same snapshot (the historical tick-start value).
+            valid = (pool.routes >= 0) & pool.active[:, :, None]
+            lidx = jnp.where(valid, pool.routes, L)  # dummy L
+            demand = _flat_add(
+                jnp.zeros((B, L + 1), jnp.float32), lidx,
+                jnp.broadcast_to(pool.bytes_rem[:, :, None], lidx.shape)
+                * valid,
+            )
+            # failed links: infinite demand steers adaptive routes around
+            demand = demand.at[:, :L].add(jnp.where(link_ok, 0.0, 1e18))
+
+            pool, metrics = inject(
+                pool, metrics, t,
+                jnp.broadcast_to(cand_rank_j, (B, N)), dst_f,
+                dsts_node, srcs_node, sizes_f,
+                jnp.broadcast_to(cand_job_j, (B, N)), rand, demand,
+                job_of_cand=cand_job_j,
+            )
+            if ur_state is not None:
+                pool, metrics = inject(
+                    pool, metrics, t,
+                    jnp.broadcast_to(jnp.arange(Pu, dtype=jnp.int32), (B, Pu)),
                     jnp.where(fire, 0, -1),  # dst_rank 0 marker (not tracked)
                     dstn, state.ur_nodes,
-                    jnp.full((Pu,), float(ur.size_bytes), jnp.float32),
-                    len(jobs), demand,
+                    jnp.full((B, Pu), float(ur.size_bytes), jnp.float32),
+                    jnp.full((B, Pu), J, jnp.int32), ur_rand, demand,
                 )
+            return pool, metrics
 
-            pool, metrics, rng = jax.lax.cond(
-                jnp.any(fire), do_ur, lambda a: a, (pool, metrics, rng)
+        pool, metrics = jax.lax.cond(
+            any_inject, do_inject, lambda a: a, (pool, metrics)
+        )
+
+        if ur_state is not None:
+            rng2 = rng_jobs + jnp.uint32(Pu) * jnp.any(fire, axis=1).astype(
+                jnp.uint32
             )
             ur_state = URState(
-                next_t=jnp.where(fire, ur_state.next_t + ur.interval_us, ur_state.next_t),
+                next_t=jnp.where(
+                    fire, ur_state.next_t + ur.interval_us, ur_state.next_t
+                ),
                 count=ur_state.count + fire.astype(jnp.int32),
             )
 
-        # --- 2. network drain (fluid fair share) ---
-        valid = (pool.routes >= 0) & pool.active[:, None]
-        lidx = jnp.where(valid, pool.routes, L)
-        n_l = jnp.zeros((L + 1,), jnp.float32).at[lidx].add(valid.astype(jnp.float32))
-        bw = jnp.concatenate(
-            [jnp.where(link_ok, T.link_bw, 0.0), jnp.ones((1,), jnp.float32)]
+        # --- 2-3. fused drain tick: demand -> fair share -> drain ->
+        # delivery, plus per-link byte counters (kernels/drain_tick.py) ---
+        new_rem, _rate, delivered, lb_delta, rw_delta = KOPS.drain_tick(
+            pool.routes, pool.bytes_rem, pool.active, pool.job,
+            pool.min_arrive, t, jnp.float32(dt), bw_eff, link_dstr,
+            n_apps=n_apps, n_routers=R, use_pallas=use_pallas,
+            interpret=kernel_interpret,
         )
-        share = bw / jnp.maximum(n_l, 1.0) * 1e-6  # bytes per us
-        per_link_rate = jnp.where(valid, share[lidx], jnp.inf)
-        rate = jnp.min(per_link_rate, axis=1)
-        rate = jnp.where(pool.active & jnp.isfinite(rate), rate, 0.0)
-        drain = jnp.minimum(rate * dt, pool.bytes_rem)
-        new_rem = pool.bytes_rem - drain
+        # horizon-frozen members may still carry in-flight messages: their
+        # drain results are discarded (the freeze in place of a state select)
+        new_rem = jnp.where(live_m[:, None], new_rem, pool.bytes_rem)
+        delivered = delivered & live_m[:, None]
+        link_bytes = metrics.link_bytes + lb_delta * live_m[:, None]
+        router_win = metrics.router_win + rw_delta * live_m[:, None, None]
 
-        # per-link traffic accounting (paper router counters + Table VI)
-        drain_b = jnp.where(valid, drain[:, None], 0.0)
-        link_bytes = metrics.link_bytes.at[lidx].add(drain_b)
-        appidx = jnp.broadcast_to(pool.job[:, None], lidx.shape)
-        rtr = link_dstr[lidx]
-        router_win = metrics.router_win.at[appidx, rtr].add(drain_b)
-
-        delivered = pool.active & (new_rem <= 1e-6) & (t >= pool.min_arrive)
-
-        # --- 3. latency metrics ---
-        lat = t + dt - pool.inject_t  # delivered at end of tick
+        # --- latency metrics ---
+        lat = (t[:, None] + dt) - pool.inject_t  # delivered at end of tick
         ratio = math.log(net.latency_hist_ratio)
         bins = jnp.clip(
             (jnp.log(jnp.maximum(lat / net.latency_hist_lo_us, 1e-6)) / ratio),
             0, BINS - 1,
         ).astype(jnp.int32)
         app_of = pool.job
-        lat_hist = metrics.lat_hist.at[
-            jnp.where(delivered, app_of, 0), jnp.where(delivered, bins, 0)
-        ].add(delivered.astype(jnp.int32))
-        lat_sum = metrics.lat_sum.at[app_of].add(jnp.where(delivered, lat, 0.0))
-        lat_cnt = metrics.lat_cnt.at[app_of].add(delivered.astype(jnp.int32))
-        lat_min = metrics.lat_min.at[app_of].min(jnp.where(delivered, lat, jnp.inf))
-        lat_max = metrics.lat_max.at[app_of].max(jnp.where(delivered, lat, -jnp.inf))
+        d32 = delivered.astype(jnp.int32)
+        lat_hist = _flat_add(
+            metrics.lat_hist,
+            jnp.where(delivered, app_of, 0) * BINS + jnp.where(delivered, bins, 0),
+            d32,
+        )
+        lat_sum = _flat_add(metrics.lat_sum, app_of, jnp.where(delivered, lat, 0.0))
+        lat_cnt = _flat_add(metrics.lat_cnt, app_of, d32)
+        lat_min = _flat_min(metrics.lat_min, app_of, jnp.where(delivered, lat, jnp.inf))
+        lat_max = _flat_max(metrics.lat_max, app_of, jnp.where(delivered, lat, -jnp.inf))
 
-        # --- 4. delivery notifications -> VMs ---
-        for ji in range(len(jobs)):
-            vm = vms[ji]
-            is_job = delivered & (pool.job == ji)
-            sd = vm.send_done.at[jnp.where(is_job, pool.src_rank, 0)].add(
-                is_job.astype(jnp.int32)
-            )
-            rd = vm.recv_done.at[jnp.where(is_job, pool.dst_rank, 0)].add(
-                is_job.astype(jnp.int32)
-            )
-            vms[ji] = vm._replace(send_done=sd, recv_done=rd)
+        # --- 4. delivery notifications -> VMs (UR id J is dropped) ---
+        notify = delivered & (pool.job < J)
+        sd = _flat_add(
+            vms.send_done, pool.job * Pmax + pool.src_rank,
+            notify.astype(jnp.int32), valid=notify,
+        )
+        rd = _flat_add(
+            vms.recv_done, pool.job * Pmax + pool.dst_rank,
+            notify.astype(jnp.int32), valid=notify,
+        )
+        vms = vms._replace(send_done=sd, recv_done=rd)
 
         # free delivered slots
         freed = delivered
-        kf = jnp.cumsum(freed.astype(jnp.int32)) - 1
-        pos = pool.free_top + kf
-        free_stack = pool.free_stack.at[jnp.where(freed, pos, M)].set(
-            jnp.arange(M, dtype=jnp.int32), mode="drop"
+        kf = jnp.cumsum(freed.astype(jnp.int32), axis=1) - 1
+        pos = pool.free_top[:, None] + kf
+        free_stack = _flat_set(
+            pool.free_stack, pos,
+            jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (B, M)),
+            valid=freed,
         )
         pool = pool._replace(
             active=pool.active & ~delivered,
             bytes_rem=new_rem,
             free_stack=free_stack,
-            free_top=pool.free_top + freed.sum(),
+            free_top=pool.free_top + freed.sum(axis=1),
         )
 
-        # --- 5. VM completion / advance ---
-        for ji in range(len(jobs)):
-            vm = vms[ji]
-            ops = job_ops[ji]
-            P = job_P[ji]
-            row = ops[vm.pc]
-            opc, a0, a1 = row[:, 0], row[:, 1], row[:, 2]
-            nr = _n_rounds(opc, a0, a1, P)
-            ready = vm.emitted & ~vm.done & (t + dt >= vm.busy_until)
-            sat = (vm.send_done >= vm.send_need) & (vm.recv_done >= vm.recv_need)
-            # IP2P / LOG / RESET never block; COMPUTE blocks on busy only
-            nonblock = (
-                (opc == OP["IP2P"]) | (opc == OP["LOG"]) | (opc == OP["RESET"])
-                | (opc == OP["COMPUTE"])
-            )
-            complete = ready & (sat | nonblock)
-            is_comm = ~(
-                (opc == OP["COMPUTE"]) | (opc == OP["LOG"]) | (opc == OP["RESET"])
-                | (opc == OP["END"])
-            )
-            blocked = vm.emitted & ~vm.done & ~complete & (t + dt >= vm.busy_until) & is_comm
-            comm_time = vm.comm_time + jnp.where(blocked, dt, 0.0)
+        # --- 5. VM completion / advance (one stacked pass) ---
+        row = jnp.take_along_axis(jt.ops, vms.pc[:, :, :, None], axis=2)
+        opc, a0, a1 = row[..., 0], row[..., 1], row[..., 2]
+        P = jt.P[:, :, None]
+        nr = _n_rounds(opc, a0, a1, P, jt.logp[:, :, None])
+        tdt = t[:, None, None] + dt
+        ready = vms.emitted & ~vms.done & (tdt >= vms.busy_until)
+        sat = (vms.send_done >= vms.send_need) & (vms.recv_done >= vms.recv_need)
+        # IP2P / LOG / RESET never block; COMPUTE blocks on busy only
+        nonblock = (
+            (opc == OP["IP2P"]) | (opc == OP["LOG"]) | (opc == OP["RESET"])
+            | (opc == OP["COMPUTE"])
+        )
+        complete = ready & (sat | nonblock) & live_m[:, None, None]
+        is_comm = ~(
+            (opc == OP["COMPUTE"]) | (opc == OP["LOG"]) | (opc == OP["RESET"])
+            | (opc == OP["END"])
+        )
+        blocked = (
+            vms.emitted & ~vms.done & ~complete & (tdt >= vms.busy_until)
+            & is_comm & live_m[:, None, None]
+        )
+        comm_time = vms.comm_time + jnp.where(blocked, dt, 0.0)
 
-            rnd2 = jnp.where(complete, vm.rnd + 1, vm.rnd)
-            advance = complete & (rnd2 >= nr)
-            pc2 = jnp.where(advance, vm.pc + 1, vm.pc)
-            rnd2 = jnp.where(advance, 0, rnd2)
-            emitted2 = vm.emitted & ~complete
-            opc_next = ops[pc2][:, 0]
-            done2 = vm.done | (opc_next == OP["END"])
-            vms[ji] = vm._replace(
-                pc=pc2, rnd=rnd2, emitted=emitted2, done=done2, comm_time=comm_time
-            )
+        rnd2 = jnp.where(complete, vms.rnd + 1, vms.rnd)
+        advance = complete & (rnd2 >= nr)
+        pc2 = jnp.where(advance, vms.pc + 1, vms.pc)
+        rnd2 = jnp.where(advance, 0, rnd2)
+        emitted2 = vms.emitted & ~complete
+        opc_next = jnp.take_along_axis(jt.ops, pc2[:, :, :, None], axis=2)[..., 0]
+        done2 = vms.done | (opc_next == OP["END"])
+        vms = vms._replace(
+            pc=pc2, rnd=rnd2, emitted=emitted2, done=done2, comm_time=comm_time
+        )
 
-        # --- 6. window rotation ---
+        # --- 6. window rotation (per member) ---
         win_t = jnp.floor((t + dt) / net.window_us).astype(jnp.int32)
-        rotate = win_t > metrics.win_idx
-
-        def do_rotate(m: Metrics):
-            wi = jnp.minimum(m.win_idx, W - 1)
-            return m._replace(
-                router_wins=m.router_wins.at[wi].set(m.router_win),
-                router_win=jnp.zeros_like(m.router_win),
-                win_idx=m.win_idx + 1,
-            )
+        rotate = (win_t > metrics.win_idx) & live_m  # (B,)
+        wi = jnp.minimum(metrics.win_idx, W - 1)
+        wins_flat = metrics.router_wins.reshape(B * W, n_apps, R)
+        wrow = jnp.where(rotate, wi + jnp.arange(B, dtype=jnp.int32) * W, B * W)
+        router_wins = wins_flat.at[wrow].set(
+            router_win, mode="drop"
+        ).reshape(metrics.router_wins.shape)
+        router_win = jnp.where(rotate[:, None, None], 0.0, router_win)
+        win_idx = metrics.win_idx + rotate.astype(jnp.int32)
 
         metrics = metrics._replace(
             lat_hist=lat_hist, lat_sum=lat_sum, lat_cnt=lat_cnt,
             lat_min=lat_min, lat_max=lat_max,
             link_bytes=link_bytes, router_win=router_win,
+            router_wins=router_wins, win_idx=win_idx,
         )
-        metrics = jax.lax.cond(rotate, do_rotate, lambda m: m, metrics)
 
         # --- 7. event-driven time skip (PDES hybrid): when the network is
-        # empty and every live rank is inside a COMPUTE delay (or its job has
-        # not arrived yet), jump straight to the earliest wake-up (clamped to
+        # empty and every live rank is inside a COMPUTE delay (or its job
+        # has not arrived yet), jump to the earliest wake-up (clamped to
         # the next metrics window).
-        any_active = jnp.any(pool.active)
-        can_act = jnp.bool_(False)
-        min_busy = jnp.float32(jnp.inf)
-        for ji, vm in enumerate(vms):
-            start = state.job_start[ji]
-            started = t >= start
-            live = ~vm.done
-            can_act = can_act | (started & jnp.any(live & ~vm.emitted))
-            waiting_busy = live & vm.emitted & (vm.busy_until > t + dt)
-            can_act = can_act | jnp.any(live & vm.emitted & (vm.busy_until <= t + dt))
-            min_busy = jnp.minimum(
-                min_busy, jnp.min(jnp.where(waiting_busy, vm.busy_until, jnp.inf))
-            )
-            # a job still pending arrival wakes the sim at its start time
-            min_busy = jnp.minimum(
-                min_busy,
-                jnp.where(~started & jnp.any(live), start, jnp.float32(jnp.inf)),
-            )
+        any_active = jnp.any(pool.active, axis=1)  # (B,)
+        started = t[:, None] >= jt.start  # (B, J)
+        live_r = ~vms.done
+        can_act = jnp.any(
+            started[:, :, None] & live_r & ~vms.emitted, axis=(1, 2)
+        ) | jnp.any(live_r & vms.emitted & (vms.busy_until <= tdt), axis=(1, 2))
+        waiting_busy = live_r & vms.emitted & (vms.busy_until > tdt)
+        min_busy = jnp.min(
+            jnp.where(waiting_busy, vms.busy_until, jnp.inf), axis=(1, 2)
+        )
+        # a job still pending arrival wakes the sim at its start time
+        pend = ~started & jnp.any(live_r, axis=2)
+        min_busy = jnp.minimum(
+            min_busy, jnp.min(jnp.where(pend, jt.start, jnp.inf), axis=1)
+        )
         if ur_state is not None:
-            min_busy = jnp.minimum(min_busy, jnp.min(ur_state.next_t))
-        next_window = (metrics.win_idx.astype(jnp.float32) + 1.0) * net.window_us
+            min_busy = jnp.minimum(min_busy, jnp.min(ur_state.next_t, axis=1))
+        next_window = (win_idx.astype(jnp.float32) + 1.0) * net.window_us
         skip_to = jnp.minimum(min_busy, next_window)
         idle = ~any_active & ~can_act & jnp.isfinite(skip_to)
         t_new = jnp.where(idle, jnp.maximum(t + dt, skip_to), t + dt)
 
         return SimState(
-            t=t_new, vms=tuple(vms), ur=ur_state, pool=pool,
-            metrics=metrics, rng=rng + jnp.uint32(1),
-            r2n=state.r2n, ur_nodes=state.ur_nodes, job_start=state.job_start,
+            t=jnp.where(live_m, t_new, t), vms=vms, ur=ur_state, pool=pool,
+            metrics=metrics,
+            rng=jnp.where(live_m, rng2 + jnp.uint32(1), rng),
+            jobs=jt, ur_nodes=state.ur_nodes,
         )
 
     # ------------------------------------------------------------------
@@ -590,50 +846,60 @@ def build_engine(
         seed: int = 1,
         placements: Optional[Sequence[np.ndarray]] = None,
         start_us: Optional[Sequence[float]] = None,
+        jobs_override: Optional[Sequence[JobSpec]] = None,
+        rank_slowdown_override: Optional[Sequence[np.ndarray]] = None,
     ) -> SimState:
-        """Build an initial state; the vmap-able knobs live here.
+        """Build one member's initial state; every vmap-able knob lives here.
 
-        ``placements`` (jobs' rank2node arrays, plus UR's as the final entry
-        when a UR source exists) overrides the build-time placements;
-        ``start_us`` overrides per-job arrival offsets; ``seed`` sets the
-        engine RNG (routing tiebreaks + UR destinations). Ensemble members
-        built from the same engine may differ in any of these.
+        ``placements`` (jobs' rank2node arrays, plus UR's as the final
+        entry when a UR source exists) overrides the build-time
+        placements; ``start_us`` overrides per-job arrival offsets;
+        ``seed`` sets the engine RNG (routing tiebreaks + UR
+        destinations); ``jobs_override`` swaps in a different job set that
+        fits the engine's capacity envelope (ragged campaigns). Stack
+        member states along a new leading axis and pass the batch straight
+        to ``run`` — one call simulates the whole ensemble.
         """
-        vms = []
-        for ji, j in enumerate(jobs):
-            P = job_P[ji]
-            z = lambda dt_=jnp.int32: jnp.zeros((P,), dt_)
-            vms.append(VMState(
-                pc=z(), rnd=z(), emitted=jnp.zeros((P,), bool),
-                busy_until=jnp.zeros((P,), jnp.float32),
-                send_need=z(), send_done=z(), recv_need=z(), recv_done=z(),
-                comm_time=jnp.zeros((P,), jnp.float32),
-                done=jnp.zeros((P,), bool),
-            ))
+        js = list(jobs_override) if jobs_override is not None else list(jobs)
+        slow = rank_slowdown_override
+        if slow is None and jobs_override is None:
+            slow = rank_slowdown
+        table = pack_jobs(
+            js, cap,
+            placements=placements[: len(js)] if placements is not None else None,
+            start_us=start_us,
+            job_start_us=job_start_us if jobs_override is None else None,
+            rank_slowdown=slow,
+        )
+        P_np = np.asarray(table.P)
+        ops_np = np.asarray(table.ops)
+        ranks = np.arange(Pmax, dtype=np.int32)[None, :]
+        done0 = (ranks >= P_np[:, None]) | (
+            ops_np[:, 0, 0] == OP["END"]
+        )[:, None]
+
+        def z(dt_=jnp.int32):
+            return jnp.zeros((J, Pmax), dt_)
+
+        vms = VMState(
+            pc=z(), rnd=z(), emitted=jnp.zeros((J, Pmax), bool),
+            busy_until=jnp.zeros((J, Pmax), jnp.float32),
+            send_need=z(), send_done=z(), recv_need=z(), recv_done=z(),
+            comm_time=jnp.zeros((J, Pmax), jnp.float32),
+            done=jnp.asarray(done0),
+        )
         ur_state = None
         ur_nodes = None
         if ur is not None:
-            Pu = ur.rank2node.shape[0]
             ur_state = URState(
                 next_t=jnp.full((Pu,), float(ur.start_us), jnp.float32),
                 count=jnp.zeros((Pu,), jnp.int32),
             )
             ur_nodes = (
-                jnp.asarray(placements[len(jobs)], jnp.int32)
-                if placements is not None and len(placements) > len(jobs)
+                jnp.asarray(placements[len(js)], jnp.int32)
+                if placements is not None and len(placements) > len(js)
                 else ur_r2n
             )
-        r2n = tuple(
-            jnp.asarray(placements[ji], jnp.int32)
-            if placements is not None
-            else job_r2n[ji]
-            for ji in range(len(jobs))
-        )
-        job_start = (
-            jnp.asarray(np.asarray(start_us, np.float32))
-            if start_us is not None
-            else jnp.asarray(default_start)
-        )
         pool = PoolState(
             active=jnp.zeros((M,), bool),
             src_rank=jnp.zeros((M,), jnp.int32),
@@ -661,29 +927,51 @@ def build_engine(
             peak_inject=jnp.float32(0.0),
         )
         return SimState(
-            t=jnp.float32(0.0), vms=tuple(vms), ur=ur_state, pool=pool,
+            t=jnp.float32(0.0), vms=vms, ur=ur_state, pool=pool,
             metrics=metrics, rng=jnp.uint32(seed),
-            r2n=r2n, ur_nodes=ur_nodes, job_start=job_start,
+            jobs=table, ur_nodes=ur_nodes,
         )
 
     def all_done(state: SimState):
-        d = jnp.bool_(True)
-        for vm in state.vms:
-            d = d & jnp.all(vm.done)
-        # also require in-flight messages to drain
-        return d & ~jnp.any(state.pool.active)
+        return jnp.all(state.vms.done, axis=(1, 2)) & ~jnp.any(
+            state.pool.active, axis=1
+        )
 
     def live(s: SimState):
         return (s.t < horizon_us) & ~all_done(s)
 
-    def guarded_tick(s: SimState) -> SimState:
-        # no-op once this member is done/at horizon: under vmap the while
-        # loop keeps stepping until *every* member finishes, and the guard
-        # keeps finished members bit-identical to a sequential run.
-        return jax.lax.cond(live(s), tick, lambda x: x, s)
-
+    # the batched while loop keeps stepping until *every* member finishes;
+    # tick_batched's live_m mask freezes finished members in place (no
+    # whole-state double-buffer select), keeping each bit-identical to its
+    # own B=1 run while stragglers tick on.
     @jax.jit
-    def run(state: SimState) -> SimState:
-        return jax.lax.while_loop(live, guarded_tick, state)
+    def run_batched(state: SimState) -> SimState:
+        return jax.lax.while_loop(
+            lambda s: jnp.any(live(s)), tick_batched, state
+        )
 
-    return init_state, run, tick
+    return init_state, _member_batched(run_batched), _member_batched(tick_batched)
+
+
+# ---------------------------------------------------------------------------
+# state accessors (the stacked layout's equivalent of the old per-job tuples)
+# ---------------------------------------------------------------------------
+
+def job_vm(state: SimState, ji: int) -> VMState:
+    """Job ``ji``'s VM state of a member state, trimmed to its real ranks."""
+    P = int(state.jobs.P[ji])
+    return VMState(*[np.asarray(x[ji])[:P] for x in state.vms])
+
+
+def job_done(state: SimState, ji: int) -> bool:
+    return bool(np.asarray(job_vm(state, ji).done).all())
+
+
+def member_state(batched_state: SimState, i: int) -> SimState:
+    """Unstack member ``i`` of a batched state."""
+    return jax.tree_util.tree_map(lambda x: x[i], batched_state)
+
+
+def stack_members(states: Sequence[SimState]) -> SimState:
+    """Stack member states into one batch (leading member dim)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)

@@ -13,7 +13,11 @@ from repro.netsim.topology import Dragonfly, KIND_GLOBAL, KIND_LOCAL
 
 def latency_summary(state, app_names: Sequence[str], net: NetConfig) -> Dict[str, Any]:
     """Per-app message latency stats (Fig. 7): min/avg/max + quartiles from
-    the geometric histogram."""
+    the geometric histogram.
+
+    ``app_names`` maps metric rows to names; ``None`` entries mark padded
+    capacity rows (ragged campaigns) and are skipped.
+    """
     m = state.metrics
     out = {}
     edges = net.latency_hist_lo_us * (
@@ -21,6 +25,8 @@ def latency_summary(state, app_names: Sequence[str], net: NetConfig) -> Dict[str
     )
     mids = np.sqrt(edges[:-1] * edges[1:])
     for i, name in enumerate(app_names):
+        if name is None:
+            continue
         cnt = int(m.lat_cnt[i])
         hist = np.asarray(m.lat_hist[i])
         if cnt == 0:
@@ -41,11 +47,20 @@ def latency_summary(state, app_names: Sequence[str], net: NetConfig) -> Dict[str
 
 
 def comm_time_summary(state, app_names: Sequence[str]) -> Dict[str, Any]:
-    """Per-app communication time (Fig. 9): max/avg over ranks, in ms."""
+    """Per-app communication time (Fig. 9): max/avg over ranks, in ms.
+
+    Jobs live in the stacked ``(J, Pmax)`` layout; each job's stats are
+    computed over its real ranks only (``state.jobs.P`` masks padding).
+    ``None`` names mark padded job rows and are skipped.
+    """
     out = {}
-    for i, vm in enumerate(state.vms):
-        ct = np.asarray(vm.comm_time) / 1000.0
-        out[app_names[i]] = dict(
+    P = np.asarray(state.jobs.P)
+    ct_all = np.asarray(state.vms.comm_time) / 1000.0  # (J, Pmax)
+    for ji, name in enumerate(app_names):
+        if ji >= ct_all.shape[0] or name is None:
+            continue
+        ct = ct_all[ji, : int(P[ji])]
+        out[name] = dict(
             max_ms=float(ct.max()), avg_ms=float(ct.mean()), min_ms=float(ct.min())
         )
     return out

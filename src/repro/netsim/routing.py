@@ -132,12 +132,13 @@ def _val_route(T: TopoArrays, src_node, dst_node, g_i, rand):
     return jnp.stack([ti, l1a, l1b, gl1, l2a, l2b, gl2, l3a, l3b, to])
 
 
-def _route_cost(T: TopoArrays, route, link_demand):
+def _route_cost(T: TopoArrays, route, link_demand, offset):
     """Congestion estimate: total outstanding bytes over the route's links,
-    normalized by bandwidth."""
+    normalized by bandwidth. ``offset`` shifts the demand gather so a
+    member-batched caller can pass one flattened (B*(L+1),) demand table."""
     valid = route >= 0
     idx = jnp.maximum(route, 0)
-    d = link_demand[idx] / T.link_bw[idx]
+    d = link_demand[idx + offset] / T.link_bw[idx]
     return jnp.sum(jnp.where(valid, d, 0.0))
 
 
@@ -146,10 +147,14 @@ def compute_routes(
     src_nodes: jnp.ndarray,  # (n,)
     dst_nodes: jnp.ndarray,
     rand: jnp.ndarray,  # (n,) uint32-ish per-message randomness
-    link_demand: jnp.ndarray,  # (L,) f32 outstanding bytes per link
+    link_demand: jnp.ndarray,  # (L,) f32 outstanding bytes per link (or a
+    #                            flattened (B*(L+1),) batch, see offsets)
     adaptive: bool,
+    demand_offsets: jnp.ndarray = None,  # (n,) int32 per-message row offset
 ):
     """Returns (routes (n, 10) int32, n_hops (n,))."""
+    if demand_offsets is None:
+        demand_offsets = jnp.zeros_like(src_nodes)
     min_r = jax.vmap(lambda s, d, r: _min_route(T, s, d, r))(src_nodes, dst_nodes, rand)
     if adaptive:
         g_s = (src_nodes // T.p) // T.a
@@ -162,8 +167,12 @@ def compute_routes(
         val_r = jax.vmap(lambda s, d, gi, r: _val_route(T, s, d, gi, r))(
             src_nodes, dst_nodes, g_i, rand
         )
-        cost_min = jax.vmap(lambda ro: _route_cost(T, ro, link_demand))(min_r)
-        cost_val = jax.vmap(lambda ro: _route_cost(T, ro, link_demand))(val_r)
+        cost_min = jax.vmap(lambda ro, of: _route_cost(T, ro, link_demand, of))(
+            min_r, demand_offsets
+        )
+        cost_val = jax.vmap(lambda ro, of: _route_cost(T, ro, link_demand, of))(
+            val_r, demand_offsets
+        )
         inter_group = g_s != g_d
         take_val = inter_group & (cost_min > 2.0 * cost_val + 1e-6)
         routes = jnp.where(take_val[:, None], val_r, min_r)

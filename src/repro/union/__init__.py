@@ -8,8 +8,8 @@ Union composes hybrid workloads and drives the network simulator:
 * :mod:`repro.union.manager` — resolves a Scenario into engine inputs
   (skeletons, placements, NetConfig) and runs a single member;
 * :mod:`repro.union.ensemble` — batches N ensemble members (seeds ×
-  placements × arrival jitter) of one scenario shape through a single
-  ``jax.vmap``'d engine, jitting once;
+  placements × arrival jitter × job sets) through one natively-batched
+  engine call; ragged campaigns bucket members by capacity envelope;
 * :mod:`repro.union.report` — aggregates per-member metrics into the
   paper's interference summary (latency variation for HPC apps,
   comm-time inflation for ML apps, baseline-vs-co-run deltas).
@@ -29,5 +29,9 @@ from repro.union.scenario import (  # noqa: F401
     mix_scenario,
 )
 from repro.union.manager import ResolvedScenario, resolve, run_scenario  # noqa: F401
-from repro.union.ensemble import CampaignResult, run_campaign  # noqa: F401
+from repro.union.ensemble import (  # noqa: F401
+    CampaignResult,
+    run_campaign,
+    run_ragged_campaign,
+)
 from repro.union.report import campaign_summary, interference_summary  # noqa: F401

@@ -45,8 +45,12 @@ def main(argv=None) -> None:
         description="Union workload manager: declarative scenarios, "
         "staggered arrivals, vmapped ensemble campaigns.",
     )
-    ap.add_argument("--scenario", required=True,
-                    help=f"scenario JSON file, or builtin: {sorted(MIXES)} / baseline-<app>")
+    ap.add_argument("--scenario", required=True, nargs="+",
+                    help=f"scenario JSON file(s), or builtin: {sorted(MIXES)}"
+                    " / baseline-<app>. More than one spec runs a *ragged*"
+                    " campaign: members with different job/rank counts,"
+                    " bucketed by engine envelope, one batched run per"
+                    " bucket.")
     ap.add_argument("--members", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sequential", action="store_true",
@@ -67,13 +71,44 @@ def main(argv=None) -> None:
                     help="write the resolved scenario spec to PATH and exit")
     args = ap.parse_args(argv)
 
-    sc = _apply_cli_overrides(load_scenario(args.scenario), args)
+    scenarios = [
+        _apply_cli_overrides(load_scenario(s), args) for s in args.scenario
+    ]
+    sc = scenarios[0]
     if args.emit:
         sc.to_json(args.emit)
         print(f"wrote scenario spec to {args.emit}")
         return
 
     os.makedirs(args.out, exist_ok=True)
+    if len(scenarios) > 1:
+        # ragged campaign: each scenario contributes --members members
+        # (seeds base_seed..base_seed+members-1), mixed shapes in one run.
+        if args.baselines or args.arrival_jitter_us:
+            ap.error("--baselines / --arrival-jitter-us are not supported "
+                     "with multiple scenarios (ragged campaigns); run the "
+                     "scenarios separately for baselines")
+        names = "+".join(s.name for s in scenarios)
+        print(f"=== ragged campaign: {names} × {args.members} members each "
+              f"({'batched' if not args.sequential else 'sequential'}) ===")
+        members = [s for s in scenarios for _ in range(args.members)]
+        seeds = [args.seed + i for s in scenarios for i in range(args.members)]
+        camp = ensemble.run_ragged_campaign(
+            members, seeds=seeds, base_seed=args.seed,
+            vmapped=not args.sequential, strict=args.strict,
+        )
+        print(REP.format_summary(camp.summary))
+        result: Dict = dict(
+            scenarios=[s.to_dict() for s in scenarios],
+            summary=camp.summary, members=camp.reports,
+        )
+        tag = f"ragged__{names}__m{args.members}_s{args.seed}"[:120]
+        path = os.path.join(args.out, tag + ".json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1, default=float)
+        print(f"wrote {path}")
+        return
+
     print(f"=== campaign: {sc.name} × {args.members} members "
           f"({'vmapped' if not args.sequential else 'sequential'}) ===")
     camp = ensemble.run_campaign(

@@ -1,12 +1,20 @@
-"""Ensemble campaigns: N members of one scenario shape through one vmap.
+"""Ensemble campaigns: N members through one batched engine call.
 
-Members share the scenario *shape* (same jobs, rank counts, topology,
-routing) but differ in placement draw and engine RNG — the paper's
-"many seeds × placements" sweep. The engine carries placements, seed,
-and arrival offsets in ``SimState``, so the whole campaign is a single
-``jax.vmap``'d ``run`` over a stacked state: one jit, N simulations.
+The stacked engine carries the *job set itself* as runtime data and gives
+every state leaf an explicit member dimension, so a campaign is just a
+stack of member states handed to one jitted ``run`` — no ``jax.vmap``
+wrapper, no per-shape re-trace. Members may differ in placement draw,
+engine RNG, arrival schedule, and (ragged campaigns) in their whole job
+list, as long as they fit the engine's capacity envelope
+``(Jmax, Pmax, OPmax)``.
 
-The guarded tick in the engine keeps each member's trajectory
+* :func:`run_campaign` — N members of one scenario (the paper's
+  "many seeds × placements" sweep).
+* :func:`run_ragged_campaign` — members drawn from *different* scenarios,
+  bucketed by compatible engine envelope (topology/net/routing/UR shape),
+  padded jobs are no-ops with ``start_us=inf``.
+
+The engine's per-member freeze keeps each member's trajectory
 bit-identical to a sequential ``run_scenario`` with the same seed
 (finished members stop mutating while stragglers tick on).
 """
@@ -14,45 +22,51 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
+from repro.netsim.engine import EngineCapacity, member_state, stack_members
 from repro.union import manager as MGR
 from repro.union.scenario import Scenario
 
 
-def _stack_states(states):
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
-
-
-def member_state(batched_state, i: int):
-    """Unstack member ``i`` of a batched final state."""
-    return jax.tree_util.tree_map(lambda x: x[i], batched_state)
-
-
 @dataclass
 class CampaignEngine:
-    """A compiled engine reusable across campaigns of one scenario shape.
+    """A compiled engine reusable across campaigns of one envelope.
 
-    Holds the jitted ``run`` and its jitted-vmapped counterpart so repeat
-    campaigns (different seeds, same shape) hit the jit cache instead of
-    re-tracing — ``jax.vmap(run)`` made fresh each call would not.
+    Holds the jitted ``run`` — batched natively, so the same engine
+    object serves both the one-call campaign path and the looped
+    (debug/bench) path from its single jit cache — plus a ``pmap``'d
+    variant that shards member batches across XLA devices (multiple CPU
+    host devices via ``--xla_force_host_platform_device_count``, or
+    accelerator cores).
     """
 
     rs: MGR.ResolvedScenario
     init: Callable
     run: Callable
-    vrun: Callable
+    capacity: EngineCapacity
+    _prun: Optional[Callable] = None
+
+    @property
+    def prun(self) -> Callable:
+        if self._prun is None:
+            self._prun = jax.pmap(self.run)
+        return self._prun
 
 
-def build_campaign_engine(scenario: Scenario, base_seed: int = 0) -> CampaignEngine:
+def build_campaign_engine(
+    scenario: Scenario,
+    base_seed: int = 0,
+    capacity: Optional[EngineCapacity] = None,
+) -> CampaignEngine:
     rs = MGR.resolve(scenario, seed=base_seed)
-    init, run, _ = MGR.build(rs)
-    return CampaignEngine(rs=rs, init=init, run=run, vrun=jax.jit(jax.vmap(run)))
+    cap = rs.capacity if capacity is None else capacity.union(rs.capacity)
+    init, run, _ = MGR.build(rs, capacity=cap)
+    return CampaignEngine(rs=rs, init=init, run=run, capacity=cap)
 
 
 @dataclass
@@ -60,7 +74,7 @@ class CampaignResult:
     scenario: Scenario
     members: int
     base_seed: int
-    vmapped: bool
+    vmapped: bool  # one batched engine call (vs a Python loop)
     wall_s: float
     reports: List[Dict] = field(default_factory=list)
     summary: Dict = field(default_factory=dict)
@@ -81,13 +95,15 @@ def run_campaign(
 ) -> CampaignResult:
     """Run ``members`` ensemble members; seeds are ``base_seed + i``.
 
-    ``arrival_jitter_us`` > 0 additionally staggers each member's job
-    arrivals by a deterministic per-(member, job) offset in
-    ``[0, arrival_jitter_us)`` on top of the scenario's ``start_us`` —
-    sampling the dynamic co-scheduling space.
+    ``vmapped=True`` stacks all member states and makes **one** batched
+    engine call; ``False`` loops members through the same engine
+    (debug/bench baseline). ``arrival_jitter_us`` > 0 additionally
+    staggers each member's job arrivals by a deterministic per-(member,
+    job) offset in ``[0, arrival_jitter_us)`` on top of the scenario's
+    ``start_us`` — sampling the dynamic co-scheduling space.
 
     Pass a prebuilt ``engine`` (``build_campaign_engine``) to reuse the
-    jit cache across campaigns of the same scenario shape.
+    jit cache across campaigns of the same envelope.
     """
     eng = engine or build_campaign_engine(scenario, base_seed)
     rs = eng.rs
@@ -112,9 +128,27 @@ def run_campaign(
 
     t0 = time.time()
     if vmapped:
-        batched = _stack_states([member_init(i) for i in range(members)])
-        final = jax.block_until_ready(eng.vrun(batched))
-        states = [member_state(final, i) for i in range(members)]
+        D = jax.local_device_count()
+        inits = [member_init(i) for i in range(members)]
+        if D > 1 and members % D == 0:
+            # shard the campaign across XLA devices: each device runs a
+            # (members/D)-batched engine call in parallel — the CPU analog
+            # of accelerator lane-parallelism (enable host devices with
+            # XLA_FLAGS=--xla_force_host_platform_device_count=N).
+            chunk = members // D
+            sharded = stack_members([
+                stack_members(inits[d * chunk:(d + 1) * chunk])
+                for d in range(D)
+            ])
+            final = jax.block_until_ready(eng.prun(sharded))
+            states = [
+                member_state(member_state(final, i // chunk), i % chunk)
+                for i in range(members)
+            ]
+        else:
+            batched = stack_members(inits)
+            final = jax.block_until_ready(eng.run(batched))
+            states = [member_state(final, i) for i in range(members)]
     else:
         states = [
             jax.block_until_ready(eng.run(member_init(i)))
@@ -124,7 +158,8 @@ def run_campaign(
 
     reports = [
         MGR.member_report(st, rs, wall / members, seed=base_seed + i,
-                          strict=strict, start_us=starts[i])
+                          strict=strict, start_us=starts[i],
+                          capacity=eng.capacity)
         for i, st in enumerate(states)
     ]
     from repro.union.report import campaign_summary
@@ -134,4 +169,99 @@ def run_campaign(
         vmapped=vmapped, wall_s=wall, reports=reports,
     )
     res.summary = campaign_summary(res)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# ragged campaigns: members from different scenarios, one engine per bucket
+# ---------------------------------------------------------------------------
+
+def _bucket_key(rs: MGR.ResolvedScenario) -> Tuple:
+    """Scenarios sharing this key can share one compiled engine (their
+    capacity envelopes are unioned; job tables are runtime data)."""
+    sc = rs.scenario
+    ur = rs.ur
+    return (
+        sc.topo, sc.scale, sc.routing.upper(), float(sc.tick_us),
+        float(rs.horizon_us), int(rs.pool_size),
+        None if ur is None else (
+            ur.rank2node.shape[0], float(ur.size_bytes),
+            float(ur.interval_us), float(ur.start_us),
+        ),
+    )
+
+
+def run_ragged_campaign(
+    scenarios: Sequence[Scenario],
+    seeds: Optional[Sequence[int]] = None,
+    base_seed: int = 0,
+    vmapped: bool = True,
+    strict: bool = False,
+) -> CampaignResult:
+    """One campaign over members with *different* job/rank counts.
+
+    Member ``i`` runs ``scenarios[i]`` with seed ``seeds[i]`` (default
+    ``base_seed + i``). Members are bucketed by compatible engine
+    configuration (:func:`_bucket_key`); each bucket compiles **one**
+    engine at the union capacity envelope and runs all its members in one
+    batched call — smaller members are padded with no-op jobs
+    (``start_us=inf``, born done) and padded ranks, which provably do not
+    perturb the real jobs' trajectories (the engine equivalence tests
+    assert per-member bit-identity with sequential runs).
+    """
+    scenarios = list(scenarios)
+    if seeds is None:
+        seeds = [base_seed + i for i in range(len(scenarios))]
+    if len(seeds) != len(scenarios):
+        raise ValueError("seeds and scenarios must have equal length")
+
+    resolved = [MGR.resolve(sc, seed=s) for sc, s in zip(scenarios, seeds)]
+    buckets: Dict[Tuple, List[int]] = {}
+    for i, rs in enumerate(resolved):
+        buckets.setdefault(_bucket_key(rs), []).append(i)
+
+    reports: List[Optional[Dict]] = [None] * len(scenarios)
+    t0 = time.time()
+    for idxs in buckets.values():
+        cap = resolved[idxs[0]].capacity
+        for i in idxs[1:]:
+            cap = cap.union(resolved[i].capacity)
+        # the first member's resolution hosts the engine; every member's
+        # own job list is swapped in at init time (runtime data).
+        host = resolved[idxs[0]]
+        init, run, _ = MGR.build(host, capacity=cap)
+        states = []
+        for i in idxs:
+            rs = resolved[i]
+            states.append(init(
+                seed=MGR._engine_seed(seeds[i]),
+                placements=rs.placements(seeds[i]),
+                start_us=rs.start_us,
+                jobs_override=rs.jobs,
+            ))
+        if vmapped:
+            final = jax.block_until_ready(run(stack_members(states)))
+            finals = [member_state(final, k) for k in range(len(idxs))]
+        else:
+            finals = [jax.block_until_ready(run(s)) for s in states]
+        for k, i in enumerate(idxs):
+            reports[i] = MGR.member_report(
+                finals[k], resolved[i], 0.0, seed=seeds[i], strict=strict,
+                capacity=cap,
+            )
+    wall = time.time() - t0
+    for rep in reports:
+        rep["sim_wall_s"] = wall / max(len(scenarios), 1)
+
+    from repro.union.report import campaign_summary
+
+    res = CampaignResult(
+        scenario=scenarios[0], members=len(scenarios), base_seed=base_seed,
+        vmapped=vmapped, wall_s=wall, reports=reports,
+    )
+    res.summary = campaign_summary(res)
+    res.summary["ragged"] = dict(
+        buckets=len(buckets),
+        envelopes=[r["config"]["envelope"] for r in reports],
+    )
     return res

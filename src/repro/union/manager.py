@@ -20,7 +20,14 @@ from repro.core import workloads as W
 from repro.core.translator import translate_source
 from repro.netsim import metrics as MET
 from repro.netsim.config import NetConfig
-from repro.netsim.engine import JobSpec, URSpec, build_engine
+from repro.netsim.engine import (
+    EngineCapacity,
+    JobSpec,
+    URSpec,
+    build_engine,
+    job_vm,
+    member_state,
+)
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import Dragonfly, get_topology
 from repro.union.scenario import Scenario, ScenarioJob, UR_RANKS
@@ -78,6 +85,29 @@ class ResolvedScenario:
     def start_us(self) -> List[float]:
         return [j.start_us for j in self.jobs]
 
+    @property
+    def capacity(self) -> EngineCapacity:
+        """The (Jmax, Pmax, OPmax) envelope this scenario needs — the
+        bucketing key for ragged campaigns. A scenario ``reserve`` widens
+        it so differently-shaped scenarios share one compiled engine."""
+        cap = EngineCapacity.of_jobs(self.jobs)
+        rv = self.scenario.reserve
+        if rv:
+            cap = cap.union(EngineCapacity(
+                Jmax=rv.get("jobs", 1), Pmax=rv.get("ranks", 1),
+                OPmax=rv.get("ops", 1),
+            ))
+        return cap
+
+    def padded_app_names(self, cap: EngineCapacity) -> List[Optional[str]]:
+        """Metric-row names under capacity ``cap``: real jobs first, None
+        for padded job rows, 'ur' on the final row when UR is present."""
+        names: List[Optional[str]] = [j.name for j in self.jobs]
+        names += [None] * (cap.Jmax - len(self.jobs))
+        if self.ur is not None:
+            names.append("ur")
+        return names
+
 
 def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
     scenario.validate()
@@ -110,20 +140,30 @@ def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
     )
 
 
-def build(rs: ResolvedScenario):
-    """Compile the engine for a resolved scenario: (init_state, run, tick)."""
+def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None):
+    """Compile the engine for a resolved scenario: (init_state, run, tick).
+
+    ``capacity`` widens the envelope beyond this scenario's own needs so
+    the same compiled engine can serve other (smaller) scenarios — the
+    ragged-campaign path in :mod:`repro.union.ensemble`.
+    """
     return build_engine(
         rs.topo, rs.jobs, routing=rs.scenario.routing, ur=rs.ur, net=rs.net,
-        pool_size=rs.pool_size, horizon_us=rs.horizon_us,
+        pool_size=rs.pool_size, horizon_us=rs.horizon_us, capacity=capacity,
     )
 
 
 def member_report(state, rs: ResolvedScenario, wall_s: float = 0.0,
                   seed: int = 0, strict: bool = False,
-                  start_us: Optional[Sequence[float]] = None) -> Dict:
+                  start_us: Optional[Sequence[float]] = None,
+                  capacity: Optional[EngineCapacity] = None) -> Dict:
     """``start_us`` records this member's *actual* arrival schedule when it
-    differs from the scenario's (e.g. campaign arrival jitter)."""
-    rep = MET.run_report(state, rs.app_names, rs.topo, rs.net, wall_s,
+    differs from the scenario's (e.g. campaign arrival jitter);
+    ``capacity`` is the engine envelope the state was simulated under
+    (defaults to the scenario's own)."""
+    cap = capacity or rs.capacity
+    names = rs.padded_app_names(cap)
+    rep = MET.run_report(state, names, rs.topo, rs.net, wall_s,
                          strict=strict)
     sc = rs.scenario
     rep["config"] = dict(
@@ -131,7 +171,11 @@ def member_report(state, rs: ResolvedScenario, wall_s: float = 0.0,
         routing=sc.routing, scale=sc.scale, seed=seed, ranks=rs.job_sizes,
         start_us=[float(s) for s in (start_us if start_us is not None
                                      else rs.start_us)],
-        all_done=[bool(np.asarray(vm.done).all()) for vm in state.vms],
+        all_done=[
+            bool(np.asarray(job_vm(state, ji).done).all())
+            for ji in range(len(rs.jobs))
+        ],
+        envelope=dict(Jmax=cap.Jmax, Pmax=cap.Pmax, OPmax=cap.OPmax),
     )
     return rep
 

@@ -28,12 +28,23 @@ def _spread(xs: List[float]) -> Dict[str, float]:
 
 
 def campaign_summary(campaign) -> Dict[str, Any]:
-    """Aggregate per-member reports of one CampaignResult."""
+    """Aggregate per-member reports of one CampaignResult.
+
+    Ragged campaigns have members with different app sets; each app is
+    aggregated over the members that actually ran it.
+    """
     reports = campaign.reports
-    apps = list(reports[0]["latency"].keys()) if reports else []
+    apps: List[str] = []
+    for r in reports:
+        for app in r["latency"]:
+            if app not in apps:
+                apps.append(app)
     per_app: Dict[str, Any] = {}
     for app in apps:
-        lat = [r["latency"][app] for r in reports if r["latency"][app].get("count")]
+        lat = [
+            r["latency"][app] for r in reports
+            if r["latency"].get(app, {}).get("count")
+        ]
         ct = [r["comm_time"].get(app) for r in reports]
         ct = [c for c in ct if c is not None]
         per_app[app] = dict(

@@ -29,7 +29,12 @@ Schema (all keys optional unless noted)::
          "ranks": 2}
       ],
       "ur": {"ranks": 128,            # uniform-random background source
-             "size_bytes": 10240, "interval_us": 1000.0, "start_us": 0.0}
+             "size_bytes": 10240, "interval_us": 1000.0, "start_us": 0.0},
+      "reserve": {"jobs": 4, "ranks": 256, "ops": 64}
+                                      # optional engine-capacity reservation:
+                                      # widens the (Jmax, Pmax, OPmax)
+                                      # envelope so differently-shaped
+                                      # scenarios share one compiled engine
     }
 """
 from __future__ import annotations
@@ -88,8 +93,23 @@ class Scenario:
     tick_us: float = 5.0
     horizon_ms: float = 600.0
     pool_size: Optional[int] = None
+    # optional capacity reservation: {"jobs": J, "ranks": P, "ops": O}
+    # widens the engine envelope beyond this scenario's own needs so other
+    # scenarios (up to the reserve) reuse the same compiled engine —
+    # ragged campaigns and interactive sweeps skip re-jitting.
+    reserve: Optional[Dict[str, int]] = None
 
     def validate(self) -> None:
+        if self.reserve is not None:
+            unknown = set(self.reserve) - {"jobs", "ranks", "ops"}
+            if unknown:
+                raise ValueError(
+                    f"unknown reserve keys: {sorted(unknown)}; "
+                    "expected subset of {'jobs', 'ranks', 'ops'}"
+                )
+            for k, v in self.reserve.items():
+                if not isinstance(v, int) or v < 1:
+                    raise ValueError(f"reserve[{k!r}] must be a positive int")
         if not self.jobs:
             raise ValueError("scenario needs at least one job")
         if self.topo not in ("1d", "2d"):
@@ -117,6 +137,8 @@ class Scenario:
             d.pop("ur")
         if self.pool_size is None:
             d.pop("pool_size")
+        if self.reserve is None:
+            d.pop("reserve")
         return d
 
     @classmethod

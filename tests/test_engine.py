@@ -10,7 +10,7 @@ from repro.core.translator import translate_source
 from repro.core import workloads as W
 from repro.netsim import metrics as MET
 from repro.netsim.config import NetConfig
-from repro.netsim.engine import JobSpec, URSpec, build_engine
+from repro.netsim.engine import JobSpec, URSpec, build_engine, job_vm
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import dragonfly_1d_small, dragonfly_2d_small
 
@@ -45,7 +45,7 @@ def test_pingpong_latency_floor(topo1d):
     assert m["count"] == 8
     # latency >= hop floor (>=2 links x 0.5us) and bounded by something sane
     assert 1.0 <= m["min_us"] <= 50.0
-    assert bool(st.vms[0].done.all())
+    assert bool(job_vm(st, 0).done.all())
     assert int(st.pool.dropped) == 0
 
 
@@ -54,7 +54,7 @@ def test_message_conservation(topo1d):
     skel = W.build_skeleton("nn", "small", overrides={"iters": 2})
     r2n = place_jobs(topo1d, [skel.n_ranks], "RN", seed=2)[0]
     st, net = _run(topo1d, [JobSpec("nn", skel, r2n)], pool=2048)
-    assert bool(st.vms[0].done.all())
+    assert bool(job_vm(st, 0).done.all())
     assert not bool(st.pool.active.any())
     delivered = int(st.metrics.lat_cnt[0])
     expected = 2 * 64 * 6  # iters x ranks x 2*ndims
@@ -67,7 +67,7 @@ def test_vm_counters_consistent(topo1d):
     r2n = place_jobs(topo1d, [skel.n_ranks], "RR", seed=3)[0]
     st, net = _run(topo1d, [JobSpec("cf", skel, r2n)], pool=1024,
                    horizon_us=400_000.0)
-    vm = st.vms[0]
+    vm = job_vm(st, 0)
     assert bool(vm.done.all())
     np.testing.assert_array_equal(np.asarray(vm.send_done), np.asarray(vm.send_need))
     np.testing.assert_array_equal(np.asarray(vm.recv_done), np.asarray(vm.recv_need))
@@ -110,7 +110,7 @@ def test_2d_runs_and_reports():
     r2n = place_jobs(topo, [skel.n_ranks], "RG", seed=6)[0]
     st, net = _run(topo, [JobSpec("cf", skel, r2n)], routing="ADP",
                    pool=1024, horizon_us=400_000.0)
-    assert bool(st.vms[0].done.all())
+    assert bool(job_vm(st, 0).done.all())
     rep = MET.run_report(st, ["cf"], topo, net)
     assert rep["latency"]["cf"]["count"] > 0
     assert rep["link_load"]["local_total_bytes"] > 0

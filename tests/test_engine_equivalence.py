@@ -1,0 +1,149 @@
+"""Stacked-engine equivalence: bit-identity with the seed per-job-loop engine.
+
+``tests/data_engine_golden.json`` holds final-state summaries captured
+from the historical engine (one Python loop over jobs in four places per
+tick) on two mixed scenarios:
+
+* ``equiv-mix``: staggered arrivals + UR background traffic + adaptive
+  routing + ring allreduce + P2P;
+* ``equiv-coll``: XCHG grid exchange, BCAST, small-allreduce (recursive
+  doubling), SCATTER, BARRIER.
+
+The stacked `(J, Pmax)` engine must reproduce them exactly: same rng
+schedule (per-job injection draws), same pool-slot allocation order, same
+drain math, same PDES skips — down to the final tick count.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.netsim.engine import job_vm
+from repro.union import manager as MGR
+from repro.union.scenario import Scenario, ScenarioJob, URDecl
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data_engine_golden.json")
+
+PP = (
+    "For 4 repetitions {\n"
+    " task 0 sends a 4096 byte message to task 1 then\n"
+    " task 1 sends a 4096 byte message to task 0 }"
+)
+AR = (
+    "For 3 repetitions {\n"
+    " all tasks allreduce a 65536 byte message then\n"
+    " all tasks compute for 200 microseconds }"
+)
+COLL = (
+    "For 2 repetitions {\n"
+    " all tasks exchange a 2048 byte message with their neighbors"
+    " in a 2x2x2 grid then\n"
+    " task 0 multicasts a 4096 byte message to all other tasks then\n"
+    " all tasks allreduce a 512 byte message then\n"
+    " task 0 asynchronously sends a 1024 byte message to all other tasks then\n"
+    " all tasks synchronize then\n"
+    " all tasks compute for 50 microseconds }"
+)
+
+
+def mixed_scenario():
+    return Scenario(
+        name="equiv-mix",
+        jobs=[
+            ScenarioJob(app="ar8", source=AR, ranks=8),
+            ScenarioJob(app="pp2", source=PP, ranks=2, start_us=700.0),
+        ],
+        placement="RN", routing="ADP",
+        ur=URDecl(ranks=16, size_bytes=4096.0, interval_us=300.0),
+        tick_us=2.0, horizon_ms=80.0, pool_size=512,
+    )
+
+
+def collective_scenario():
+    return Scenario(
+        name="equiv-coll",
+        jobs=[
+            ScenarioJob(app="coll8", source=COLL, ranks=8),
+            ScenarioJob(app="pp2", source=PP, ranks=2, start_us=150.0),
+        ],
+        placement="RN", routing="ADP",
+        tick_us=2.0, horizon_ms=60.0, pool_size=512,
+    )
+
+
+CASES = {
+    "equiv-mix": (mixed_scenario, 3),
+    "equiv-coll": (collective_scenario, 5),
+}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_stacked_engine_matches_seed_goldens(case, golden):
+    make, seed = CASES[case]
+    sc = make()
+    rs = MGR.resolve(sc, seed=seed)
+    init, run, _ = MGR.build(rs)
+    st = jax.block_until_ready(run(init(seed=MGR._engine_seed(seed))))
+    g = golden[case]["state"]
+
+    # integer trajectory invariants: exact
+    assert float(st.t) == g["t"]
+    assert int(st.rng) == g["rng"]  # same rng schedule == same tick count
+    assert int(st.pool.dropped) == g["dropped"]
+    assert int(st.pool.free_top) == g["free_top"]
+    assert int(st.metrics.win_idx) == g["win_idx"]
+    np.testing.assert_array_equal(np.asarray(st.metrics.lat_cnt), g["lat_cnt"])
+    np.testing.assert_array_equal(
+        np.asarray(st.metrics.lat_hist).sum(1), g["lat_hist_sum"]
+    )
+    # float metrics: identical math, tolerance guards platform codegen
+    np.testing.assert_allclose(
+        float(st.metrics.peak_inject), g["peak_inject"], rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(st.metrics.lat_sum), g["lat_sum"], rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(st.metrics.lat_min), g["lat_min"], rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(st.metrics.lat_max), g["lat_max"], rtol=1e-5)
+    np.testing.assert_allclose(
+        float(np.asarray(st.metrics.link_bytes).sum()),
+        g["link_bytes_total"], rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(st.metrics.router_wins).sum(axis=(0, 2)),
+        g["router_wins_total"], rtol=1e-5)
+    # per-rank VM trajectories: exact counters, exact program counters
+    for ji in range(len(rs.jobs)):
+        vm = job_vm(st, ji)
+        assert bool(np.asarray(vm.done).all()) == g[f"vm{ji}_done"]
+        np.testing.assert_array_equal(
+            np.asarray(vm.send_done), g[f"vm{ji}_send_done"])
+        np.testing.assert_array_equal(
+            np.asarray(vm.recv_done), g[f"vm{ji}_recv_done"])
+        np.testing.assert_array_equal(np.asarray(vm.pc), g[f"vm{ji}_pc"])
+        np.testing.assert_allclose(
+            np.asarray(vm.comm_time), g[f"vm{ji}_comm_time"], rtol=1e-5)
+    if st.ur is not None:
+        np.testing.assert_array_equal(np.asarray(st.ur.count), g["ur_count"])
+
+
+def test_report_matches_seed_goldens(golden):
+    """End-to-end `run_scenario` report vs the seed engine's report."""
+    sc = mixed_scenario()
+    rep = MGR.run_scenario(sc, seed=3)
+    g = golden["equiv-mix"]
+    assert rep["virtual_time_ms"] == g["report_virtual_time_ms"]
+    for app, want in g["report_latency"].items():
+        got = rep["latency"][app]
+        assert got["count"] == want["count"]
+        if want["count"]:
+            np.testing.assert_allclose(got["avg_us"], want["avg_us"], rtol=1e-5)
+            np.testing.assert_allclose(got["max_us"], want["max_us"], rtol=1e-5)

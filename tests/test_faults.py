@@ -7,7 +7,7 @@ from repro.core import workloads as W
 from repro.core.translator import translate_source
 from repro.netsim import metrics as MET
 from repro.netsim.config import NetConfig
-from repro.netsim.engine import JobSpec, build_engine
+from repro.netsim.engine import JobSpec, build_engine, job_vm
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import KIND_GLOBAL, dragonfly_1d_small
 
@@ -49,7 +49,7 @@ def test_adaptive_survives_link_failure(topo):
 
     st_ok, net = _run(topo, [JobSpec("x", skel, r2n)], routing="ADP")
     st_f, _ = _run(topo, [JobSpec("x", skel, r2n)], routing="ADP", link_down=down)
-    assert bool(st_f.vms[0].done.all()), "job must survive the failure"
+    assert bool(job_vm(st_f, 0).done.all()), "job must survive the failure"
     lat_ok = MET.latency_summary(st_ok, ["x"], net)["x"]["avg_us"]
     lat_f = MET.latency_summary(st_f, ["x"], net)["x"]["avg_us"]
     assert lat_f > lat_ok, "detour must cost latency"
@@ -65,10 +65,11 @@ def test_minimal_routing_stalls_on_failure(topo):
         down[topo.global_link_id[1, 0, m]] = True
     st, _ = _run(topo, [JobSpec("x", skel, r2n)], routing="MIN",
                  link_down=down, horizon=50_000.0)
-    assert not bool(st.vms[0].done.all())
+    assert not bool(job_vm(st, 0).done.all())
     assert bool(st.pool.active.any())  # stuck in flight
 
 
+@pytest.mark.slow
 def test_straggler_slows_whole_job(topo):
     """One 4x-slow rank inflates every rank's comm time (collective wait) —
     the straggler effect the runtime must mitigate."""
@@ -80,9 +81,9 @@ def test_straggler_slows_whole_job(topo):
     slow[3] = 4.0
     st_s, _ = _run(topo, [JobSpec("cf", skel, r2n)], routing="ADP",
                    rank_slowdown=[slow], horizon=2_000_000.0)
-    assert bool(st_s.vms[0].done.all())
-    ct_ok = np.asarray(st_ok.vms[0].comm_time)
-    ct_s = np.asarray(st_s.vms[0].comm_time)
+    assert bool(job_vm(st_s, 0).done.all())
+    ct_ok = np.asarray(job_vm(st_ok, 0).comm_time)
+    ct_s = np.asarray(job_vm(st_s, 0).comm_time)
     others = [r for r in range(skel.n_ranks) if r != 3]
     # non-straggler ranks now spend far longer blocked in the allreduce
     assert ct_s[others].mean() > 2.0 * ct_ok[others].mean()

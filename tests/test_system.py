@@ -47,6 +47,7 @@ def test_mamba_training_reduces_loss():
     assert losses[-1] < losses[0] * 0.85, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_train_driver_cli(tmp_path):
     """The production train driver runs, checkpoints, and resumes."""
     cmd = [
@@ -67,6 +68,7 @@ def test_train_driver_cli(tmp_path):
     assert "resumed from step 6" in r2.stdout
 
 
+@pytest.mark.slow
 def test_sim_driver_cli(tmp_path):
     cmd = [
         sys.executable, "-m", "repro.launch.sim", "--workload", "baseline-nn",

@@ -5,6 +5,7 @@ import pytest
 import jax
 
 from repro.netsim import metrics as MET
+from repro.netsim.engine import job_vm
 from repro.union import manager as MGR
 from repro.union.ensemble import run_campaign
 from repro.union.report import interference_summary
@@ -91,6 +92,27 @@ def test_resolve_to_engine_inputs():
     assert rs_rk.jobs[0].skeleton.n_ranks == 8
 
 
+def test_scenario_reserve_widens_capacity():
+    sc = tiny_scenario()
+    sc.reserve = {"jobs": 4, "ranks": 64}
+    rs = MGR.resolve(sc, seed=0)
+    cap = rs.capacity
+    assert cap.Jmax == 4 and cap.Pmax == 64  # reserve dominates (2 jobs x 2)
+    assert cap.OPmax >= 1  # ops fall back to the scenario's own need
+    d = sc.to_dict()
+    assert d["reserve"] == {"jobs": 4, "ranks": 64}
+    assert Scenario.from_dict(d).reserve == sc.reserve
+    # engine built at the widened envelope still runs the scenario
+    init, run, _ = MGR.build(rs, capacity=cap)
+    import jax as _jax
+
+    st = _jax.block_until_ready(run(init(seed=1)))
+    assert bool(np.asarray(job_vm(st, 0).done).all())
+    with pytest.raises(ValueError, match="reserve"):
+        Scenario.from_dict(dict(tiny_scenario().to_dict(),
+                                reserve={"nodes": 3}))
+
+
 def test_mix_scenario_matches_table3():
     sc = mix_scenario("workload1", iters_override=2)
     assert [j.app for j in sc.jobs] == ["cosmoflow", "alexnet", "lammps", "nn"]
@@ -115,16 +137,16 @@ def test_staggered_job_emits_nothing_before_start():
     # drive ticks up to (but not past) the arrival time
     while float(state.t) < start - rs.net.tick_us:
         state = tick(state)
-        vm1 = state.vms[1]
+        vm1 = job_vm(state, 1)
         assert int(np.asarray(vm1.send_need).sum()) == 0
         assert not bool(np.asarray(vm1.emitted).any())
         assert not bool((np.asarray(state.pool.active)
                          & (np.asarray(state.pool.job) == 1)).any())
     # job 0 meanwhile made progress
-    assert int(np.asarray(state.vms[0].send_need).sum()) > 0
+    assert int(np.asarray(job_vm(state, 0).send_need).sum()) > 0
     # resume to completion: the late job arrives, runs, and finishes
     final = jax.block_until_ready(run(state))
-    assert bool(np.asarray(final.vms[1].done).all())
+    assert bool(np.asarray(job_vm(final, 1).done).all())
     assert int(final.metrics.lat_cnt[1]) == 8
     assert float(final.t) >= start
 
@@ -139,7 +161,7 @@ def test_idle_network_skips_to_arrival():
     rs = MGR.resolve(sc, seed=0)
     init, run, _ = MGR.build(rs)
     final = jax.block_until_ready(run(init()))
-    assert bool(np.asarray(final.vms[0].done).all())
+    assert bool(np.asarray(job_vm(final, 0).done).all())
     assert 40_000.0 <= float(final.t) < 60_000.0
     # far fewer ticks than 40000/2: rng counts ticks
     assert int(final.rng) < 2_000
@@ -184,6 +206,70 @@ def test_interference_summary_shape():
     inf = interference_summary(co, {"pp0": base})
     assert set(inf) == {"pp0"}
     assert inf["pp0"]["latency_inflation"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ragged campaigns
+# ---------------------------------------------------------------------------
+
+AR_RAGGED = (
+    "For 2 repetitions {\n"
+    " all tasks allreduce a 65536 byte message then\n"
+    " all tasks compute for 100 microseconds }"
+)
+
+
+def test_ragged_campaign_members_match_sequential_runs():
+    """Two members with different job counts AND rank counts through one
+    batched engine: each member's metrics equal its own sequential run."""
+    from repro.union.ensemble import run_ragged_campaign
+
+    sc_a = Scenario(name="a", jobs=[ScenarioJob(app="pp0", source=PP, ranks=2)],
+                    placement="RN", tick_us=2.0, horizon_ms=50.0,
+                    pool_size=256)
+    sc_b = Scenario(
+        name="b",
+        jobs=[ScenarioJob(app="ar8", source=AR_RAGGED, ranks=8),
+              ScenarioJob(app="pp1", source=PP, ranks=2, start_us=100.0)],
+        placement="RN", tick_us=2.0, horizon_ms=50.0, pool_size=256,
+    )
+    camp = run_ragged_campaign([sc_a, sc_b], seeds=[0, 1])
+    assert camp.summary["all_done"] and camp.summary["dropped_total"] == 0
+    assert camp.summary["ragged"]["buckets"] == 1  # same envelope bucket
+    # the shared engine ran at the union envelope (2 jobs, 8 ranks)
+    assert camp.reports[0]["config"]["envelope"] == dict(
+        Jmax=2, Pmax=8, OPmax=camp.reports[0]["config"]["envelope"]["OPmax"])
+    for i, (sc, seed) in enumerate([(sc_a, 0), (sc_b, 1)]):
+        seq = MGR.run_scenario(sc, seed=seed)
+        rep = camp.reports[i]
+        assert rep["virtual_time_ms"] == seq["virtual_time_ms"]
+        assert set(rep["latency"]) == set(seq["latency"])
+        for app in seq["latency"]:
+            assert rep["latency"][app]["count"] == seq["latency"][app]["count"]
+            if seq["latency"][app]["count"]:
+                np.testing.assert_allclose(
+                    rep["latency"][app]["avg_us"],
+                    seq["latency"][app]["avg_us"], rtol=1e-6)
+            np.testing.assert_allclose(
+                rep["comm_time"][app]["max_ms"],
+                seq["comm_time"][app]["max_ms"], rtol=1e-6)
+
+
+def test_ragged_campaign_buckets_incompatible_configs():
+    """Different tick_us cannot share an engine: two buckets, still one
+    campaign with per-member reports in input order."""
+    from repro.union.ensemble import run_ragged_campaign
+
+    sc_a = Scenario(name="a", jobs=[ScenarioJob(app="pp0", source=PP, ranks=2)],
+                    placement="RN", tick_us=2.0, horizon_ms=50.0,
+                    pool_size=256)
+    sc_b = Scenario(name="b", jobs=[ScenarioJob(app="pp1", source=PP, ranks=2)],
+                    placement="RN", tick_us=4.0, horizon_ms=50.0,
+                    pool_size=256)
+    camp = run_ragged_campaign([sc_a, sc_b], seeds=[0, 0])
+    assert camp.summary["ragged"]["buckets"] == 2
+    assert camp.summary["all_done"]
+    assert [set(r["latency"]) for r in camp.reports] == [{"pp0"}, {"pp1"}]
 
 
 # ---------------------------------------------------------------------------
