@@ -7,7 +7,12 @@ automatically) — vs a Python loop over the same jitted engine. Each
 ``BENCH_union.json`` entry records its provenance (git commit, jax
 version, backend, device count). ``--quick`` is the CI smoke profile.
 
+``--trace`` switches to the online-scheduler profile instead: a synthetic
+Poisson trace drained through a small slot envelope under FCFS and EASY
+backfill, recording jobs/sec (scheduling + windowed-engine throughput).
+
   PYTHONPATH=src python -m benchmarks.bench_union [--members 8] [--quick]
+  PYTHONPATH=src python -m benchmarks.bench_union --trace [--quick]
 """
 from __future__ import annotations
 
@@ -80,13 +85,92 @@ def enable_host_devices(n: int) -> None:
         )
 
 
+def _append_entry(entry):
+    path = os.path.join(ROOT, "BENCH_union.json")
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+            if not isinstance(existing, list):
+                existing = [existing]
+    existing.append(entry)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, default=float)
+    print(f"wrote {path}")
+
+
+def bench_trace(quick: bool):
+    """Online-scheduler throughput: jobs/sec drained through a small
+    envelope under both queue policies (one compiled engine)."""
+    from repro.sched.scheduler import build_sched_engine, run_trace
+    from repro.sched.trace import CatalogApp, synthetic_trace
+
+    pp = (
+        "For 6 repetitions {\n"
+        " task 0 sends a 2048 byte message to task 1 then\n"
+        " task 1 sends a 2048 byte message to task 0 }"
+    )
+    ar = (
+        "For 3 repetitions {\n"
+        " all tasks compute for 200 microseconds then\n"
+        " all tasks allreduce a 65536 byte message }"
+    )
+    catalog = [
+        CatalogApp(app="pp", ranks=2, est_runtime_us=1500.0, weight=2.0,
+                   source=pp),
+        CatalogApp(app="ar", ranks=16, est_runtime_us=4000.0, weight=1.0,
+                   source=ar),
+    ]
+    n_jobs = 16 if quick else 64
+    slots = 4 if quick else 8
+    trace = synthetic_trace(
+        n_jobs, arrival="poisson", mean_gap_us=300.0, seed=0,
+        catalog=catalog, slots=slots, tick_us=5.0,
+        horizon_ms=60_000.0, pool_size=4096,
+        name=f"bench-trace-{'quick' if quick else 'full'}",
+    )
+    print(f"trace={trace.name} jobs={n_jobs} slots={slots}")
+    engine = build_sched_engine(trace, slots)
+    results = {}
+    for pol in ("fcfs", "easy"):
+        res = run_trace(trace, policy=pol, seed=0, engine=engine)
+        done = sum(r.completed for r in res.records)
+        assert done == n_jobs, f"{pol}: only {done}/{n_jobs} completed"
+        results[pol] = dict(
+            wall_s=res.wall_s, jobs_per_sec=res.jobs_per_sec,
+            windows=res.windows, makespan_ms=res.makespan_us / 1000.0,
+            utilization=res.utilization,
+            mean_wait_us=float(
+                sum(r.wait_us for r in res.records) / n_jobs),
+        )
+        print(f"  {pol:>5}: {res.wall_s:6.1f}s "
+              f"({res.jobs_per_sec:.2f} jobs/s, {res.windows} windows) | "
+              f"makespan {res.makespan_us / 1000.0:.1f}ms | "
+              f"util {res.utilization:.1%}")
+    entry = dict(
+        bench="union_trace_throughput",
+        jobs=n_jobs, slots=slots,
+        provenance=provenance(),
+        trace=dict(name=trace.name, arrival="poisson", mean_gap_us=300.0,
+                   placement=trace.placement),
+        **{f"{p}_{k}": v for p, r in results.items() for k, v in r.items()},
+    )
+    _append_entry(entry)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--members", type=int, default=None,
                     help="ensemble members (default 8; 2 with --quick)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke profile: tiny scenario, 2 members")
+    ap.add_argument("--trace", action="store_true",
+                    help="online-scheduler profile: jobs/sec through a"
+                    " small slot envelope (FCFS + EASY)")
     args = ap.parse_args()
+    if args.trace:
+        bench_trace(args.quick)
+        return
     members = args.members if args.members is not None else (
         2 if args.quick else 8)
     enable_host_devices(members)
@@ -130,19 +214,9 @@ def main():
             / max(results["vmapped"]["warm_wall_s"], 1e-9)
         ),
     )
-    path = os.path.join(ROOT, "BENCH_union.json")
-    existing = []
-    if os.path.exists(path):
-        with open(path) as f:
-            existing = json.load(f)
-            if not isinstance(existing, list):
-                existing = [existing]
-    existing.append(entry)
-    with open(path, "w") as f:
-        json.dump(existing, f, indent=1, default=float)
     print(f"speedup (warm, vmapped/looped): "
           f"{entry['warm_speedup_vmapped_over_looped']:.2f}x")
-    print(f"wrote {path}")
+    _append_entry(entry)
 
 
 if __name__ == "__main__":

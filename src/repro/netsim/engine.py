@@ -31,12 +31,24 @@ flat index so an 8-member campaign costs one scatter per pass, not eight
 serialized ones. Member *i* of a batched run is bit-identical to its own
 `B=1` run, and to the historical per-job-loop engine (the equivalence
 goldens in tests/ assert this).
+
+**Slot recycling** (the online-scheduler substrate, `repro.sched`): job
+slots are a reusable resource. `run_window(state, t_stop)` advances until
+the next scheduling event — virtual time reaching ``t_stop`` (the next
+trace arrival) or a job slot completing — and returns control to the
+host; :func:`admit_job` writes a new program into a vacant slot and
+:func:`retire_job` vacates a finished one, so a trace of hundreds of jobs
+streams through one compiled ``(Jmax, Pmax, OPmax)`` envelope across
+chained windows with full state carry-over. A chained-window run is
+bit-identical to one uninterrupted ``run`` over the same job set as long
+as every window boundary coincides with a job arrival (the window cap
+clamps the PDES time skip exactly like a pending job's ``start`` does).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import NamedTuple, Optional, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -172,6 +184,27 @@ class EngineCapacity:
         )
 
 
+@dataclass
+class Engine:
+    """The compiled engine bundle for one capacity envelope.
+
+    Unpacks like the historical ``(init_state, run, tick)`` triple
+    (``init, run, tick = build_engine(...)`` keeps working); the online
+    scheduler additionally uses :attr:`run_window` — run until virtual
+    time reaches ``t_stop`` *or* a job slot completes, whichever is first
+    — plus :attr:`capacity` for envelope bookkeeping.
+    """
+
+    init_state: Callable
+    run: Callable
+    tick: Callable
+    run_window: Callable
+    capacity: EngineCapacity
+
+    def __iter__(self):
+        return iter((self.init_state, self.run, self.tick))
+
+
 def _ceil_log2(P: int) -> int:
     return max(1, math.ceil(math.log2(max(P, 2))))
 
@@ -303,7 +336,9 @@ def build_engine(
     capacity: Optional[EngineCapacity] = None,
     use_pallas: Optional[bool] = None,
 ):
-    """Returns (init_state, run, tick); run: state -> final state (jit).
+    """Returns an :class:`Engine` — unpacks as ``(init_state, run, tick)``;
+    ``run``: state -> final state (jit); ``engine.run_window`` additionally
+    serves the online scheduler (stop at ``t_stop`` or slot completion).
 
     ``jobs`` provides the *default* job set and sizes the capacity envelope
     when ``capacity`` is not given; ``init_state(jobs=...)`` swaps in any
@@ -587,7 +622,14 @@ def build_engine(
             ),
         )
 
-    def tick_batched(state: SimState) -> SimState:
+    def tick_batched(state: SimState, t_cap=jnp.inf, stop_m=None) -> SimState:
+        # ``t_cap`` clamps the PDES time skip (step 7) for windowed runs:
+        # it enters the wake-up min exactly like a pending job's start, so
+        # a window boundary at an arrival time leaves the tick trajectory
+        # bit-identical to an uninterrupted run with that job in the table.
+        # ``stop_m`` (B,) freezes members that reached their window event
+        # (run_window): a stopped member must not tick past its arrival /
+        # completion boundary while batch-mates are still advancing.
         jt = state.jobs
         t = state.t  # (B,)
         B = t.shape[0]
@@ -600,6 +642,8 @@ def build_engine(
             jnp.all(state.vms.done, axis=(1, 2))
             & ~jnp.any(pool.active, axis=1)
         )
+        if stop_m is not None:
+            live_m = live_m & ~stop_m
 
         # --- 1. VM entry + emission + injection (one stacked pass) ---
         vms, dst, sizes = vm_emit(jt, state.vms, t, live_m)
@@ -827,11 +871,23 @@ def build_engine(
         min_busy = jnp.minimum(
             min_busy, jnp.min(jnp.where(pend, jt.start, jnp.inf), axis=1)
         )
+        # windowed runs: the window cap is a wake-up too (a job about to be
+        # admitted there); inert at the default t_cap=inf
+        min_busy = jnp.minimum(min_busy, jnp.asarray(t_cap, jnp.float32))
         if ur_state is not None:
             min_busy = jnp.minimum(min_busy, jnp.min(ur_state.next_t, axis=1))
         next_window = (win_idx.astype(jnp.float32) + 1.0) * net.window_us
         skip_to = jnp.minimum(min_busy, next_window)
         idle = ~any_active & ~can_act & jnp.isfinite(skip_to)
+        # windowed runs only (t_cap finite): a member whose last job just
+        # completed must not jump ahead — the scheduler reads its ``t`` as
+        # "now" when starting queued jobs on the freed nodes. Inert at
+        # t_cap=inf: such a member's run loop exits before the next tick,
+        # so the jump was never observable.
+        all_done_m = jnp.all(vms.done, axis=(1, 2)) & ~any_active
+        idle = idle & ~(
+            all_done_m & jnp.isfinite(jnp.asarray(t_cap, jnp.float32))
+        )
         t_new = jnp.where(idle, jnp.maximum(t + dt, skip_to), t + dt)
 
         return SimState(
@@ -950,7 +1006,49 @@ def build_engine(
             lambda s: jnp.any(live(s)), tick_batched, state
         )
 
-    return init_state, _member_batched(run_batched), _member_batched(tick_batched)
+    def done_slots(s: SimState):
+        """(B,) count of fully-done job slots (vacant slots count too)."""
+        return jnp.sum(jnp.all(s.vms.done, axis=2), axis=1)
+
+    # one scheduling window: advance until virtual time reaches ``t_stop``
+    # (the next trace arrival) or a job slot completes — then hand control
+    # back to the host so it can retire/admit slots. ``t_stop`` is a traced
+    # scalar (or a (B,) vector): every window of a trace run shares one jit
+    # cache entry. Per-member: a member that reached its own window event
+    # freezes in place while batch-mates tick on (the stop condition is
+    # monotone — a frozen member stays frozen), so batched windowed runs
+    # keep each member bit-identical to its own B=1 windows.
+    @jax.jit
+    def run_window_batched(state: SimState, t_stop) -> SimState:
+        t_stop = jnp.asarray(t_stop, jnp.float32)
+        n0 = done_slots(state)
+
+        def stopped(s):
+            return ~(live(s) & (s.t < t_stop) & (done_slots(s) <= n0))
+
+        return jax.lax.while_loop(
+            lambda s: ~jnp.all(stopped(s)),
+            lambda s: tick_batched(s, t_stop, stop_m=stopped(s)),
+            state,
+        )
+
+    def _member_window(fn):
+        def wrapper(state: SimState, t_stop):
+            if state.t.ndim == 0:
+                batched = jax.tree_util.tree_map(lambda x: x[None], state)
+                out = fn(batched, t_stop)
+                return jax.tree_util.tree_map(lambda x: x[0], out)
+            return fn(state, t_stop)
+
+        return wrapper
+
+    return Engine(
+        init_state=init_state,
+        run=_member_batched(run_batched),
+        tick=_member_batched(tick_batched),
+        run_window=_member_window(run_window_batched),
+        capacity=cap,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -975,3 +1073,151 @@ def member_state(batched_state: SimState, i: int) -> SimState:
 def stack_members(states: Sequence[SimState]) -> SimState:
     """Stack member states into one batch (leading member dim)."""
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+# ---------------------------------------------------------------------------
+# job-slot admit/retire API (the online scheduler's state surgery).
+#
+# These operate on a *member* state between engine windows, on the host:
+# a vacant slot is one with ``start == inf`` (how both ``pack_jobs`` pads
+# unused capacity and ``retire_job`` leaves a finished slot). A retired
+# slot's VMs are all-done and its program is END-only, so it is provably
+# inert to the remaining jobs' trajectories — the chained-window
+# equivalence tests pin this.
+# ---------------------------------------------------------------------------
+
+def vacant_slots(state: SimState) -> np.ndarray:
+    """Indices of vacant job slots of a member state (``start == inf``)."""
+    return np.flatnonzero(np.isinf(np.asarray(state.jobs.start)))
+
+
+def slot_done(state: SimState, slot: int) -> bool:
+    """Every rank of ``slot`` has reached END (its program finished)."""
+    return bool(np.asarray(state.vms.done[slot]).all())
+
+
+def slot_in_flight(state: SimState, slot: int) -> bool:
+    """``slot`` still owns active pool messages (e.g. trailing IP2P
+    traffic after its VMs finished). A slot must fully drain before it
+    can be recycled — a reused slot id would misroute delivery
+    notifications into the new tenant's counters."""
+    return bool(
+        (np.asarray(state.pool.active) & (np.asarray(state.pool.job) == slot))
+        .any()
+    )
+
+
+def occupied_node_mask(state: SimState, n_nodes: int) -> np.ndarray:
+    """(n_nodes,) bool — nodes held by non-vacant job slots.
+
+    The free-node accounting the scheduler places against: incremental
+    placement (``place_jobs(..., occupied=mask)``) draws only from the
+    complement.
+    """
+    occ = np.zeros((n_nodes,), bool)
+    start = np.asarray(state.jobs.start)
+    P = np.asarray(state.jobs.P)
+    r2n = np.asarray(state.jobs.r2n)
+    for j in np.flatnonzero(np.isfinite(start)):
+        occ[r2n[j, : int(P[j])]] = True
+    return occ
+
+
+def admit_job(state: SimState, slot: int, spec: JobSpec) -> SimState:
+    """Write ``spec`` into vacant job ``slot`` of a member state.
+
+    Resets the slot's program/placement/arrival tables and its VM rows
+    (padded ranks born done), leaving every other slot untouched. The
+    admitted job idles until ``spec.start_us`` of virtual time.
+    """
+    jt = state.jobs
+    J, OPmax = jt.ops.shape[0], jt.ops.shape[1]
+    Pmax = jt.r2n.shape[1]
+    sk = spec.skeleton
+    if not 0 <= slot < J:
+        raise ValueError(f"slot {slot} outside envelope Jmax={J}")
+    if not np.isinf(float(jt.start[slot])):
+        raise ValueError(f"slot {slot} is occupied (start="
+                         f"{float(jt.start[slot])}); retire it first")
+    if sk.n_ranks > Pmax or sk.n_ops > OPmax:
+        raise ValueError(
+            f"job {spec.name!r} ({sk.n_ranks} ranks, {sk.n_ops} ops) exceeds "
+            f"engine capacity (Pmax={Pmax}, OPmax={OPmax})"
+        )
+    ops_row = np.zeros((OPmax, 4), np.int32)
+    ops_row[:, 0] = OP["END"]
+    ops_row[: sk.n_ops] = sk.ops
+    grid_row = np.zeros((OPmax, 4), np.int32)
+    grid_row[: sk.n_ops] = sk.grid
+    r2n_row = np.zeros((Pmax,), np.int32)
+    r2n_row[: sk.n_ranks] = np.asarray(spec.rank2node, np.int32)
+    jobs = jt._replace(
+        ops=jt.ops.at[slot].set(ops_row),
+        grid=jt.grid.at[slot].set(grid_row),
+        P=jt.P.at[slot].set(np.int32(sk.n_ranks)),
+        logp=jt.logp.at[slot].set(np.int32(_ceil_log2(sk.n_ranks))),
+        r2n=jt.r2n.at[slot].set(r2n_row),
+        slowdown=jt.slowdown.at[slot].set(jnp.ones((Pmax,), jnp.float32)),
+        start=jt.start.at[slot].set(np.float32(spec.start_us)),
+    )
+    done_row = np.arange(Pmax) >= sk.n_ranks
+    vms = state.vms
+    z_i = jnp.zeros((Pmax,), jnp.int32)
+    z_f = jnp.zeros((Pmax,), jnp.float32)
+    vms = vms._replace(
+        pc=vms.pc.at[slot].set(z_i), rnd=vms.rnd.at[slot].set(z_i),
+        emitted=vms.emitted.at[slot].set(jnp.zeros((Pmax,), bool)),
+        busy_until=vms.busy_until.at[slot].set(z_f),
+        send_need=vms.send_need.at[slot].set(z_i),
+        send_done=vms.send_done.at[slot].set(z_i),
+        recv_need=vms.recv_need.at[slot].set(z_i),
+        recv_done=vms.recv_done.at[slot].set(z_i),
+        comm_time=vms.comm_time.at[slot].set(z_f),
+        done=vms.done.at[slot].set(jnp.asarray(done_row)),
+    )
+    return state._replace(jobs=jobs, vms=vms)
+
+
+def retire_job(state: SimState, slot: int) -> SimState:
+    """Vacate job ``slot``: END-only program, ``start=inf``, all-done VMs.
+
+    The slot must have finished (``slot_done``) and drained
+    (``not slot_in_flight``) — retiring earlier would let in-flight
+    deliveries credit the next tenant.
+    """
+    jt = state.jobs
+    J, OPmax = jt.ops.shape[0], jt.ops.shape[1]
+    Pmax = jt.r2n.shape[1]
+    if not 0 <= slot < J:
+        raise ValueError(f"slot {slot} outside envelope Jmax={J}")
+    if not slot_done(state, slot):
+        raise ValueError(f"slot {slot} has unfinished ranks; cannot retire")
+    if slot_in_flight(state, slot):
+        raise ValueError(
+            f"slot {slot} still has in-flight messages; drain before retiring"
+        )
+    ops_row = np.zeros((OPmax, 4), np.int32)
+    ops_row[:, 0] = OP["END"]
+    jobs = jt._replace(
+        ops=jt.ops.at[slot].set(ops_row),
+        grid=jt.grid.at[slot].set(jnp.zeros((OPmax, 4), jnp.int32)),
+        P=jt.P.at[slot].set(np.int32(1)),
+        logp=jt.logp.at[slot].set(np.int32(1)),
+        r2n=jt.r2n.at[slot].set(jnp.zeros((Pmax,), jnp.int32)),
+        slowdown=jt.slowdown.at[slot].set(jnp.ones((Pmax,), jnp.float32)),
+        start=jt.start.at[slot].set(np.float32(np.inf)),
+    )
+    vms = state.vms
+    z_i = jnp.zeros((Pmax,), jnp.int32)
+    vms = vms._replace(
+        pc=vms.pc.at[slot].set(z_i), rnd=vms.rnd.at[slot].set(z_i),
+        emitted=vms.emitted.at[slot].set(jnp.zeros((Pmax,), bool)),
+        busy_until=vms.busy_until.at[slot].set(jnp.zeros((Pmax,), jnp.float32)),
+        send_need=vms.send_need.at[slot].set(z_i),
+        send_done=vms.send_done.at[slot].set(z_i),
+        recv_need=vms.recv_need.at[slot].set(z_i),
+        recv_done=vms.recv_done.at[slot].set(z_i),
+        comm_time=vms.comm_time.at[slot].set(jnp.zeros((Pmax,), jnp.float32)),
+        done=vms.done.at[slot].set(jnp.ones((Pmax,), bool)),
+    )
+    return state._replace(jobs=jobs, vms=vms)

@@ -6,10 +6,17 @@
   chosen router are assigned consecutively.
 * Random Groups (RG): a random selection of groups; nodes within the chosen
   groups assigned consecutively.
+
+**Incremental placement** (the online-scheduler path): an ``occupied``
+node mask restricts every policy to the free nodes while preserving the
+policy's structure — RR/RG still hand out each chosen router's/group's
+*free* nodes consecutively. With ``occupied=None`` the draw is
+bit-identical to the historical whole-system behaviour (the mask filters
+the same permutation, consuming the same RNG stream).
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -17,12 +24,37 @@ from repro.netsim.topology import Dragonfly
 
 
 def place_jobs(
-    topo: Dragonfly, job_sizes: Sequence[int], policy: str, seed: int = 0
+    topo: Dragonfly,
+    job_sizes: Sequence[int],
+    policy: str,
+    seed: int = 0,
+    occupied: Optional[np.ndarray] = None,
 ) -> List[np.ndarray]:
+    """Assign each job a disjoint set of free nodes under ``policy``.
+
+    ``occupied`` is an optional ``(n_nodes,)`` bool mask of nodes already
+    held by running jobs (``engine.occupied_node_mask``); they are never
+    assigned. Raises ``ValueError`` when the jobs outsize the free nodes
+    and ``RuntimeError`` if a policy would ever assign a node twice or
+    hand out an occupied node (the historical silent-overlap hazard: a
+    short tail slice quietly returned fewer nodes than ranks).
+    """
     rng = np.random.default_rng(seed)
     total = sum(job_sizes)
-    if total > topo.n_nodes:
-        raise ValueError(f"jobs need {total} nodes, system has {topo.n_nodes}")
+    if occupied is None:
+        occ = np.zeros((topo.n_nodes,), bool)
+    else:
+        occ = np.asarray(occupied, bool)
+        if occ.shape != (topo.n_nodes,):
+            raise ValueError(
+                f"occupied mask shape {occ.shape} != ({topo.n_nodes},)"
+            )
+    n_free = int(topo.n_nodes - occ.sum())
+    if total > n_free:
+        raise ValueError(
+            f"jobs need {total} nodes, system has {n_free} free "
+            f"(of {topo.n_nodes})"
+        )
     p = topo.nodes_per_router
     a = topo.routers_per_group
 
@@ -40,8 +72,27 @@ def place_jobs(
     else:
         raise ValueError(f"unknown placement policy {policy!r}")
 
+    order = order[~occ[order]]  # free nodes only, policy order preserved
+
     out, off = [], 0
     for s in job_sizes:
-        out.append(np.asarray(order[off : off + s], np.int64))
+        nodes = np.asarray(order[off : off + s], np.int64)
+        if nodes.shape[0] != s:
+            raise RuntimeError(
+                f"placement {policy} produced {nodes.shape[0]} nodes for a "
+                f"{s}-rank job (order exhausted)"
+            )
+        out.append(nodes)
         off += s
+
+    flat = np.concatenate(out) if out else np.zeros((0,), np.int64)
+    if flat.size != np.unique(flat).size:
+        raise RuntimeError(
+            f"placement {policy} assigned a node to two jobs "
+            f"(sizes={list(job_sizes)}, seed={seed})"
+        )
+    if occ[flat].any():
+        raise RuntimeError(
+            f"placement {policy} assigned an occupied node (seed={seed})"
+        )
     return out

@@ -1,0 +1,35 @@
+"""repro.sched — trace-driven online cluster scheduler.
+
+The Union manager launches a *fixed* hybrid mix; this subsystem handles
+the open-stream setting: jobs **arrive** over time (synthetic
+Poisson/Weibull traces or replayed JSON traces, :mod:`repro.sched.trace`),
+wait in a pending queue under FCFS or EASY-backfill
+(:mod:`repro.sched.queue`), and are placed incrementally against the
+occupied node set, streaming through one compiled engine envelope via
+slot-recycling windows (:mod:`repro.sched.scheduler`).
+"""
+from repro.sched.queue import PendingQueue, QueuedJob, simulate_queue
+from repro.sched.scheduler import JobRecord, SchedResult, run_trace
+from repro.sched.trace import (
+    CatalogApp,
+    Trace,
+    TraceJob,
+    default_catalog,
+    load_trace,
+    synthetic_trace,
+)
+
+__all__ = [
+    "CatalogApp",
+    "JobRecord",
+    "PendingQueue",
+    "QueuedJob",
+    "SchedResult",
+    "Trace",
+    "TraceJob",
+    "default_catalog",
+    "load_trace",
+    "run_trace",
+    "simulate_queue",
+    "synthetic_trace",
+]

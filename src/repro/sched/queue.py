@@ -1,0 +1,228 @@
+"""Pending-queue state and policies: FCFS and EASY backfill.
+
+The queue is plain host-side state (scheduling decisions happen between
+engine windows). Two resources bound admission: free **nodes** (the
+dragonfly's) and free engine **job slots** (the compiled envelope's
+``Jmax``); every job uses one slot and ``n_ranks`` nodes.
+
+* **FCFS** starts the arrival-order prefix that fits; the head of the
+  queue blocks everything behind it.
+* **EASY backfill** (Mu'alem & Feitelson) gives the blocked head a
+  *reservation*: the shadow time when, by the running jobs' user
+  estimates, enough nodes and a slot will be free. Any later job may jump
+  the queue iff it fits now and either (a) its estimated completion is
+  before the shadow time, or (b) it only uses nodes/slots the head won't
+  need then ("extra"). The head's reserved start is never delayed —
+  :func:`simulate_queue` plus the hypothesis property test pin this.
+
+Wait/slowdown accounting lives with the records the scheduler keeps; the
+queue only decides *who starts now*.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+POLICIES = ("fcfs", "easy")
+
+
+@dataclass
+class QueuedJob:
+    """A pending arrival, as the queue sees it."""
+
+    jid: int  # trace order (stable tiebreak)
+    name: str
+    n_ranks: int
+    arrival_us: float
+    est_runtime_us: float
+    payload: Any = None  # scheduler-side resolution (skeleton etc.)
+
+
+@dataclass
+class Reservation:
+    """The head-of-queue job's EASY reservation at one decision point."""
+
+    jid: int
+    shadow_us: float  # reserved start (by running jobs' estimates)
+    extra_nodes: int  # free-now nodes the head won't need at shadow time
+    extra_slots: int
+
+
+@dataclass
+class PendingQueue:
+    """Arrival-ordered pending jobs plus the admission policy."""
+
+    policy: str = "fcfs"
+    jobs: List[QueuedJob] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown queue policy {self.policy!r}; expected one of "
+                f"{POLICIES}"
+            )
+
+    def push(self, job: QueuedJob) -> None:
+        self.jobs.append(job)
+
+    def __len__(self) -> int:
+        return len(self.jobs)
+
+    def __bool__(self) -> bool:
+        return bool(self.jobs)
+
+    def select(
+        self,
+        now: float,
+        free_nodes: int,
+        free_slots: int,
+        running: Sequence[Tuple[float, int]],
+    ) -> Tuple[List[QueuedJob], Optional[Reservation]]:
+        """Pop the jobs that start *now*; return them plus the head's
+        reservation (EASY, when the head is blocked).
+
+        ``running`` lists ``(est_end_us, n_ranks)`` of currently running
+        jobs — the estimate base for the shadow-time computation.
+        """
+        starts: List[QueuedJob] = []
+        # both policies start the runnable arrival-order prefix
+        while self.jobs:
+            head = self.jobs[0]
+            if free_slots >= 1 and head.n_ranks <= free_nodes:
+                starts.append(self.jobs.pop(0))
+                free_slots -= 1
+                free_nodes -= head.n_ranks
+            else:
+                break
+        if not self.jobs or self.policy == "fcfs":
+            return starts, None
+
+        # EASY: the head is blocked — reserve its start, then backfill.
+        # Started jobs count as running at their estimates.
+        run = [(end, n) for end, n in running]
+        run += [(now + j.est_runtime_us, j.n_ranks) for j in starts]
+        head = self.jobs[0]
+        resv = _reservation(head, now, free_nodes, free_slots, run)
+        extra_nodes, extra_slots = resv.extra_nodes, resv.extra_slots
+
+        i = 1
+        while i < len(self.jobs) and free_slots >= 1:
+            cand = self.jobs[i]
+            fits_now = cand.n_ranks <= free_nodes
+            before_shadow = now + cand.est_runtime_us <= resv.shadow_us
+            in_extra = (
+                cand.n_ranks <= extra_nodes and extra_slots >= 1
+            )
+            if fits_now and (before_shadow or in_extra):
+                starts.append(self.jobs.pop(i))
+                free_slots -= 1
+                free_nodes -= cand.n_ranks
+                if not before_shadow:
+                    # runs past the shadow time: it consumes the head's
+                    # spare capacity permanently
+                    extra_nodes -= cand.n_ranks
+                    extra_slots -= 1
+                else:
+                    # ends before the shadow: its nodes return in time,
+                    # but they are gone from "free now" (updated above)
+                    extra_nodes = min(extra_nodes, free_nodes)
+            else:
+                i += 1
+        return starts, resv
+
+
+def _reservation(
+    head: QueuedJob,
+    now: float,
+    free_nodes: int,
+    free_slots: int,
+    running: Sequence[Tuple[float, int]],
+) -> Reservation:
+    """Shadow time: walk running jobs by estimated end, accumulating freed
+    nodes/slots until the head fits both."""
+    nodes, slots, shadow = free_nodes, free_slots, now
+    for end, n in sorted(running):
+        if nodes >= head.n_ranks and slots >= 1:
+            break
+        nodes += n
+        slots += 1
+        shadow = max(shadow, end)
+    if nodes < head.n_ranks or slots < 1:
+        # not startable even on an empty system — callers validate job
+        # sizes up front, so this is a logic error, not a user error
+        raise RuntimeError(
+            f"job {head.name!r} ({head.n_ranks} ranks) can never start"
+        )
+    return Reservation(
+        jid=head.jid, shadow_us=shadow,
+        extra_nodes=nodes - head.n_ranks, extra_slots=slots - 1,
+    )
+
+
+def simulate_queue(
+    jobs: Sequence[QueuedJob],
+    n_nodes: int,
+    n_slots: int,
+    policy: str = "fcfs",
+) -> Dict[str, Any]:
+    """Estimate-driven discrete-event run of the queue alone (no network
+    engine): every job's *actual* runtime equals its estimate.
+
+    The analytic mirror of the full scheduler — used by the property
+    tests (EASY never delays the head's reserved start) and for quick
+    policy comparisons. Returns per-job ``(start_us, end_us)`` plus
+    makespan and the reservation log.
+    """
+    q = PendingQueue(policy=policy)
+    pending = sorted(jobs, key=lambda j: (j.arrival_us, j.jid))
+    for j in pending:
+        if j.n_ranks > n_nodes:
+            raise ValueError(f"job {j.name!r} needs {j.n_ranks} > {n_nodes}")
+    ai = 0
+    now = 0.0
+    free_nodes, free_slots = n_nodes, n_slots
+    running: List[Tuple[float, int, QueuedJob]] = []  # (end, n, job)
+    out: Dict[int, Tuple[float, float]] = {}
+    reservations: List[Reservation] = []
+    while ai < len(pending) or q or running:
+        # 1. arrivals at or before now
+        while ai < len(pending) and pending[ai].arrival_us <= now:
+            q.push(pending[ai])
+            ai += 1
+        # 2. completions at or before now
+        still = []
+        for end, n, job in running:
+            if end <= now:
+                free_nodes += n
+                free_slots += 1
+            else:
+                still.append((end, n, job))
+        running = still
+        # 3. starts
+        starts, resv = q.select(
+            now, free_nodes, free_slots,
+            [(end, n) for end, n, _ in running],
+        )
+        if resv is not None:
+            reservations.append(resv)
+        for job in starts:
+            free_nodes -= job.n_ranks
+            free_slots -= 1
+            end = now + job.est_runtime_us
+            running.append((end, job.n_ranks, job))
+            out[job.jid] = (now, end)
+        # 4. advance to the next event
+        nxt = []
+        if running:
+            nxt.append(min(end for end, _, _ in running))
+        if ai < len(pending):
+            nxt.append(pending[ai].arrival_us)
+        if not nxt:
+            break
+        now = max(now, min(nxt))
+    spans = {jid: dict(start_us=s, end_us=e) for jid, (s, e) in out.items()}
+    return dict(
+        spans=spans,
+        makespan_us=max((e for _, e in out.values()), default=0.0),
+        reservations=reservations,
+    )

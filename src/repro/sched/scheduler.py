@@ -1,0 +1,348 @@
+"""The rolling-horizon online scheduler: trace -> chained engine windows.
+
+One compiled ``EngineCapacity(Jmax=slots, Pmax, OPmax)`` envelope serves
+the whole trace. The host loop alternates with the engine:
+
+1. pull arrivals whose time has come into the pending queue;
+2. retire finished slots (VMs done *and* pool drained — a slot must not
+   be recycled while its messages are in flight), freeing their nodes;
+3. ask the queue policy (FCFS / EASY backfill) who starts now, place each
+   start against the currently occupied node set (``place_jobs`` with the
+   ``occupied`` mask), and :func:`~repro.netsim.engine.admit_job` it into
+   a free slot;
+4. ``run_window(state, t_stop)`` — advance virtual time to the next
+   scheduling event (the next arrival, or any slot completing).
+
+Hundreds of jobs stream through ``Jmax`` slots this way; state (clock,
+in-flight messages, metrics, RNG) carries over across windows, and a
+chained run is bit-identical to a single uninterrupted run of the same
+job set (pinned by tests/test_sched.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.netsim.config import NetConfig
+from repro.netsim.engine import (
+    EngineCapacity,
+    JobSpec,
+    admit_job,
+    build_engine,
+    retire_job,
+    slot_done,
+    slot_in_flight,
+)
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import get_topology
+from repro.sched.queue import PendingQueue, QueuedJob
+from repro.sched.trace import Trace, TraceJob
+from repro.union import manager as MGR
+
+
+@dataclass
+class JobRecord:
+    """One trace job's life: arrival -> start -> finish, plus metrics."""
+
+    jid: int
+    name: str
+    app: str
+    n_ranks: int
+    arrival_us: float
+    est_runtime_us: float
+    slot: int = -1
+    start_us: float = float("nan")
+    finish_us: float = float("nan")
+    completed: bool = False
+    msgs: int = 0
+    avg_latency_us: float = 0.0
+    max_comm_ms: float = 0.0
+    nodes: Optional[np.ndarray] = None
+
+    @property
+    def wait_us(self) -> float:
+        return self.start_us - self.arrival_us
+
+    @property
+    def runtime_us(self) -> float:
+        return self.finish_us - self.start_us
+
+    def bounded_slowdown(self, tau_us: float = 10_000.0) -> float:
+        """max((wait + run) / max(run, tau), 1) — the BSLD metric."""
+        if not self.completed:
+            return float("nan")
+        run = self.runtime_us
+        return max((self.wait_us + run) / max(run, tau_us), 1.0)
+
+    def to_dict(self, tau_us: float = 10_000.0) -> Dict[str, Any]:
+        return dict(
+            name=self.name, app=self.app, n_ranks=self.n_ranks,
+            slot=self.slot, arrival_us=self.arrival_us,
+            start_us=self.start_us, finish_us=self.finish_us,
+            wait_us=self.wait_us, runtime_us=self.runtime_us,
+            est_runtime_us=self.est_runtime_us,
+            bounded_slowdown=self.bounded_slowdown(tau_us),
+            completed=self.completed, msgs=self.msgs,
+            avg_latency_us=self.avg_latency_us,
+            max_comm_ms=self.max_comm_ms,
+        )
+
+
+@dataclass
+class SchedResult:
+    trace: Trace
+    policy: str
+    slots: int
+    seed: int
+    records: List[JobRecord]
+    makespan_us: float
+    utilization: float  # node-seconds used / (n_nodes * makespan)
+    windows: int
+    wall_s: float
+    horizon_hit: bool
+    n_nodes: int
+    capacity: EngineCapacity
+    final_state: Any = field(default=None, repr=False)
+
+    @property
+    def jobs_per_sec(self) -> float:
+        return len(self.records) / max(self.wall_s, 1e-9)
+
+
+@dataclass
+class _Resolved:
+    tj: TraceJob
+    skeleton: Any
+    n_ranks: int
+    arrival_us: float  # float32-exact
+
+
+def _resolve_trace(trace: Trace, slots: int):
+    trace.validate()
+    topo = get_topology(trace.topo, trace.scale)
+    resolved = []
+    for tj in trace.jobs:
+        sk = MGR.build_job_skeleton(tj.to_scenario_job(), trace.scale)
+        if sk.n_ranks > topo.n_nodes:
+            raise ValueError(
+                f"trace job {tj.name!r} needs {sk.n_ranks} nodes; the "
+                f"{trace.topo}/{trace.scale} system has {topo.n_nodes}"
+            )
+        resolved.append(_Resolved(
+            tj=tj, skeleton=sk, n_ranks=sk.n_ranks,
+            # the engine clock is float32 — quantize arrivals so window
+            # caps and job starts are representable exactly
+            arrival_us=float(np.float32(tj.arrival_us)),
+        ))
+    resolved.sort(key=lambda r: (r.arrival_us, r.tj.name))
+    cap = EngineCapacity(
+        Jmax=slots,
+        Pmax=max(r.n_ranks for r in resolved),
+        OPmax=max(r.skeleton.n_ops for r in resolved),
+    )
+    pool_size = trace.pool_size or MGR.DEFAULT_POOL[trace.scale]
+    net = NetConfig(pool_size=pool_size, tick_us=trace.tick_us)
+    return topo, resolved, cap, net
+
+
+def build_sched_engine(
+    trace: Trace,
+    slots: Optional[int] = None,
+    engine_cache: Optional[Dict] = None,
+):
+    """Compile the scheduler's engine for a trace: one envelope sized
+    ``Jmax=slots`` serves every window. Returns ``(engine, topo,
+    resolved_jobs, net)`` — reusable across seeds/policies of the same
+    trace shape.
+
+    ``engine_cache`` (any dict the caller keeps) memoizes compiled
+    engines by capacity envelope + system config, so campaigns over many
+    synthetic-trace seeds whose draws resolve to the same envelope pay
+    one compile (the job tables are runtime data anyway)."""
+    slots = slots or trace.slots
+    topo, resolved, cap, net = _resolve_trace(trace, slots)
+    key = (
+        cap, trace.topo, trace.scale, trace.routing.upper(),
+        float(trace.tick_us), int(net.pool_size),
+        float(trace.horizon_ms),
+    )
+    eng = engine_cache.get(key) if engine_cache is not None else None
+    if eng is None:
+        eng = build_engine(
+            topo, [], routing=trace.routing, net=net,
+            pool_size=net.pool_size, horizon_us=trace.horizon_ms * 1000.0,
+            capacity=cap,
+        )
+        if engine_cache is not None:
+            engine_cache[key] = eng
+    return eng, topo, resolved, net
+
+
+def run_trace(
+    trace: Trace,
+    policy: str = "easy",
+    slots: Optional[int] = None,
+    seed: int = 0,
+    engine=None,
+    collect_state: bool = False,
+) -> SchedResult:
+    """Stream a trace through the online scheduler.
+
+    ``seed`` drives placement draws and the engine RNG (routing
+    tiebreaks). Pass a prebuilt ``engine`` tuple (from
+    :func:`build_sched_engine`) to reuse the jit cache across policies
+    and seeds — the policy comparison then measures scheduling, not
+    recompilation.
+    """
+    slots = slots or trace.slots
+    t0 = time.time()
+    if engine is None:
+        engine = build_sched_engine(trace, slots)
+    eng, topo, resolved, net = engine
+    horizon_us = trace.horizon_ms * 1000.0
+
+    state = eng.init_state(seed=MGR._engine_seed(seed))
+    queue = PendingQueue(policy=policy)
+    free_slots = list(range(slots))
+    occupied = np.zeros((topo.n_nodes,), bool)
+    running: Dict[int, JobRecord] = {}
+    draining: Dict[int, JobRecord] = {}
+    records: List[JobRecord] = []
+    lat0: Dict[int, Tuple[float, int]] = {}  # slot -> (lat_sum, lat_cnt)
+
+    arrivals = [
+        QueuedJob(jid=i, name=r.tj.name, n_ranks=r.n_ranks,
+                  arrival_us=r.arrival_us,
+                  est_runtime_us=float(r.tj.est_runtime_us), payload=r)
+        for i, r in enumerate(resolved)
+    ]
+    ai = 0
+    windows = 0
+    horizon_hit = False
+    guard = 20 * len(arrivals) + 1000
+
+    while ai < len(arrivals) or queue or running or draining:
+        guard -= 1
+        if guard < 0:
+            raise RuntimeError(
+                "scheduler made no progress (windows stopped advancing); "
+                "this is a bug — please report the trace"
+            )
+        t_now = float(state.t)
+        if t_now >= horizon_us:
+            horizon_hit = True
+            break
+
+        # 1. arrivals whose time has come (plus a fast-forward pull when
+        # the system is empty: the engine skips to the job's start)
+        while ai < len(arrivals) and arrivals[ai].arrival_us <= t_now:
+            queue.push(arrivals[ai])
+            ai += 1
+        if not queue and not running and not draining and ai < len(arrivals):
+            queue.push(arrivals[ai])
+            ai += 1
+
+        # 2. retire finished slots; free nodes immediately, recycle the
+        # slot once its messages drained
+        for slot, rec in list(running.items()):
+            if slot_done(state, slot):
+                rec.finish_us = min(t_now, horizon_us)
+                rec.completed = True
+                s1 = float(state.metrics.lat_sum[slot])
+                c1 = int(state.metrics.lat_cnt[slot])
+                s0, c0 = lat0[slot]
+                rec.msgs = c1 - c0
+                rec.avg_latency_us = (s1 - s0) / max(rec.msgs, 1)
+                ct = np.asarray(state.vms.comm_time[slot, : rec.n_ranks])
+                rec.max_comm_ms = float(ct.max()) / 1000.0
+                occupied[rec.nodes] = False
+                del running[slot]
+                draining[slot] = rec
+        for slot, rec in list(draining.items()):
+            if not slot_in_flight(state, slot):
+                state = retire_job(state, slot)
+                free_slots.append(slot)
+                records.append(rec)
+                del draining[slot]
+
+        # 3. admissions: the queue policy decides who starts now
+        free_nodes = int(topo.n_nodes - occupied.sum())
+        running_ests = [
+            (r.start_us + r.est_runtime_us, r.n_ranks)
+            for r in running.values()
+        ]
+        # draining slots hold no nodes but do hold their slot until the
+        # last in-flight message lands — model that as an imminent free
+        running_ests += [(t_now + net.tick_us, 0) for _ in draining]
+        starts, _resv = queue.select(
+            t_now, free_nodes, len(free_slots), running_ests)
+        for qjob in starts:
+            r: _Resolved = qjob.payload
+            slot = min(free_slots)
+            free_slots.remove(slot)
+            nodes = place_jobs(
+                topo, [qjob.n_ranks], trace.placement,
+                seed=_place_seed(seed, qjob.jid), occupied=occupied,
+            )[0]
+            occupied[nodes] = True
+            start = float(np.float32(max(t_now, qjob.arrival_us)))
+            rec = JobRecord(
+                jid=qjob.jid, name=qjob.name, app=r.tj.app,
+                n_ranks=qjob.n_ranks, arrival_us=qjob.arrival_us,
+                est_runtime_us=qjob.est_runtime_us, slot=slot,
+                start_us=start, nodes=nodes,
+            )
+            lat0[slot] = (
+                float(state.metrics.lat_sum[slot]),
+                int(state.metrics.lat_cnt[slot]),
+            )
+            state = admit_job(
+                state, slot,
+                JobSpec(qjob.name, r.skeleton, nodes, start_us=start),
+            )
+            running[slot] = rec
+
+        if not (running or draining or queue) and ai >= len(arrivals):
+            break
+
+        # 4. one window: run to the next arrival or the next completion
+        t_stop = (
+            arrivals[ai].arrival_us if ai < len(arrivals) else np.inf
+        )
+        state = eng.run_window(state, np.float32(t_stop))
+        windows += 1
+
+    # horizon-capped leftovers: mark incomplete (still-running, queued,
+    # and arrivals the horizon cut off before they ever reached the queue)
+    for rec in list(running.values()) + list(draining.values()):
+        records.append(rec)
+    for qjob in queue.jobs + arrivals[ai:]:
+        records.append(JobRecord(
+            jid=qjob.jid, name=qjob.name, app=qjob.payload.tj.app,
+            n_ranks=qjob.n_ranks, arrival_us=qjob.arrival_us,
+            est_runtime_us=qjob.est_runtime_us,
+        ))
+    records.sort(key=lambda r: r.jid)
+    assert len(records) == len(arrivals)
+
+    done = [r for r in records if r.completed]
+    makespan = max((r.finish_us for r in done), default=0.0)
+    util = (
+        sum(r.n_ranks * r.runtime_us for r in done)
+        / max(topo.n_nodes * makespan, 1e-9)
+    )
+    return SchedResult(
+        trace=trace, policy=policy, slots=slots, seed=seed, records=records,
+        makespan_us=makespan, utilization=util, windows=windows,
+        wall_s=time.time() - t0, horizon_hit=horizon_hit,
+        n_nodes=topo.n_nodes, capacity=eng.capacity,
+        final_state=state if collect_state else None,
+    )
+
+
+def _place_seed(seed: int, jid: int) -> int:
+    """Per-(run, job) placement stream — decorrelated, deterministic."""
+    return (seed * 1_000_003 + jid * 7919 + 17) % (2**31)

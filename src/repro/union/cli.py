@@ -10,6 +10,11 @@ Examples::
 
     # write a builtin mix out as an editable scenario file
     python -m repro.union --scenario workload2 --emit my_mix.json
+
+    # online scheduling: stream a 64-job Poisson trace through 8 job
+    # slots under EASY backfill (or replay a trace file)
+    python -m repro.union --trace poisson --trace-jobs 64 --sched easy
+    python -m repro.union --trace my_trace.json --sched fcfs easy
 """
 from __future__ import annotations
 
@@ -39,24 +44,93 @@ def _apply_cli_overrides(sc: Scenario, args) -> Scenario:
     return sc
 
 
+def _run_trace_mode(ap, args) -> None:
+    """--trace: the online scheduler (repro.sched) instead of a fixed mix."""
+    from repro.sched import load_trace, synthetic_trace
+
+    if args.trace in ("poisson", "weibull"):
+        def trace_factory(seed):
+            return synthetic_trace(
+                args.trace_jobs, arrival=args.trace,
+                mean_gap_us=args.trace_gap_us, seed=seed,
+                slots=args.slots or 8,
+            )
+        trace_or_factory = trace_factory
+        name = f"{args.trace}-{args.trace_jobs}x"
+    elif os.path.exists(args.trace):
+        trace_or_factory = load_trace(args.trace)
+        name = trace_or_factory.name
+    elif args.trace.endswith(".json"):
+        ap.error(f"--trace {args.trace!r}: file not found")
+    else:
+        ap.error(f"--trace {args.trace!r}: not a file and not"
+                 " 'poisson'/'weibull'")
+
+    seeds = [args.seed + i for i in range(args.trace_seeds)]
+    print(f"=== trace campaign: {name} × {len(seeds)} seed(s) × "
+          f"policies {args.sched} ===")
+    camp = ensemble.run_sched_campaign(
+        trace_or_factory, policies=args.sched, seeds=seeds, slots=args.slots)
+    for pol in args.sched:
+        for row in camp["runs"][pol]:
+            print(REP.format_sched_summary(row))
+    if len(args.sched) > 1 or len(seeds) > 1:
+        print("--- aggregate (per policy) ---")
+        for pol, a in camp["summary"].items():
+            print(f"  {pol:>5}: completed {a['completed']}/{a['jobs']} | "
+                  f"wait mean {a['mean_wait_us']['mean']:.0f}us | "
+                  f"BSLD mean {a['mean_bounded_slowdown']['mean']:.2f} | "
+                  f"util {a['utilization']['mean']:.1%} | makespan "
+                  f"{a['makespan_ms']['mean']:.1f}ms")
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"trace__{name}__{'+'.join(args.sched)}_s{args.seed}"[:120]
+    path = os.path.join(args.out, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(camp, f, indent=1, default=float)
+    print(f"wrote {path}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro.union",
         description="Union workload manager: declarative scenarios, "
         "staggered arrivals, vmapped ensemble campaigns.",
     )
-    ap.add_argument("--scenario", required=True, nargs="+",
+    ap.add_argument("--scenario", nargs="+",
                     help=f"scenario JSON file(s), or builtin: {sorted(MIXES)}"
                     " / baseline-<app>. More than one spec runs a *ragged*"
                     " campaign: members with different job/rank counts,"
                     " bucketed by engine envelope, one batched run per"
                     " bucket.")
+    ap.add_argument("--trace", default=None,
+                    help="online-scheduler mode: a trace JSON file, or"
+                    " 'poisson' / 'weibull' for a synthetic arrival stream"
+                    " drawn from the app catalog (see docs/sched.md)")
+    ap.add_argument("--sched", nargs="+", default=["easy"],
+                    choices=["fcfs", "easy"],
+                    help="queue policy(ies) for --trace runs; more than one"
+                    " compares policies on the same trace + engine")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine job slots (Jmax envelope) for --trace runs"
+                    " (default: the trace's own 'slots', 8 for synthetic)")
+    ap.add_argument("--trace-jobs", type=int, default=64,
+                    help="synthetic trace length (--trace poisson/weibull)")
+    ap.add_argument("--trace-gap-us", type=float, default=2000.0,
+                    help="mean interarrival gap for synthetic traces")
+    ap.add_argument("--trace-seeds", type=int, default=1,
+                    help="number of trace seeds (campaign over seeds x"
+                    " policies; synthetic traces redraw arrivals per seed)")
     ap.add_argument("--members", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sequential", action="store_true",
                     help="loop members instead of vmapping (debug/bench)")
     ap.add_argument("--baselines", action="store_true",
                     help="also run each app alone; report interference deltas")
+    ap.add_argument("--placements", nargs="+", default=None,
+                    choices=["RN", "RR", "RG"],
+                    help="with --baselines: repeat the co-run + baseline"
+                    " campaigns under each placement policy and report the"
+                    " per-(app, policy) interference matrix (Fig. 7/9 grid)")
     ap.add_argument("--strict", action="store_true",
                     help="raise when the message pool drops allocations")
     ap.add_argument("--arrival-jitter-us", type=float, default=0.0,
@@ -70,6 +144,12 @@ def main(argv=None) -> None:
     ap.add_argument("--emit", metavar="PATH", default=None,
                     help="write the resolved scenario spec to PATH and exit")
     args = ap.parse_args(argv)
+
+    if args.trace is not None:
+        _run_trace_mode(ap, args)
+        return
+    if not args.scenario:
+        ap.error("one of --scenario or --trace is required")
 
     scenarios = [
         _apply_cli_overrides(load_scenario(s), args) for s in args.scenario
@@ -122,16 +202,21 @@ def main(argv=None) -> None:
                         members=camp.reports)
 
     if args.baselines:
-        baselines = {}
-        for job in sc.jobs:
-            base_sc = dataclasses.replace(
-                sc, name=f"baseline-{job.app}",
-                jobs=[dataclasses.replace(job, start_us=0.0)], ur=None)
-            print(f"--- baseline: {job.app} alone ---")
-            bcamp = ensemble.run_campaign(
-                base_sc, members=args.members, base_seed=args.seed,
-                vmapped=not args.sequential, strict=args.strict)
-            baselines[job.app] = bcamp.summary
+        def corun_and_baselines(scn):
+            bl = {}
+            for job in scn.jobs:
+                base_sc = dataclasses.replace(
+                    scn, name=f"baseline-{job.app}",
+                    jobs=[dataclasses.replace(job, start_us=0.0)], ur=None)
+                print(f"--- baseline: {job.app} alone "
+                      f"({scn.placement}) ---")
+                bcamp = ensemble.run_campaign(
+                    base_sc, members=args.members, base_seed=args.seed,
+                    vmapped=not args.sequential, strict=args.strict)
+                bl[job.app] = bcamp.summary
+            return bl
+
+        baselines = corun_and_baselines(sc)
         interference = REP.interference_summary(camp.summary, baselines)
         result["baselines"] = baselines
         result["interference"] = interference
@@ -141,6 +226,29 @@ def main(argv=None) -> None:
                   f"(variation {d['latency_variation_baseline']:.1%} -> "
                   f"{d['latency_variation_corun']:.1%}) | "
                   f"comm time x{d['comm_time_inflation']:.2f}")
+
+        if args.placements:
+            by_policy = {sc.placement: camp.summary}
+            baselines_by_policy = {sc.placement: baselines}
+            for pol in args.placements:
+                if pol == sc.placement:
+                    continue
+                sc_p = dataclasses.replace(
+                    sc, name=f"{sc.name}-{pol}", placement=pol)
+                print(f"--- co-run under placement {pol} ---")
+                pcamp = ensemble.run_campaign(
+                    sc_p, members=args.members, base_seed=args.seed,
+                    vmapped=not args.sequential, strict=args.strict)
+                by_policy[pol] = pcamp.summary
+                baselines_by_policy[pol] = corun_and_baselines(sc_p)
+            matrix = REP.interference_matrix(by_policy, baselines_by_policy)
+            result["interference_matrix"] = matrix
+            print("=== interference matrix (app x placement policy) ===")
+            for app in matrix["apps"]:
+                row = " ".join(
+                    f"{pol}: x{matrix['comm_time_inflation'][app][pol]:.2f}"
+                    for pol in matrix["comm_time_inflation"][app])
+                print(f"  {app:>12} comm-time inflation | {row}")
 
     tag = f"{sc.name}__{sc.topo}__{sc.placement}__{sc.routing}__{sc.scale}" \
           f"__m{args.members}_s{args.seed}"

@@ -191,6 +191,64 @@ def _bucket_key(rs: MGR.ResolvedScenario) -> Tuple:
     )
 
 
+def run_sched_campaign(
+    trace_or_factory,
+    policies: Sequence[str] = ("fcfs", "easy"),
+    seeds: Sequence[int] = (0,),
+    slots: Optional[int] = None,
+    tau_us: float = 10_000.0,
+) -> Dict[str, Any]:
+    """Online-scheduler campaign: trace seeds × queue policies.
+
+    ``trace_or_factory`` is a :class:`repro.sched.Trace` (same job stream
+    every seed; the seed varies placement draws and engine RNG) or a
+    callable ``seed -> Trace`` (fresh arrival draws per seed — the
+    synthetic-trace sweep). Each (seed, policy) cell runs the full
+    slot-recycling scheduler; one engine is compiled per trace shape and
+    shared across the policy comparison, so the deltas measure
+    scheduling, not recompilation.
+    """
+    from repro.sched.scheduler import build_sched_engine, run_trace
+    from repro.union.report import _spread, sched_summary
+
+    cells: Dict[str, List[Dict]] = {p: [] for p in policies}
+    t0 = time.time()
+    fixed_engine = None
+    engine_cache: Dict = {}  # factory traces sharing an envelope share jits
+    for seed in seeds:
+        if callable(trace_or_factory):
+            trace = trace_or_factory(seed)
+            engine = build_sched_engine(trace, slots,
+                                        engine_cache=engine_cache)
+        else:
+            trace = trace_or_factory
+            if fixed_engine is None:
+                fixed_engine = build_sched_engine(trace, slots)
+            engine = fixed_engine
+        for pol in policies:
+            res = run_trace(trace, policy=pol, slots=slots, seed=seed,
+                            engine=engine)
+            cells[pol].append(sched_summary(res, tau_us=tau_us))
+    wall = time.time() - t0
+    agg = {
+        pol: dict(
+            runs=len(rows),
+            completed=int(sum(r["completed"] for r in rows)),
+            jobs=int(sum(r["jobs"] for r in rows)),
+            mean_wait_us=_spread([r["wait_us"]["mean"] for r in rows]),
+            mean_bounded_slowdown=_spread(
+                [r["bounded_slowdown"]["mean"] for r in rows]),
+            utilization=_spread([r["utilization"] for r in rows]),
+            makespan_ms=_spread([r["makespan_ms"] for r in rows]),
+        )
+        for pol, rows in cells.items()
+    }
+    return dict(
+        policies=list(policies), seeds=list(seeds), wall_s=wall,
+        summary=agg, runs=cells,
+    )
+
+
 def run_ragged_campaign(
     scenarios: Sequence[Scenario],
     seeds: Optional[Sequence[int]] = None,

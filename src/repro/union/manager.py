@@ -5,6 +5,11 @@ into everything ``netsim.engine.build_engine`` needs (skeletons, topology,
 placements, NetConfig, arrival offsets); ``build`` compiles the engine;
 ``run_scenario`` runs a single member and returns the standard report.
 Ensemble campaigns over many members live in :mod:`repro.union.ensemble`.
+
+:func:`build_job_skeleton` is the shared app-resolution entry point: both
+scenario jobs and online-scheduler trace jobs
+(:mod:`repro.sched.trace`) resolve through it, so the two input languages
+share one app catalog (SPECS names, ``hlo:`` records, inline DSL).
 """
 from __future__ import annotations
 
@@ -141,7 +146,9 @@ def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
 
 
 def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None):
-    """Compile the engine for a resolved scenario: (init_state, run, tick).
+    """Compile the engine for a resolved scenario: an
+    :class:`~repro.netsim.engine.Engine` (unpacks as ``init, run, tick``;
+    carries ``run_window`` for windowed/scheduled runs).
 
     ``capacity`` widens the envelope beyond this scenario's own needs so
     the same compiled engine can serve other (smaller) scenarios — the

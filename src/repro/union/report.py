@@ -97,6 +97,92 @@ def interference_summary(
     return out
 
 
+def interference_matrix(
+    by_policy: Dict[str, Dict[str, Any]],
+    baselines_by_policy: Dict[str, Dict[str, Dict[str, Any]]],
+) -> Dict[str, Any]:
+    """Per-(app, placement-policy) interference matrix — the full Fig. 7/9
+    grid: rows are apps, columns placement policies (RN/RR/RG), cells the
+    co-run-vs-baseline inflation of :func:`interference_summary`.
+
+    ``by_policy`` maps placement policy -> that policy's co-run campaign
+    summary; ``baselines_by_policy`` maps policy -> per-app baseline
+    summaries (each app alone under the same placement policy).
+    """
+    apps: List[str] = []
+    cells: Dict[str, Dict[str, Any]] = {}
+    for pol, corun in by_policy.items():
+        per_app = interference_summary(corun, baselines_by_policy.get(pol, {}))
+        for app, d in per_app.items():
+            if app not in apps:
+                apps.append(app)
+            cells.setdefault(app, {})[pol] = d
+    return dict(
+        apps=apps,
+        policies=list(by_policy),
+        matrix=cells,
+        # the headline grids: latency variation (HPC signature) and
+        # comm-time inflation (ML signature), app x policy
+        latency_variation={
+            app: {pol: d["latency_variation_corun"]
+                  for pol, d in cells[app].items()}
+            for app in apps
+        },
+        comm_time_inflation={
+            app: {pol: d["comm_time_inflation"]
+                  for pol, d in cells[app].items()}
+            for app in apps
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# online-scheduler (repro.sched) aggregation
+# ---------------------------------------------------------------------------
+
+def sched_summary(result, tau_us: float = 10_000.0) -> Dict[str, Any]:
+    """Aggregate one :class:`repro.sched.SchedResult`: per-job wait time,
+    bounded slowdown, and system utilization — the scheduler-side metrics
+    next to the engine's latency/comm-time interference ones."""
+    recs = result.records
+    done = [r for r in recs if r.completed]
+    per_job = [r.to_dict(tau_us) for r in recs]
+    return dict(
+        trace=result.trace.name,
+        policy=result.policy,
+        slots=result.slots,
+        seed=result.seed,
+        jobs=len(recs),
+        completed=len(done),
+        horizon_hit=result.horizon_hit,
+        windows=result.windows,
+        wall_s=result.wall_s,
+        jobs_per_sec=result.jobs_per_sec,
+        makespan_ms=result.makespan_us / 1000.0,
+        utilization=result.utilization,
+        wait_us=_spread([r.wait_us for r in done]),
+        bounded_slowdown=_spread([r.bounded_slowdown(tau_us) for r in done]),
+        runtime_ms=_spread([r.runtime_us / 1000.0 for r in done]),
+        avg_latency_us=_spread([r.avg_latency_us for r in done if r.msgs]),
+        per_job=per_job,
+    )
+
+
+def format_sched_summary(s: Dict[str, Any]) -> str:
+    lines = [
+        f"policy={s['policy']} slots={s['slots']} "
+        f"jobs={s['completed']}/{s['jobs']} windows={s['windows']} "
+        f"wall={s['wall_s']:.1f}s ({s['jobs_per_sec']:.2f} jobs/s)"
+        + (" HORIZON-CAPPED" if s["horizon_hit"] else ""),
+        f"  makespan {s['makespan_ms']:.1f}ms | utilization "
+        f"{s['utilization']:.1%} | wait mean {s['wait_us']['mean']:.0f}us "
+        f"max {s['wait_us']['max']:.0f}us | bounded slowdown mean "
+        f"{s['bounded_slowdown']['mean']:.2f} max "
+        f"{s['bounded_slowdown']['max']:.2f}",
+    ]
+    return "\n".join(lines)
+
+
 def format_summary(summary: Dict[str, Any]) -> str:
     lines = [
         f"members={summary['members']} vmapped={summary['vmapped']} "

@@ -1,0 +1,115 @@
+"""Placement policies: disjointness, contiguity, occupied-mask support."""
+import numpy as np
+import pytest
+
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import dragonfly_1d_small
+
+@pytest.fixture(scope="module")
+def topo():
+    return dragonfly_1d_small()  # 9 groups x 8 routers x 7 nodes = 504
+
+
+def _router_of(topo, nodes):
+    return np.asarray(nodes) // topo.nodes_per_router
+
+
+def _group_of(topo, nodes):
+    return _router_of(topo, nodes) // topo.routers_per_group
+
+
+def _check_properties(topo, sizes, policy, seed, occupied):
+    n_free = int(topo.n_nodes - occupied.sum())
+    if sum(sizes) > n_free:
+        with pytest.raises(ValueError, match="free"):
+            place_jobs(topo, sizes, policy, seed=seed, occupied=occupied)
+        return
+    out = place_jobs(topo, sizes, policy, seed=seed, occupied=occupied)
+    flat = np.concatenate(out)
+    # every job got its full allocation, all nodes distinct and free
+    assert [len(a) for a in out] == list(sizes)
+    assert len(np.unique(flat)) == len(flat)
+    assert not occupied[flat].any()
+    # RR/RG structure: a job's nodes fill each chosen router/group's free
+    # nodes consecutively — the assignment never revisits a router (RR)
+    # or group (RG) it already moved past.
+    for nodes in out:
+        if policy == "RR":
+            blocks = _router_of(topo, nodes)
+        elif policy == "RG":
+            blocks = _group_of(topo, nodes)
+        else:
+            continue
+        # consecutive runs only: each block id appears in one contiguous
+        # stretch of the job's assignment order
+        change = np.flatnonzero(np.diff(blocks) != 0)
+        seen = blocks[np.r_[0, change + 1]]
+        assert len(np.unique(seen)) == len(seen), (policy, nodes, blocks)
+
+
+def test_placement_properties_hypothesis():
+    """Disjointness + RR/RG contiguity under random occupancy (hypothesis)."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    topo = dragonfly_1d_small()
+    sizes_st = st.lists(st.integers(min_value=1, max_value=60), min_size=1,
+                        max_size=6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(sizes=sizes_st, policy=st.sampled_from(["RN", "RR", "RG"]),
+           seed=st.integers(min_value=0, max_value=999),
+           occ_seed=st.integers(min_value=0, max_value=999),
+           occ_frac=st.floats(min_value=0.0, max_value=0.5))
+    def prop(sizes, policy, seed, occ_seed, occ_frac):
+        occ_rng = np.random.default_rng(occ_seed)
+        occupied = occ_rng.random(topo.n_nodes) < occ_frac
+        _check_properties(topo, sizes, policy, seed, occupied)
+
+    prop()
+
+
+def test_placement_properties_fixed_cases(topo):
+    """The same properties on a deterministic sweep (no hypothesis dep)."""
+    for policy in ("RN", "RR", "RG"):
+        for seed in (0, 1, 7):
+            for frac in (0.0, 0.3):
+                occ_rng = np.random.default_rng(seed + 100)
+                occupied = occ_rng.random(topo.n_nodes) < frac
+                _check_properties(topo, [5, 17, 3, 60], policy, seed,
+                                  occupied)
+
+
+def test_occupied_none_matches_empty_mask(topo):
+    """occupied=None is bit-identical to an all-false mask (and to the
+    historical behaviour): same RNG stream, same assignment."""
+    for policy in ("RN", "RR", "RG"):
+        a = place_jobs(topo, [5, 17, 3], policy, seed=42)
+        b = place_jobs(topo, [5, 17, 3], policy, seed=42,
+                       occupied=np.zeros(topo.n_nodes, bool))
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def test_occupied_nodes_never_assigned(topo):
+    occupied = np.zeros(topo.n_nodes, bool)
+    occupied[: topo.n_nodes // 2] = True
+    for policy in ("RN", "RR", "RG"):
+        out = place_jobs(topo, [8, 8], policy, seed=1, occupied=occupied)
+        assert not occupied[np.concatenate(out)].any()
+
+
+def test_oversubscription_raises(topo):
+    with pytest.raises(ValueError, match="free"):
+        place_jobs(topo, [topo.n_nodes + 1], "RN", seed=0)
+    occupied = np.ones(topo.n_nodes, bool)
+    occupied[:4] = False
+    with pytest.raises(ValueError, match="free"):
+        place_jobs(topo, [5], "RG", seed=0, occupied=occupied)
+    # exact fit still works
+    out = place_jobs(topo, [4], "RG", seed=0, occupied=occupied)
+    assert sorted(out[0].tolist()) == [0, 1, 2, 3]
+
+
+def test_bad_mask_shape_raises(topo):
+    with pytest.raises(ValueError, match="occupied mask shape"):
+        place_jobs(topo, [2], "RN", seed=0, occupied=np.zeros(7, bool))

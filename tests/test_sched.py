@@ -1,0 +1,449 @@
+"""repro.sched: traces, queue policies, slot-recycling engine windows."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.netsim.config import NetConfig
+from repro.netsim.engine import (
+    EngineCapacity,
+    JobSpec,
+    build_engine,
+    occupied_node_mask,
+    vacant_slots,
+)
+from repro.netsim.placement import place_jobs
+from repro.netsim.topology import dragonfly_1d_small
+from repro.sched.queue import PendingQueue, QueuedJob, simulate_queue
+from repro.sched.scheduler import build_sched_engine, run_trace
+from repro.sched.trace import (
+    CatalogApp,
+    Trace,
+    TraceJob,
+    default_catalog,
+    synthetic_trace,
+)
+from repro.core.translator import translate_source
+
+PP = (
+    "For 6 repetitions {\n"
+    " task 0 sends a 2048 byte message to task 1 then\n"
+    " task 1 sends a 2048 byte message to task 0 }"
+)
+AR = (
+    "For 3 repetitions {\n"
+    " all tasks compute for 200 microseconds then\n"
+    " all tasks allreduce a 65536 byte message }"
+)
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip(tmp_path):
+    tr = Trace(
+        name="t", slots=4, placement="RR",
+        jobs=[
+            TraceJob(name="a", app="pp", ranks=2, arrival_us=0.0,
+                     est_runtime_us=500.0, source=PP),
+            TraceJob(name="b", app="cosmoflow", ranks=8, arrival_us=100.0,
+                     overrides={"iters": 1}),
+        ],
+    )
+    p = str(tmp_path / "t.json")
+    tr.to_json(p)
+    tr2 = Trace.from_json(p)
+    assert tr2 == tr
+    with pytest.raises(ValueError, match="unknown trace keys"):
+        Trace.from_dict(dict(tr.to_dict(), slotz=3))
+    with pytest.raises(ValueError, match="duplicate job names"):
+        Trace.from_dict(dict(tr.to_dict(), jobs=[
+            {"name": "a", "app": "pp", "ranks": 2, "source": PP},
+            {"name": "a", "app": "pp", "ranks": 2, "source": PP},
+        ]))
+
+
+def test_synthetic_trace_deterministic_and_distinct():
+    a = synthetic_trace(12, arrival="poisson", mean_gap_us=500.0, seed=7)
+    b = synthetic_trace(12, arrival="poisson", mean_gap_us=500.0, seed=7)
+    c = synthetic_trace(12, arrival="poisson", mean_gap_us=500.0, seed=8)
+    w = synthetic_trace(12, arrival="weibull", mean_gap_us=500.0, seed=7)
+    assert a == b
+    assert a != c
+    assert [j.arrival_us for j in a.jobs] != [j.arrival_us for j in w.jobs]
+    assert a.jobs[0].arrival_us == 0.0
+    arr = [j.arrival_us for j in a.jobs]
+    assert arr == sorted(arr)
+    apps = {j.app for j in a.jobs}
+    assert apps <= {c.app for c in default_catalog("small")}
+    with pytest.raises(ValueError, match="arrival process"):
+        synthetic_trace(4, arrival="uniform")
+
+
+# ---------------------------------------------------------------------------
+# queue policies (host-side, engine-free)
+# ---------------------------------------------------------------------------
+
+def _qj(jid, n, arr, est):
+    return QueuedJob(jid=jid, name=f"j{jid}", n_ranks=n, arrival_us=arr,
+                     est_runtime_us=est)
+
+
+def test_fcfs_head_blocks_queue():
+    q = PendingQueue(policy="fcfs")
+    q.push(_qj(0, 8, 0.0, 1000.0))  # too big right now
+    q.push(_qj(1, 1, 0.0, 100.0))
+    starts, resv = q.select(now=0.0, free_nodes=4, free_slots=2,
+                            running=[(500.0, 4)])
+    assert starts == [] and resv is None and len(q) == 2
+
+
+def test_easy_backfills_without_delaying_head():
+    q = PendingQueue(policy="easy")
+    q.push(_qj(0, 8, 0.0, 1000.0))   # head: needs 8, only 4 free
+    q.push(_qj(1, 2, 0.0, 400.0))    # ends before shadow -> backfills
+    q.push(_qj(2, 3, 0.0, 2000.0))   # outlives shadow and needs more than
+                                     # the head's spare nodes -> must wait
+    starts, resv = q.select(now=0.0, free_nodes=4, free_slots=3,
+                            running=[(500.0, 6)])
+    assert [j.jid for j in starts] == [1]
+    assert resv is not None and resv.jid == 0
+    assert resv.shadow_us == 500.0  # head starts when the 6-node job ends
+    assert len(q) == 2  # head + the non-backfillable job
+
+
+def test_easy_extra_nodes_clause():
+    # head needs 6 of 10; free now 4; running 6-node job ends at 500.
+    # shadow=500, extra = (4+6)-6 = 4 -> a long job using <= 4 nodes may
+    # start even though it outlives the shadow time.
+    q = PendingQueue(policy="easy")
+    q.push(_qj(0, 6, 0.0, 1000.0))
+    q.push(_qj(1, 4, 0.0, 9000.0))
+    starts, resv = q.select(now=0.0, free_nodes=4, free_slots=3,
+                            running=[(500.0, 6)])
+    assert [j.jid for j in starts] == [1]
+    assert resv.extra_nodes == 4
+
+
+def test_simulate_queue_fcfs_vs_easy_makespan():
+    """Constructed EASY win: a short job slips past a blocked big job."""
+    jobs = [
+        _qj(0, 8, 0.0, 1000.0),   # fills most of the system
+        _qj(1, 4, 10.0, 500.0),   # blocked on nodes behind job 0
+        _qj(2, 2, 20.0, 800.0),   # backfillable (ends before shadow)
+    ]
+    f = simulate_queue(jobs, n_nodes=10, n_slots=3, policy="fcfs")
+    e = simulate_queue(jobs, n_nodes=10, n_slots=3, policy="easy")
+    # EASY starts job 2 immediately; FCFS holds it behind job 1
+    assert e["spans"][2]["start_us"] == 20.0
+    assert f["spans"][2]["start_us"] == 1000.0
+    # the blocked head is never delayed by the backfill (it may even
+    # start earlier: the backfilled job's nodes free before the shadow)
+    assert e["spans"][1]["start_us"] <= f["spans"][1]["start_us"] == 1000.0
+    assert e["makespan_us"] < f["makespan_us"]
+
+
+def test_easy_reservation_property():
+    """EASY never delays the head's reserved start (hypothesis sweep)."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    job_st = st.tuples(
+        st.integers(min_value=1, max_value=16),      # n_ranks
+        st.floats(min_value=0.0, max_value=5_000.0),  # arrival
+        st.floats(min_value=1.0, max_value=3_000.0),  # est runtime
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(job_st, min_size=1, max_size=16),
+           st.integers(min_value=16, max_value=24),
+           st.integers(min_value=1, max_value=4))
+    def prop(raw, n_nodes, n_slots):
+        jobs = [
+            _qj(i, n, round(arr, 1), round(est, 1))
+            for i, (n, arr, est) in enumerate(raw)
+        ]
+        out = simulate_queue(jobs, n_nodes, n_slots, policy="easy")
+        # every job runs exactly once
+        assert set(out["spans"]) == {j.jid for j in jobs}
+        for j in jobs:
+            assert out["spans"][j.jid]["start_us"] >= j.arrival_us - 1e-9
+        # the head's actual start never exceeds any reservation made
+        # for it (backfill must not push the shadow time)
+        for r in out["reservations"]:
+            assert (out["spans"][r.jid]["start_us"]
+                    <= r.shadow_us + 1e-6), (r, out["spans"][r.jid])
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# engine windows: chained == single run, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def topo():
+    return dragonfly_1d_small()
+
+
+def _state_equal(a, b):
+    flat_a, _ = jax.tree_util.tree_flatten(a)
+    flat_b, _ = jax.tree_util.tree_flatten(b)
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(flat_a, flat_b)
+    )
+
+
+def test_chained_windows_bitexact_vs_single_run(topo):
+    """2+ chained ``run_window`` calls with state carry-over reproduce one
+    uninterrupted ``run`` bit-exactly when the window boundary sits on a
+    job arrival (the scheduler's invariant)."""
+    sk_pp = translate_source(PP, "pp_win", 2)
+    sk_ar = translate_source(AR, "ar_win", 8)
+    pl = place_jobs(topo, [2, 8], "RN", seed=5)
+    jobs = [JobSpec("pp", sk_pp, pl[0], start_us=0.0),
+            JobSpec("ar", sk_ar, pl[1], start_us=750.0)]
+    eng = build_engine(topo, jobs, net=NetConfig(pool_size=512, tick_us=2.0),
+                       pool_size=512)
+    ref = jax.block_until_ready(eng.run(eng.init_state(seed=3)))
+
+    st = eng.init_state(seed=3)
+    st = eng.run_window(st, np.float32(750.0))  # window 1: to the arrival
+    assert float(st.t) <= 750.0
+    windows = 1
+    while True:  # drain in completion-bounded windows
+        prev = (float(st.t), int(st.rng))
+        st = eng.run_window(st, np.float32(np.inf))
+        windows += 1
+        if (float(st.t), int(st.rng)) == prev:
+            break
+    assert windows >= 3  # boundary + at least one completion stop
+    assert _state_equal(ref, st)
+
+
+def test_batched_run_window_freezes_members_independently(topo):
+    """A batched run_window stops each member at ITS OWN window event:
+    member i of the batch is bit-identical to its own B=1 window, even
+    when batch-mates keep ticking past it."""
+    from repro.netsim.engine import stack_members, member_state
+
+    sk_pp = translate_source(PP, "pp_bw", 2)
+    sk_ar = translate_source(AR, "ar_bw", 8)
+    pl = place_jobs(topo, [2, 8], "RN", seed=9)
+    jobs = [JobSpec("pp", sk_pp, pl[0], start_us=0.0),
+            JobSpec("ar", sk_ar, pl[1], start_us=400.0)]
+    eng = build_engine(topo, jobs, net=NetConfig(pool_size=512, tick_us=2.0),
+                       pool_size=512)
+    # member 0 completes its pp job quickly (window event: completion);
+    # member 1 gets a different rng stream and the same t_stop
+    singles = [
+        eng.run_window(eng.init_state(seed=s), np.float32(400.0))
+        for s in (3, 4)
+    ]
+    batched = eng.run_window(
+        stack_members([eng.init_state(seed=3), eng.init_state(seed=4)]),
+        np.float32(400.0),
+    )
+    for i in (0, 1):
+        assert _state_equal(singles[i], member_state(batched, i))
+
+
+def test_slot_recycling_reuses_envelope(topo):
+    """Three sequential tenants stream through a Jmax=1 envelope."""
+    from repro.netsim.engine import admit_job, retire_job, slot_done
+
+    sk = translate_source(PP, "pp_rec", 2)
+    cap = EngineCapacity(Jmax=1, Pmax=2, OPmax=sk.n_ops)
+    eng = build_engine(topo, [], capacity=cap,
+                       net=NetConfig(pool_size=256, tick_us=2.0),
+                       pool_size=256)
+    st = eng.init_state(seed=1)
+    assert vacant_slots(st).tolist() == [0]
+    counts = []
+    occupied = np.zeros((topo.n_nodes,), bool)
+    for k in range(3):
+        nodes = place_jobs(topo, [2], "RN", seed=k, occupied=occupied)[0]
+        st = admit_job(st, 0, JobSpec(f"pp{k}", sk, nodes,
+                                      start_us=float(st.t)))
+        assert occupied_node_mask(st, topo.n_nodes).sum() == 2
+        st = eng.run_window(st, np.float32(np.inf))
+        while not slot_done(st, 0):
+            st = eng.run_window(st, np.float32(np.inf))
+        counts.append(int(st.metrics.lat_cnt[0]))
+        st = retire_job(st, 0)
+        assert vacant_slots(st).tolist() == [0]
+        assert occupied_node_mask(st, topo.n_nodes).sum() == 0
+    # metrics accumulate per slot: 12 messages per tenant
+    assert counts == [12, 24, 36]
+
+
+# ---------------------------------------------------------------------------
+# the online scheduler against the engine
+# ---------------------------------------------------------------------------
+
+PPC = (
+    "For 6 repetitions {\n"
+    " all tasks compute for 200 microseconds then\n"
+    " task 0 sends a 2048 byte message to task 1 then\n"
+    " task 1 sends a 2048 byte message to task 0 }"
+)
+
+
+def _mini_trace(**kw):
+    """Overlapping three-job stream (all three jobs run concurrently, so
+    the system never idles mid-trace and no slot is recycled early)."""
+    base = dict(
+        name="mini", topo="1d", scale="small", placement="RN",
+        routing="ADP", tick_us=2.0, horizon_ms=200.0, pool_size=512,
+        slots=3,
+    )
+    base.update(kw)
+    return Trace(
+        jobs=[
+            TraceJob(name="ar0", app="ar", ranks=8, arrival_us=0.0,
+                     est_runtime_us=2000.0, source=AR),
+            TraceJob(name="pp1", app="pp", ranks=2, arrival_us=300.0,
+                     est_runtime_us=1400.0, source=PPC),
+            TraceJob(name="pp2", app="pp2", ranks=2, arrival_us=700.0,
+                     est_runtime_us=1400.0, source=PPC),
+        ],
+        **base,
+    )
+
+
+def test_scheduler_matches_direct_run(topo):
+    """With enough slots for every job (no queueing), the slot-recycling
+    scheduler reproduces a direct all-jobs-in-table engine run bit-exactly:
+    same tick trajectory, same per-slot message metrics."""
+    tr = _mini_trace()
+    res = run_trace(tr, policy="fcfs", seed=4, collect_state=True)
+    recs = res.records
+    assert all(r.completed for r in recs)
+    assert [r.slot for r in recs] == [0, 1, 2]  # admit order = arrival order
+
+    # direct run: same placements/starts/capacity, all jobs up front
+    eng2, topo2, resolved, net = build_sched_engine(tr, 3)
+    jobs = [
+        JobSpec(r.name, resolved[i].skeleton, r.nodes, start_us=r.start_us)
+        for i, r in enumerate(recs)
+    ]
+    from repro.union.manager import _engine_seed
+
+    st = eng2.init_state(seed=_engine_seed(4), jobs_override=jobs,
+                         placements=[r.nodes for r in recs],
+                         start_us=[r.start_us for r in recs])
+    ref = jax.block_until_ready(eng2.run(st))
+
+    final = res.final_state
+    assert float(final.t) == float(ref.t)
+    assert int(final.rng) == int(ref.rng)
+    np.testing.assert_array_equal(np.asarray(final.metrics.lat_hist),
+                                  np.asarray(ref.metrics.lat_hist))
+    np.testing.assert_array_equal(np.asarray(final.metrics.link_bytes),
+                                  np.asarray(ref.metrics.link_bytes))
+    for r in recs:
+        assert r.msgs == int(ref.metrics.lat_cnt[r.slot])
+        ref_sum = float(ref.metrics.lat_sum[r.slot])
+        np.testing.assert_allclose(r.avg_latency_us, ref_sum / r.msgs,
+                                   rtol=1e-6)
+        from repro.netsim.engine import job_vm
+
+        ref_ct = np.asarray(job_vm(ref, r.slot).comm_time).max() / 1000.0
+        np.testing.assert_allclose(r.max_comm_ms, ref_ct, rtol=1e-6)
+
+
+def test_scheduler_windows_match_fewer_slots(topo):
+    """The same trace through fewer slots than jobs still completes every
+    job, recycling slots (waits appear once slots bind)."""
+    tr = _mini_trace(slots=1)
+    res = run_trace(tr, policy="fcfs", seed=4)
+    assert all(r.completed for r in res.records)
+    assert {r.slot for r in res.records} == {0}
+    waits = [r.wait_us for r in res.records]
+    assert waits[0] == 0.0
+    assert max(waits) > 0.0  # later jobs queued behind the single slot
+    assert res.makespan_us > 0 and 0 < res.utilization <= 1.0
+
+
+COMPUTE_BIG = (
+    "For 1 repetitions {\n"
+    " all tasks compute for 3000 microseconds then\n"
+    " all tasks allreduce a 8 byte message }"
+)
+COMPUTE_MED = (
+    "For 1 repetitions {\n"
+    " all tasks compute for 1000 microseconds then\n"
+    " all tasks allreduce a 8 byte message }"
+)
+COMPUTE_SMALL = (
+    "For 1 repetitions {\n"
+    " all tasks compute for 2500 microseconds then\n"
+    " all tasks allreduce a 8 byte message }"
+)
+
+
+def test_fcfs_vs_easy_through_engine(topo):
+    """Node contention on the real engine: EASY backfills the short job
+    into the blocked head's shadow; FCFS holds it back. The head's start
+    is unchanged; EASY's makespan and the short job's wait shrink."""
+    tr = Trace(
+        name="contend", topo="1d", scale="small", placement="RN",
+        routing="MIN", tick_us=5.0, horizon_ms=400.0, pool_size=2048,
+        slots=3,
+        jobs=[
+            TraceJob(name="big", app="big", ranks=300, arrival_us=0.0,
+                     est_runtime_us=3200.0, source=COMPUTE_BIG),
+            TraceJob(name="wide", app="wide", ranks=400, arrival_us=100.0,
+                     est_runtime_us=1200.0, source=COMPUTE_MED),
+            TraceJob(name="small", app="small", ranks=50, arrival_us=200.0,
+                     est_runtime_us=2700.0, source=COMPUTE_SMALL),
+        ],
+    )
+    engine = build_sched_engine(tr, 3)
+    out = {}
+    for pol in ("fcfs", "easy"):
+        res = run_trace(tr, policy=pol, seed=0, engine=engine)
+        assert all(r.completed for r in res.records)
+        out[pol] = res
+    f = {r.name: r for r in out["fcfs"].records}
+    e = {r.name: r for r in out["easy"].records}
+    # 300 + 400 > 504 nodes: "wide" blocks at its arrival under both
+    assert f["wide"].wait_us > 0 and e["wide"].wait_us > 0
+    # EASY must not delay the blocked head
+    assert e["wide"].start_us <= f["wide"].start_us + tr.tick_us
+    # the short job backfills under EASY only
+    assert e["small"].wait_us < 100.0
+    assert f["small"].wait_us > 2000.0
+    assert out["easy"].makespan_us < out["fcfs"].makespan_us
+
+
+@pytest.mark.slow
+def test_64_job_poisson_stream_through_8_slots(topo):
+    """Acceptance: a 64-job Poisson trace streams through a Jmax=8
+    envelope via slot recycling under both FCFS and EASY backfill."""
+    catalog = [
+        CatalogApp(app="pp", ranks=2, est_runtime_us=1_500.0, weight=2.0,
+                   source=PP),
+        CatalogApp(app="ar", ranks=16, est_runtime_us=4_000.0, weight=1.0,
+                   source=AR),
+    ]
+    tr = synthetic_trace(
+        64, arrival="poisson", mean_gap_us=300.0, seed=11,
+        catalog=catalog, slots=8, tick_us=5.0, horizon_ms=60_000.0,
+        pool_size=4096,
+    )
+    engine = build_sched_engine(tr, 8)
+    for pol in ("fcfs", "easy"):
+        res = run_trace(tr, policy=pol, seed=0, engine=engine)
+        done = [r for r in res.records if r.completed]
+        assert len(done) == 64, f"{pol}: {len(done)}/64 completed"
+        assert not res.horizon_hit
+        # slot recycling: 64 jobs through at most 8 slots, many windows
+        assert {r.slot for r in done} <= set(range(8))
+        assert res.windows > 64 // 8
+        assert res.makespan_us > 0 and res.utilization > 0
+        for r in done:
+            assert r.wait_us >= -1e-3
+            assert r.runtime_us > 0

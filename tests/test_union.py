@@ -8,7 +8,7 @@ from repro.netsim import metrics as MET
 from repro.netsim.engine import job_vm
 from repro.union import manager as MGR
 from repro.union.ensemble import run_campaign
-from repro.union.report import interference_summary
+from repro.union.report import interference_matrix, interference_summary
 from repro.union.scenario import Scenario, ScenarioJob, URDecl, mix_scenario
 
 PP = (
@@ -206,6 +206,35 @@ def test_interference_summary_shape():
     inf = interference_summary(co, {"pp0": base})
     assert set(inf) == {"pp0"}
     assert inf["pp0"]["latency_inflation"] > 0
+
+
+def test_interference_matrix_per_app_per_policy():
+    """Per-(app, placement-policy) interference grid from co-run +
+    baseline campaigns under two placement policies."""
+    def summaries(placement):
+        co = run_campaign(tiny_scenario(placement=placement), members=2,
+                          base_seed=0).summary
+        base_sc = Scenario(
+            name=f"b-{placement}",
+            jobs=[ScenarioJob(app="pp0", source=PP, ranks=2)],
+            placement=placement, tick_us=2.0, horizon_ms=50.0,
+            pool_size=256)
+        base = run_campaign(base_sc, members=2, base_seed=0).summary
+        return co, {"pp0": base}
+
+    co_rn, base_rn = summaries("RN")
+    co_rg, base_rg = summaries("RG")
+    m = interference_matrix(
+        {"RN": co_rn, "RG": co_rg}, {"RN": base_rn, "RG": base_rg})
+    assert m["apps"] == ["pp0"] and set(m["policies"]) == {"RN", "RG"}
+    assert set(m["matrix"]["pp0"]) == {"RN", "RG"}
+    for pol in ("RN", "RG"):
+        cell = m["matrix"]["pp0"][pol]
+        assert cell["latency_inflation"] > 0
+        assert m["comm_time_inflation"]["pp0"][pol] == \
+            cell["comm_time_inflation"]
+        assert m["latency_variation"]["pp0"][pol] == \
+            cell["latency_variation_corun"]
 
 
 # ---------------------------------------------------------------------------
