@@ -3,16 +3,24 @@
 The engine's batching claim, measured: an N-member campaign (different
 seeds × placements) through the natively-batched engine — member chunks
 sharded across XLA devices (CPU cores are exposed as host devices
-automatically) — vs a Python loop over the same jitted engine. Each
-``BENCH_union.json`` entry records its provenance (git commit, jax
-version, backend, device count). ``--quick`` is the CI smoke profile.
+automatically) — vs a Python loop over the same jitted engine. Every run
+goes through the Experiment facade (``union.run``); engines come from the
+process-wide cache, so the warm run of each mode measures steady-state
+members/sec. Each ``BENCH_union.json`` entry records its provenance (git
+commit, jax version, backend, device count). ``--quick`` is the CI smoke
+profile.
 
 ``--trace`` switches to the online-scheduler profile instead: a synthetic
 Poisson trace drained through a small slot envelope under FCFS and EASY
 backfill, recording jobs/sec (scheduling + windowed-engine throughput).
 
+``--experiment`` measures the facade itself: warm ``union.run`` wall vs
+the direct engine-level path at the same envelope (spec validation +
+planning + summary must cost <= 2% warm).
+
   PYTHONPATH=src python -m benchmarks.bench_union [--members 8] [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --trace [--quick]
+  PYTHONPATH=src python -m benchmarks.bench_union --experiment [--quick]
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -99,10 +108,7 @@ def _append_entry(entry):
     print(f"wrote {path}")
 
 
-def bench_trace(quick: bool):
-    """Online-scheduler throughput: jobs/sec drained through a small
-    envelope under both queue policies (one compiled engine)."""
-    from repro.sched.scheduler import build_sched_engine, run_trace
+def _bench_trace_spec(quick: bool):
     from repro.sched.trace import CatalogApp, synthetic_trace
 
     pp = (
@@ -129,24 +135,36 @@ def bench_trace(quick: bool):
         horizon_ms=60_000.0, pool_size=4096,
         name=f"bench-trace-{'quick' if quick else 'full'}",
     )
+    return trace, n_jobs, slots
+
+
+def bench_trace(quick: bool):
+    """Online-scheduler throughput: jobs/sec drained through a small
+    envelope under both queue policies — one TraceStudy through the
+    facade, one cached engine."""
+    from repro import union
+
+    trace, n_jobs, slots = _bench_trace_spec(quick)
     print(f"trace={trace.name} jobs={n_jobs} slots={slots}")
-    engine = build_sched_engine(trace, slots)
+    res = union.run(union.Experiment(
+        name="bench-trace",
+        trace=union.TraceStudy(trace=trace, policies=["fcfs", "easy"]),
+    ))
     results = {}
-    for pol in ("fcfs", "easy"):
-        res = run_trace(trace, policy=pol, seed=0, engine=engine)
-        done = sum(r.completed for r in res.records)
-        assert done == n_jobs, f"{pol}: only {done}/{n_jobs} completed"
-        results[pol] = dict(
-            wall_s=res.wall_s, jobs_per_sec=res.jobs_per_sec,
-            windows=res.windows, makespan_ms=res.makespan_us / 1000.0,
-            utilization=res.utilization,
-            mean_wait_us=float(
-                sum(r.wait_us for r in res.records) / n_jobs),
+    for cell in res.cells:
+        s = cell.report
+        assert s["completed"] == n_jobs, (
+            f"{cell.policy}: only {s['completed']}/{n_jobs} completed")
+        results[cell.policy] = dict(
+            wall_s=s["wall_s"], jobs_per_sec=s["jobs_per_sec"],
+            windows=s["windows"], makespan_ms=s["makespan_ms"],
+            utilization=s["utilization"],
+            mean_wait_us=s["wait_us"]["mean"],
         )
-        print(f"  {pol:>5}: {res.wall_s:6.1f}s "
-              f"({res.jobs_per_sec:.2f} jobs/s, {res.windows} windows) | "
-              f"makespan {res.makespan_us / 1000.0:.1f}ms | "
-              f"util {res.utilization:.1%}")
+        print(f"  {cell.policy:>5}: {s['wall_s']:6.1f}s "
+              f"({s['jobs_per_sec']:.2f} jobs/s, {s['windows']} windows) | "
+              f"makespan {s['makespan_ms']:.1f}ms | "
+              f"util {s['utilization']:.1%}")
     entry = dict(
         bench="union_trace_throughput",
         jobs=n_jobs, slots=slots,
@@ -154,6 +172,78 @@ def bench_trace(quick: bool):
         trace=dict(name=trace.name, arrival="poisson", mean_gap_us=300.0,
                    placement=trace.placement),
         **{f"{p}_{k}": v for p, r in results.items() for k, v in r.items()},
+    )
+    _append_entry(entry)
+
+
+def bench_experiment(quick: bool):
+    """Facade overhead: warm ``union.run`` (spec -> plan -> execute ->
+    summarize) vs the direct engine-level path at the same envelope.
+    Records the warm overhead ratio — the acceptance bar is <= 2%."""
+    import numpy as np
+
+    import jax
+
+    from repro import union
+    from repro.netsim.engine import get_engine, member_state, stack_members
+    from repro.union import manager as MGR
+    from repro.union.seeds import engine_seed
+
+    members = 2 if quick else 8
+    sc = bench_scenario(quick)
+    print(f"scenario={sc.name} members={members} (facade-overhead profile)")
+
+    def facade(base_seed: int) -> float:
+        t0 = time.time()
+        union.run(union.Experiment(
+            name=sc.name, scenarios=[sc], members=members,
+            base_seed=base_seed))
+        return time.time() - t0
+
+    rs = MGR.resolve(sc, seed=0)
+    eng = get_engine(
+        rs.topo, routing=sc.routing, ur=rs.ur, net=rs.net,
+        pool_size=rs.pool_size, horizon_us=rs.horizon_us,
+        capacity=rs.capacity)
+    start = np.asarray(rs.start_us, np.float32)
+
+    def direct(base_seed: int) -> float:
+        t0 = time.time()
+        inits = [
+            eng.init_state(
+                seed=engine_seed(base_seed + i),
+                placements=rs.placements(base_seed + i),
+                start_us=start, jobs_override=rs.jobs)
+            for i in range(members)
+        ]
+        final = jax.block_until_ready(eng.run(stack_members(inits)))
+        for i in range(members):
+            MGR.member_report(member_state(final, i), rs, 0.0,
+                              seed=base_seed + i, start_us=start,
+                              capacity=rs.capacity)
+        return time.time() - t0
+
+    cold_facade = facade(0)       # pays the (shared) compile
+    warm_direct = direct(100)
+    warm_facade = facade(200)
+    warm_direct2 = direct(300)
+    warm_facade2 = facade(400)
+    direct_s = min(warm_direct, warm_direct2)
+    facade_s = min(warm_facade, warm_facade2)
+    overhead = facade_s / max(direct_s, 1e-9) - 1.0
+    print(f"  cold facade {cold_facade:6.1f}s | warm facade {facade_s:6.2f}s"
+          f" | warm direct {direct_s:6.2f}s | overhead {overhead:+.2%}")
+    if overhead > 0.02:
+        print("  WARNING: facade overhead above the 2% budget")
+    entry = dict(
+        bench="union_experiment_facade",
+        members=members,
+        provenance=provenance(),
+        scenario=sc.to_dict(),
+        cold_facade_wall_s=cold_facade,
+        warm_facade_wall_s=facade_s,
+        warm_direct_wall_s=direct_s,
+        warm_overhead=overhead,
     )
     _append_entry(entry)
 
@@ -167,41 +257,55 @@ def main():
     ap.add_argument("--trace", action="store_true",
                     help="online-scheduler profile: jobs/sec through a"
                     " small slot envelope (FCFS + EASY)")
+    ap.add_argument("--experiment", action="store_true",
+                    help="facade-overhead profile: warm union.run vs the"
+                    " direct engine-level path (budget: <= 2%%)")
     args = ap.parse_args()
     if args.trace:
         bench_trace(args.quick)
+        return
+    if args.experiment:
+        bench_experiment(args.quick)
         return
     members = args.members if args.members is not None else (
         2 if args.quick else 8)
     enable_host_devices(members)
 
-    from repro.union.ensemble import build_campaign_engine, run_campaign
+    from repro import union
 
     sc = bench_scenario(args.quick)
     print(f"scenario={sc.name} members={members}")
 
-    # one engine shared across all runs: the cold run of each mode pays that
-    # mode's trace+compile, the warm run (fresh seeds, same shape) hits the
-    # jit cache and measures steady-state members/sec.
-    engine = build_campaign_engine(sc, base_seed=0)
+    # the engine comes from the process-wide cache: the cold run of each
+    # mode pays that mode's trace+compile, the warm run (fresh seeds, same
+    # shape) hits the jit cache and measures steady-state members/sec.
     results = {}
     for mode in ("vmapped", "looped"):
         vm = mode == "vmapped"
-        cold = run_campaign(sc, members=members, base_seed=0, vmapped=vm,
-                            engine=engine)
-        warm = run_campaign(sc, members=members, base_seed=100, vmapped=vm,
-                            engine=engine)
+
+        def campaign(base_seed):
+            t0 = time.time()
+            res = union.run(union.Experiment(
+                name=sc.name, scenarios=[sc], members=members,
+                base_seed=base_seed, vmapped=vm))
+            wall = time.time() - t0
+            summary = next(iter(res.summary["scenario_studies"].values()))
+            return wall, summary
+
+        cold_wall, _ = campaign(0)
+        warm_wall, summary = campaign(100)
         results[mode] = dict(
-            cold_wall_s=cold.wall_s,
-            warm_wall_s=warm.wall_s,
-            cold_members_per_sec=cold.members_per_sec,
-            warm_members_per_sec=warm.members_per_sec,
-            all_done=warm.summary["all_done"],
-            dropped=warm.summary["dropped_total"],
+            cold_wall_s=cold_wall,
+            warm_wall_s=warm_wall,
+            cold_members_per_sec=members / max(cold_wall, 1e-9),
+            warm_members_per_sec=members / max(warm_wall, 1e-9),
+            all_done=summary["all_done"],
+            dropped=summary["dropped_total"],
         )
-        print(f"  {mode:>8}: cold {cold.wall_s:6.1f}s "
-              f"({cold.members_per_sec:.2f} members/s) | "
-              f"warm {warm.wall_s:6.1f}s ({warm.members_per_sec:.2f} members/s)")
+        print(f"  {mode:>8}: cold {cold_wall:6.1f}s "
+              f"({members / max(cold_wall, 1e-9):.2f} members/s) | "
+              f"warm {warm_wall:6.1f}s "
+              f"({members / max(warm_wall, 1e-9):.2f} members/s)")
 
     entry = dict(
         bench="union_ensemble_throughput",

@@ -28,8 +28,7 @@ def main():
                     help=">1: run each cell as a vmapped ensemble campaign")
     args = ap.parse_args()
 
-    from repro.union.ensemble import run_campaign
-    from repro.union.manager import run_scenario
+    from repro import union
     from repro.union.scenario import MIXES, mix_scenario
 
     os.makedirs(OUT, exist_ok=True)
@@ -61,13 +60,17 @@ def main():
             sc = mix_scenario(wl, topo=topo, scale="small", placement=pl,
                               routing=rt, iters_override=2,
                               horizon_ms=500.0, tick_us=5.0)
+            res = union.run(union.Experiment(
+                name=sc.name, scenarios=[sc], members=args.members,
+                base_seed=0, vmapped=args.members > 1))
             if args.members > 1:
-                camp = run_campaign(sc, members=args.members, base_seed=0)
-                rep = dict(scenario=sc.to_dict(), summary=camp.summary,
-                           members=camp.reports)
-                virtual = camp.summary["virtual_time_ms"]["mean"]
+                summary = next(iter(
+                    res.summary["scenario_studies"].values()))
+                rep = dict(scenario=sc.to_dict(), summary=summary,
+                           members=[c.report for c in res.cells])
+                virtual = summary["virtual_time_ms"]["mean"]
             else:
-                rep = run_scenario(sc, seed=0)
+                rep = res.cells[0].report
                 virtual = rep["virtual_time_ms"]
             with open(path, "w") as f:
                 json.dump(rep, f, indent=1, default=float)

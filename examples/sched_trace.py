@@ -2,7 +2,9 @@
 
 Jobs arrive over time, queue under FCFS or EASY backfill, get placed on
 whatever nodes are free, and stream through one compiled engine envelope
-via slot recycling (docs/sched.md). Equivalent CLI::
+via slot recycling (docs/sched.md). Declared as a TraceStudy through the
+Experiment front door — both policy runs share one cached engine.
+Equivalent CLI::
 
     python -m repro.union --trace examples/scenarios/trace_small.json \
         --sched fcfs easy
@@ -14,31 +16,30 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.sched import load_trace, run_trace  # noqa: E402
-from repro.sched.scheduler import build_sched_engine  # noqa: E402
-from repro.union.report import format_sched_summary, sched_summary  # noqa: E402
+from repro import union  # noqa: E402
+from repro.union.report import format_sched_summary  # noqa: E402
 
 HERE = os.path.dirname(__file__)
 
 
 def main():
-    trace = load_trace(os.path.join(HERE, "scenarios", "trace_small.json"))
-    print(f"trace {trace.name}: {len(trace.jobs)} jobs, "
-          f"{trace.slots} slots, placement {trace.placement}")
-
-    # one compiled engine serves both policy runs (same envelope)
-    engine = build_sched_engine(trace)
-    for policy in ("fcfs", "easy"):
-        res = run_trace(trace, policy=policy, engine=engine)
-        print(format_sched_summary(sched_summary(res)))
+    trace_path = os.path.join(HERE, "scenarios", "trace_small.json")
+    results = union.run(union.Experiment(
+        name="sched-demo",
+        trace=union.TraceStudy(source=trace_path,
+                               policies=["fcfs", "easy"]),
+    ))
+    for cell in results.cells:
+        print(format_sched_summary(cell.report))
         slowest = max(
-            (r for r in res.records if r.completed),
-            key=lambda r: r.wait_us,
+            (r for r in cell.report["per_job"] if r["completed"]),
+            key=lambda r: r["wait_us"],
         )
-        print(f"  longest wait: {slowest.name} "
-              f"({slowest.n_ranks} ranks) waited {slowest.wait_us:.0f}us, "
-              f"ran {slowest.runtime_us / 1000.0:.1f}ms on slot "
-              f"{slowest.slot}")
+        print(f"  longest wait: {slowest['name']} "
+              f"({slowest['n_ranks']} ranks) waited "
+              f"{slowest['wait_us']:.0f}us, ran "
+              f"{slowest['runtime_us'] / 1000.0:.1f}ms on slot "
+              f"{slowest['slot']}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
-"""The workload manager in action: a custom scenario with staggered
-arrivals, run as a vmapped ensemble campaign with baselines.
+"""The workload manager in action: one Experiment through the front door.
 
 Beyond the paper: the original Union launches every job at t=0 (static
 co-schedule). Here CosmoFlow is already training when LAMMPS lands on the
-network 2 ms later — the realistic cluster case — and the ensemble layer
-sweeps seeds × placements in one vmapped engine call.
+network 2 ms later — the realistic cluster case. The whole study (the
+co-run ensemble AND every per-app baseline) is ONE declarative Experiment:
+the planner buckets everything that shares an engine envelope into one
+batched call, and the interference summary comes from the grouped Results.
 
   PYTHONPATH=src python examples/union_campaign.py
 """
@@ -14,7 +15,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.union.ensemble import run_campaign
+from repro import union
 from repro.union.report import format_summary, interference_summary
 from repro.union.scenario import Scenario, ScenarioJob, URDecl
 
@@ -31,20 +32,28 @@ scenario = Scenario(
     pool_size=4096,
 )
 
-print(f"=== co-run campaign ({MEMBERS} members, vmapped) ===")
-corun = run_campaign(scenario, members=MEMBERS, base_seed=0)
-print(format_summary(corun.summary))
-
-baselines = {}
-for job in scenario.jobs:
-    alone = dataclasses.replace(
+# co-run + per-app baselines, declared together: one plan, shared engines
+study = [scenario] + [
+    dataclasses.replace(
         scenario, name=f"baseline-{job.app}",
         jobs=[dataclasses.replace(job, start_us=0.0)], ur=None)
-    baselines[job.app] = run_campaign(alone, members=MEMBERS,
-                                      base_seed=0).summary
+    for job in scenario.jobs
+]
 
+results = union.run(union.Experiment(
+    name="staggered-study", scenarios=study, members=MEMBERS, base_seed=0))
+print(f"=== study: {len(results.cells)} cells, engine cache "
+      f"{results.engine_cache} ===")
+
+groups = results.summary["scenario_studies"]
+corun = groups["staggered-demo/RN/ADP"]
+print(format_summary(corun))
+
+baselines = {
+    job.app: groups[f"baseline-{job.app}/RN/ADP"] for job in scenario.jobs
+}
 print("\n=== interference: co-run vs alone ===")
-for app, d in interference_summary(corun.summary, baselines).items():
+for app, d in interference_summary(corun, baselines).items():
     print(f"  {app:>10}: latency x{d['latency_inflation']:.2f} "
           f"(member spread {d['latency_variation_baseline']:.1%} -> "
           f"{d['latency_variation_corun']:.1%}) | "

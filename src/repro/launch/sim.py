@@ -18,7 +18,6 @@ import json
 import os
 from typing import Dict, Optional
 
-from repro.union.manager import run_scenario
 from repro.union.scenario import MIXES, MIX_HAS_UR, UR_RANKS, mix_scenario  # noqa: F401 (re-export)
 
 
@@ -42,7 +41,13 @@ def run_sim(
         routing=routing, iters_override=iters_override, tick_us=tick_us,
         horizon_ms=horizon_ms, pool_size=pool_size, stagger_us=stagger_us,
     )
-    return run_scenario(scenario, seed=seed)
+    from repro.union import experiment as EXP
+
+    res = EXP.run(EXP.Experiment(
+        name=scenario.name, scenarios=[scenario], members=1,
+        base_seed=seed, vmapped=False,
+    ))
+    return res.cells[0].report
 
 
 def main():

@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Optional, Sequence
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -200,9 +200,19 @@ class Engine:
     tick: Callable
     run_window: Callable
     capacity: EngineCapacity
+    _prun: Optional[Callable] = None
 
     def __iter__(self):
         return iter((self.init_state, self.run, self.tick))
+
+    @property
+    def prun(self) -> Callable:
+        """``run`` pmapped over a leading device axis, built lazily and
+        memoized on the engine so every campaign at this envelope shares
+        one pmap cache entry."""
+        if self._prun is None:
+            self._prun = jax.pmap(self.run)
+        return self._prun
 
 
 def _ceil_log2(P: int) -> int:
@@ -1049,6 +1059,109 @@ def build_engine(
         run_window=_member_window(run_window_batched),
         capacity=cap,
     )
+
+
+# ---------------------------------------------------------------------------
+# process-wide engine cache: one compiled engine per (capacity envelope,
+# system config). Job tables are runtime data, so every execution path —
+# single scenarios, batched/ragged campaigns, windowed scheduler runs —
+# that asks for the same envelope + config shares one jit cache entry.
+# ---------------------------------------------------------------------------
+
+_ENGINE_CACHE: Dict[Tuple, Engine] = {}
+_ENGINE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _topology_key(topo: Dragonfly) -> Tuple:
+    """A Dragonfly's defining parameters (its arrays are derived)."""
+    return (
+        topo.variant, topo.n_groups, topo.routers_per_group,
+        topo.nodes_per_router, topo.global_per_router, topo.rows, topo.cols,
+    )
+
+
+def engine_cache_key(
+    topo: Dragonfly,
+    *,
+    routing: str = "ADP",
+    ur: Optional[URSpec] = None,
+    net: Optional[NetConfig] = None,
+    pool_size: Optional[int] = None,
+    horizon_us: float = 500_000.0,
+    capacity: EngineCapacity,
+    link_down: Optional[np.ndarray] = None,
+    use_pallas: Optional[bool] = None,
+) -> Tuple:
+    """Everything baked into a compiled engine besides the job tables.
+
+    The UR source contributes only its *shape* (rank count and traffic
+    parameters) — its placement is overridable per member at init time.
+    """
+    net = net or NetConfig()
+    ur_key = None if ur is None else (
+        int(ur.rank2node.shape[0]), float(ur.size_bytes),
+        float(ur.interval_us), float(ur.start_us),
+    )
+    down_key = (
+        None if link_down is None
+        else tuple(np.flatnonzero(np.asarray(link_down)).tolist())
+    )
+    return (
+        _topology_key(topo), routing.upper() in ("ADP", "ADAPTIVE"), ur_key,
+        net, int(pool_size or net.pool_size), float(horizon_us), capacity,
+        down_key, use_pallas,
+    )
+
+
+def get_engine(
+    topo: Dragonfly,
+    *,
+    routing: str = "ADP",
+    ur: Optional[URSpec] = None,
+    net: Optional[NetConfig] = None,
+    pool_size: Optional[int] = None,
+    horizon_us: float = 500_000.0,
+    capacity: EngineCapacity,
+    link_down: Optional[np.ndarray] = None,
+    use_pallas: Optional[bool] = None,
+) -> Engine:
+    """A compiled engine from the process-wide cache (compile on miss).
+
+    Cached engines are built with an **empty default job set** — callers
+    must pass their jobs at init time (``init_state(jobs_override=...)``),
+    and when a UR source exists, its per-member placement via the final
+    ``placements`` entry. :func:`build_engine` remains the uncached
+    primitive for callers baking job-set defaults or fault injections.
+    """
+    key = engine_cache_key(
+        topo, routing=routing, ur=ur, net=net, pool_size=pool_size,
+        horizon_us=horizon_us, capacity=capacity, link_down=link_down,
+        use_pallas=use_pallas,
+    )
+    eng = _ENGINE_CACHE.get(key)
+    if eng is not None:
+        _ENGINE_CACHE_STATS["hits"] += 1
+        return eng
+    _ENGINE_CACHE_STATS["misses"] += 1
+    eng = build_engine(
+        topo, [], routing=routing, ur=ur, net=net, pool_size=pool_size,
+        horizon_us=horizon_us, link_down=link_down, capacity=capacity,
+        use_pallas=use_pallas,
+    )
+    _ENGINE_CACHE[key] = eng
+    return eng
+
+
+def engine_cache_stats() -> Dict[str, int]:
+    """Hit/miss counters plus current size of the process-wide cache."""
+    return dict(_ENGINE_CACHE_STATS, size=len(_ENGINE_CACHE))
+
+
+def clear_engine_cache() -> None:
+    """Drop every cached engine (and its jit executables) and zero the
+    counters — test isolation and long-lived-process memory control."""
+    _ENGINE_CACHE.clear()
+    _ENGINE_CACHE_STATS.update(hits=0, misses=0)
 
 
 # ---------------------------------------------------------------------------

@@ -31,7 +31,7 @@ from repro.netsim.engine import (
     EngineCapacity,
     JobSpec,
     admit_job,
-    build_engine,
+    get_engine,
     retire_job,
     slot_done,
     slot_in_flight,
@@ -41,6 +41,7 @@ from repro.netsim.topology import get_topology
 from repro.sched.queue import PendingQueue, QueuedJob
 from repro.sched.trace import Trace, TraceJob
 from repro.union import manager as MGR
+from repro.union.seeds import engine_seed, place_seed
 
 
 @dataclass
@@ -158,30 +159,50 @@ def build_sched_engine(
     resolved_jobs, net)`` — reusable across seeds/policies of the same
     trace shape.
 
-    ``engine_cache`` (any dict the caller keeps) memoizes compiled
-    engines by capacity envelope + system config, so campaigns over many
-    synthetic-trace seeds whose draws resolve to the same envelope pay
-    one compile (the job tables are runtime data anyway)."""
+    Engines come from the **process-wide cache** in
+    :mod:`repro.netsim.engine` (keyed by capacity envelope + system
+    config), so campaigns over many synthetic-trace seeds whose draws
+    resolve to the same envelope pay one compile — and share jits with
+    scenario campaigns at the same envelope. The historical
+    ``engine_cache`` dict argument is accepted but ignored."""
+    del engine_cache  # superseded by the process-wide engine cache
     slots = slots or trace.slots
     topo, resolved, cap, net = _resolve_trace(trace, slots)
-    key = (
-        cap, trace.topo, trace.scale, trace.routing.upper(),
-        float(trace.tick_us), int(net.pool_size),
-        float(trace.horizon_ms),
+    eng = get_engine(
+        topo, routing=trace.routing, net=net, pool_size=net.pool_size,
+        horizon_us=trace.horizon_ms * 1000.0, capacity=cap,
     )
-    eng = engine_cache.get(key) if engine_cache is not None else None
-    if eng is None:
-        eng = build_engine(
-            topo, [], routing=trace.routing, net=net,
-            pool_size=net.pool_size, horizon_us=trace.horizon_ms * 1000.0,
-            capacity=cap,
-        )
-        if engine_cache is not None:
-            engine_cache[key] = eng
     return eng, topo, resolved, net
 
 
 def run_trace(
+    trace: Trace,
+    policy: str = "easy",
+    slots: Optional[int] = None,
+    seed: int = 0,
+    engine=None,
+    collect_state: bool = False,
+) -> SchedResult:
+    """Deprecated front door — stream one trace through the scheduler.
+
+    Shim over the :mod:`repro.union.experiment` facade's windowed
+    executor: declare a :class:`~repro.union.experiment.TraceStudy` in an
+    Experiment and call ``union.run`` instead. Kept bit-identical for
+    callers that drive the loop directly (``engine=``/``collect_state``).
+    """
+    from repro.union.experiment import deprecated_entry
+
+    deprecated_entry(
+        "repro.sched.run_trace",
+        "repro.union.run(Experiment(trace=TraceStudy(...)))",
+    )
+    return _run_trace_impl(
+        trace, policy=policy, slots=slots, seed=seed, engine=engine,
+        collect_state=collect_state,
+    )
+
+
+def _run_trace_impl(
     trace: Trace,
     policy: str = "easy",
     slots: Optional[int] = None,
@@ -204,7 +225,7 @@ def run_trace(
     eng, topo, resolved, net = engine
     horizon_us = trace.horizon_ms * 1000.0
 
-    state = eng.init_state(seed=MGR._engine_seed(seed))
+    state = eng.init_state(seed=engine_seed(seed))
     queue = PendingQueue(policy=policy)
     free_slots = list(range(slots))
     occupied = np.zeros((topo.n_nodes,), bool)
@@ -285,7 +306,7 @@ def run_trace(
             free_slots.remove(slot)
             nodes = place_jobs(
                 topo, [qjob.n_ranks], trace.placement,
-                seed=_place_seed(seed, qjob.jid), occupied=occupied,
+                seed=place_seed(seed, qjob.jid), occupied=occupied,
             )[0]
             occupied[nodes] = True
             start = float(np.float32(max(t_now, qjob.arrival_us)))
@@ -343,6 +364,6 @@ def run_trace(
     )
 
 
-def _place_seed(seed: int, jid: int) -> int:
-    """Per-(run, job) placement stream — decorrelated, deterministic."""
-    return (seed * 1_000_003 + jid * 7919 + 17) % (2**31)
+# back-compat alias: the derivation now lives in repro.union.seeds,
+# shared with every other execution path (pinned in tests).
+_place_seed = place_seed

@@ -114,17 +114,25 @@ class Trace:
         return d
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "Trace":
-        d = dict(d)
+    def from_dict(cls, d: Dict[str, Any], path: str = "trace") -> "Trace":
+        from repro.union.validate import (
+            SpecError, check_keys, check_mapping, dataclass_from_dict,
+            reraise_with_path,
+        )
+
+        d = dict(check_mapping(d, path, "trace"))
         jobs = [
-            j if isinstance(j, TraceJob) else TraceJob(**j)
-            for j in d.pop("jobs", [])
+            j if isinstance(j, TraceJob)
+            else dataclass_from_dict(
+                TraceJob, j, f"{path}.jobs[{i}]", "trace job")
+            for i, j in enumerate(d.pop("jobs", []))
         ]
-        unknown = set(d) - set(cls.__dataclass_fields__)
-        if unknown:
-            raise ValueError(f"unknown trace keys: {sorted(unknown)}")
-        tr = cls(jobs=jobs, **d)
-        tr.validate()
+        check_keys(d, cls.__dataclass_fields__, path, "trace")
+        try:
+            tr = cls(jobs=jobs, **d)
+        except TypeError as e:
+            raise SpecError(f"{path}: {e}") from e
+        reraise_with_path(tr.validate, path)
         return tr
 
     def to_json(self, path: str) -> None:

@@ -1,23 +1,44 @@
 """repro.union — the paper's workload manager as a first-class subsystem.
 
-Union composes hybrid workloads and drives the network simulator:
+**One front door**: declare an :class:`~repro.union.experiment.Experiment`
+(closed-mix scenario ensembles and/or an open-stream trace study, crossed
+with a grid of seeds × placements × routing × queue policies) and call
+:func:`union.run <repro.union.experiment.run>` — the planner lowers it
+into engine-bucketed execution nodes, every compiled engine comes from
+the process-wide cache, and you get back uniform typed
+:class:`~repro.union.experiment.Results`::
 
+    from repro import union
+    exp = union.Experiment(
+        name="study", scenarios=[union.mix_scenario("workload1")],
+        members=8, grid=union.StudyGrid(placements=["RN", "RG"]))
+    results = union.run(exp)
+    results.save("results.json")
+
+Modules:
+
+* :mod:`repro.union.experiment` — the Experiment spec, the ``run``
+  facade, and the schema-versioned Results container;
+* :mod:`repro.union.planner` — Experiment -> Plan lowering (grid
+  expansion, engine-envelope bucketing, execution-style choice);
 * :mod:`repro.union.scenario` — declarative, JSON-loadable **Scenario**
   specs (apps, rank counts, overrides, arrival offsets, placement,
-  routing, topology, UR background) replacing the hardcoded mix table;
+  routing, topology, UR background);
 * :mod:`repro.union.manager` — resolves a Scenario into engine inputs
-  (skeletons, placements, NetConfig) and runs a single member;
-* :mod:`repro.union.ensemble` — batches N ensemble members (seeds ×
-  placements × arrival jitter × job sets) through one natively-batched
-  engine call; ragged campaigns bucket members by capacity envelope;
-* :mod:`repro.union.report` — aggregates per-member metrics into the
-  paper's interference summary (latency variation for HPC apps,
-  comm-time inflation for ML apps, baseline-vs-co-run deltas).
+  (skeletons, placements, NetConfig);
+* :mod:`repro.union.seeds` — the one seed-derivation module every
+  execution path shares;
+* :mod:`repro.union.ensemble` — the historical campaign entry points,
+  now deprecation shims over the facade;
+* :mod:`repro.union.report` — the summary/format pipeline over Results,
+  plus the paper's interference summaries.
 
 CLI::
 
+    python -m repro.union --experiment my_study.json
     python -m repro.union --scenario workload1 --members 8
-    python -m repro.union --scenario my_mix.json --members 8 --baselines
+    python -m repro.union --trace poisson --sched fcfs easy
+    python -m repro.union --list
 """
 from repro.union.scenario import (  # noqa: F401
     MIXES,
@@ -33,5 +54,22 @@ from repro.union.ensemble import (  # noqa: F401
     CampaignResult,
     run_campaign,
     run_ragged_campaign,
+    run_sched_campaign,
 )
-from repro.union.report import campaign_summary, interference_summary  # noqa: F401
+from repro.union.experiment import (  # noqa: F401
+    CellResult,
+    Experiment,
+    Results,
+    StudyGrid,
+    TraceStudy,
+    load_experiment,
+    run,
+)
+from repro.union.report import (  # noqa: F401
+    campaign_summary,
+    format_results,
+    interference_summary,
+    results_summary,
+)
+from repro.union.seeds import engine_seed, place_seed  # noqa: F401
+from repro.union.validate import SpecError  # noqa: F401

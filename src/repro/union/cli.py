@@ -1,31 +1,46 @@
-"""``python -m repro.union`` — the campaign driver.
+"""``python -m repro.union`` — flags -> one Experiment -> ``union.run``.
+
+The CLI is a thin translation layer over the Experiment facade: every
+mode (scenario campaigns, ragged multi-scenario campaigns, online-trace
+scheduling, whole experiment files) builds one
+:class:`~repro.union.experiment.Experiment`, runs it through the single
+front door, and renders/saves the uniform Results artifact.
 
 Examples::
+
+    # run a saved experiment spec end to end
+    python -m repro.union --experiment my_study.json
 
     # 8-member vmapped campaign of the paper's workload1 mix
     python -m repro.union --scenario workload1 --members 8 --iters 2
 
-    # custom scenario file, with per-app baseline campaigns + interference
-    python -m repro.union --scenario my_mix.json --members 8 --baselines
+    # ragged campaign: members with different job/rank counts
+    python -m repro.union --scenario mix_a.json mix_b.json --members 4
 
-    # write a builtin mix out as an editable scenario file
-    python -m repro.union --scenario workload2 --emit my_mix.json
+    # per-app baselines + the (app x placement policy) interference grid
+    python -m repro.union --scenario workload1 --baselines --placements RN RR RG
 
-    # online scheduling: stream a 64-job Poisson trace through 8 job
-    # slots under EASY backfill (or replay a trace file)
-    python -m repro.union --trace poisson --trace-jobs 64 --sched easy
-    python -m repro.union --trace my_trace.json --sched fcfs easy
+    # online scheduling: a 64-job Poisson stream through 8 job slots
+    python -m repro.union --trace poisson --trace-jobs 64 --sched fcfs easy
+
+    # what would run, without running it
+    python -m repro.union --scenario workload1 --plan
+
+    # enumerate builtin mixes, catalog apps, and saved specs
+    python -m repro.union --list
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
+import glob
 import os
-from typing import Dict
+from typing import Dict, List, Optional
 
-from repro.union import ensemble, report as REP
-from repro.union.scenario import MIXES, Scenario, load_scenario, mix_scenario
+from repro.union import experiment as EXP
+from repro.union import planner as PLN
+from repro.union import report as REP
+from repro.union.scenario import MIXES, MIX_HAS_UR, Scenario, load_scenario
 
 
 def _apply_cli_overrides(sc: Scenario, args) -> Scenario:
@@ -44,58 +59,145 @@ def _apply_cli_overrides(sc: Scenario, args) -> Scenario:
     return sc
 
 
-def _run_trace_mode(ap, args) -> None:
-    """--trace: the online scheduler (repro.sched) instead of a fixed mix."""
-    from repro.sched import load_trace, synthetic_trace
+def _list_specs(out=print) -> None:
+    """--list: builtin mixes, baseline apps, and saved spec files."""
+    out("builtin mixes (--scenario <name>):")
+    for name, apps in MIXES.items():
+        ur = " + UR background" if name in MIX_HAS_UR else ""
+        out(f"  {name:>12}: {', '.join(apps)}{ur}")
+    from repro.core import workloads as W
 
-    if args.trace in ("poisson", "weibull"):
-        def trace_factory(seed):
-            return synthetic_trace(
-                args.trace_jobs, arrival=args.trace,
-                mean_gap_us=args.trace_gap_us, seed=seed,
-                slots=args.slots or 8,
-            )
-        trace_or_factory = trace_factory
-        name = f"{args.trace}-{args.trace_jobs}x"
-    elif os.path.exists(args.trace):
-        trace_or_factory = load_trace(args.trace)
-        name = trace_or_factory.name
-    elif args.trace.endswith(".json"):
-        ap.error(f"--trace {args.trace!r}: file not found")
-    else:
-        ap.error(f"--trace {args.trace!r}: not a file and not"
-                 " 'poisson'/'weibull'")
+    out("baseline-<app> (each app alone), apps from the catalog:")
+    out(f"  {', '.join(sorted(W.SPECS))}")
+    out("synthetic traces (--trace): poisson, weibull")
+    # look next to the cwd AND next to the installed package (the repo
+    # root when running from a source tree), so --list works from anywhere
+    repo_root = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    bases = [os.getcwd()]
+    if repo_root not in bases:
+        bases.append(repo_root)
+    found = set()
+    for base in bases:
+        for pattern, kind in (
+            ("examples/experiments/*.json", "experiment"),
+            ("examples/scenarios/*.json", "scenario/trace"),
+            ("results/union/*.json", "results artifact"),
+        ):
+            for p in sorted(glob.glob(os.path.join(base, pattern))):
+                if p in found:
+                    continue
+                if not found:
+                    out("saved specs:")
+                found.add(p)
+                out(f"  [{kind}] {os.path.relpath(p)}")
+    if not found:
+        out("saved specs: none found (looked in examples/experiments, "
+            "examples/scenarios, results/union)")
 
-    seeds = [args.seed + i for i in range(args.trace_seeds)]
-    print(f"=== trace campaign: {name} × {len(seeds)} seed(s) × "
-          f"policies {args.sched} ===")
-    camp = ensemble.run_sched_campaign(
-        trace_or_factory, policies=args.sched, seeds=seeds, slots=args.slots)
-    for pol in args.sched:
-        for row in camp["runs"][pol]:
-            print(REP.format_sched_summary(row))
-    if len(args.sched) > 1 or len(seeds) > 1:
-        print("--- aggregate (per policy) ---")
-        for pol, a in camp["summary"].items():
-            print(f"  {pol:>5}: completed {a['completed']}/{a['jobs']} | "
-                  f"wait mean {a['mean_wait_us']['mean']:.0f}us | "
-                  f"BSLD mean {a['mean_bounded_slowdown']['mean']:.2f} | "
-                  f"util {a['utilization']['mean']:.1%} | makespan "
-                  f"{a['makespan_ms']['mean']:.1f}ms")
-    os.makedirs(args.out, exist_ok=True)
-    tag = f"trace__{name}__{'+'.join(args.sched)}_s{args.seed}"[:120]
-    path = os.path.join(args.out, tag + ".json")
-    with open(path, "w") as f:
-        json.dump(camp, f, indent=1, default=float)
+
+def _save_results(res: EXP.Results, out_dir: str, tag: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag[:120] + ".json")
+    res.save(path)
     print(f"wrote {path}")
+
+
+def _build_trace_study(ap, args) -> EXP.TraceStudy:
+    if args.trace in ("poisson", "weibull"):
+        return EXP.TraceStudy(
+            source=args.trace, jobs=args.trace_jobs,
+            gap_us=args.trace_gap_us, slots=args.slots,
+            policies=list(args.sched), seeds=args.trace_seeds,
+        )
+    if os.path.exists(args.trace):
+        return EXP.TraceStudy(
+            source=args.trace, slots=args.slots, policies=list(args.sched),
+            seeds=args.trace_seeds,
+        )
+    if args.trace.endswith(".json"):
+        ap.error(f"--trace {args.trace!r}: file not found")
+    ap.error(f"--trace {args.trace!r}: not a file and not"
+             " 'poisson'/'weibull'")
+
+
+def _grid_summaries(res: EXP.Results, name: str, routing: str,
+                    policies: List[str]) -> Dict[str, Dict]:
+    """Per-placement-policy campaign summaries of one scenario group."""
+    groups = res.summary["scenario_studies"]
+    return {pol: groups[f"{name}/{pol}/{routing}"]
+            for pol in policies if f"{name}/{pol}/{routing}" in groups}
+
+
+def _run_experiment(args, exp: EXP.Experiment,
+                    tag: Optional[str] = None) -> None:
+    from repro import union
+
+    if args.plan:
+        print(PLN.plan(exp).describe())
+        return
+    res = union.run(exp)
+    _attach_interference(args, exp, res)
+    print(REP.format_results(res))
+    _print_interference(res)
+    _save_results(res, args.out, tag or f"experiment__{exp.name}")
+
+
+def _attach_interference(args, exp: EXP.Experiment, res: EXP.Results) -> None:
+    """--baselines: co-run-vs-baseline inflation (and the per-placement
+    interference matrix with --placements), from the grouped summaries of
+    the *same* Results — baselines ran inside the one experiment."""
+    if not getattr(args, "baselines", False) or not exp.scenarios:
+        return
+    sc = exp.scenarios[0]
+    pols = [sc.placement] + [
+        p for p in (args.placements or []) if p != sc.placement]
+    baseline_apps = [s.name.split("baseline-", 1)[1]
+                     for s in exp.scenarios if s.name.startswith("baseline-")]
+    by_policy = _grid_summaries(res, sc.name, sc.routing, pols)
+    baselines_by_policy = {
+        pol: {app: _grid_summaries(
+            res, f"baseline-{app}", sc.routing, [pol])[pol]
+            for app in baseline_apps}
+        for pol in pols
+    }
+    res.summary["baselines"] = baselines_by_policy[sc.placement]
+    res.summary["interference"] = REP.interference_summary(
+        by_policy[sc.placement], baselines_by_policy[sc.placement])
+    if args.placements:
+        res.summary["interference_matrix"] = REP.interference_matrix(
+            by_policy, baselines_by_policy)
+
+
+def _print_interference(res: EXP.Results) -> None:
+    inf = res.summary.get("interference")
+    if inf:
+        print("=== interference (co-run vs baseline) ===")
+        for app, d in inf.items():
+            print(f"  {app:>12}: latency x{d['latency_inflation']:.2f} "
+                  f"(variation {d['latency_variation_baseline']:.1%} -> "
+                  f"{d['latency_variation_corun']:.1%}) | "
+                  f"comm time x{d['comm_time_inflation']:.2f}")
+    matrix = res.summary.get("interference_matrix")
+    if matrix:
+        print("=== interference matrix (app x placement policy) ===")
+        for app in matrix["apps"]:
+            row = " ".join(
+                f"{pol}: x{matrix['comm_time_inflation'][app][pol]:.2f}"
+                for pol in matrix["comm_time_inflation"][app])
+            print(f"  {app:>12} comm-time inflation | {row}")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro.union",
-        description="Union workload manager: declarative scenarios, "
-        "staggered arrivals, vmapped ensemble campaigns.",
+        description="Union workload manager — one front door: declarative "
+        "Experiments over scenarios, traces, and study grids.",
     )
+    ap.add_argument("--experiment", default=None, metavar="PATH",
+                    help="run a saved Experiment JSON spec through the"
+                    " facade (the other flags below are translations onto"
+                    " the same spec)")
     ap.add_argument("--scenario", nargs="+",
                     help=f"scenario JSON file(s), or builtin: {sorted(MIXES)}"
                     " / baseline-<app>. More than one spec runs a *ragged*"
@@ -123,14 +225,17 @@ def main(argv=None) -> None:
     ap.add_argument("--members", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sequential", action="store_true",
-                    help="loop members instead of vmapping (debug/bench)")
+                    help="loop members instead of one batched run"
+                    " (debug/bench)")
     ap.add_argument("--baselines", action="store_true",
-                    help="also run each app alone; report interference deltas")
+                    help="also run each app alone (inside the same"
+                    " experiment); report interference deltas")
     ap.add_argument("--placements", nargs="+", default=None,
                     choices=["RN", "RR", "RG"],
-                    help="with --baselines: repeat the co-run + baseline"
-                    " campaigns under each placement policy and report the"
-                    " per-(app, policy) interference matrix (Fig. 7/9 grid)")
+                    help="cross the study grid over these placement"
+                    " policies (one run, grouped summaries); with"
+                    " --baselines additionally report the per-(app,"
+                    " policy) interference matrix (Fig. 7/9 grid)")
     ap.add_argument("--strict", action="store_true",
                     help="raise when the message pool drops allocations")
     ap.add_argument("--arrival-jitter-us", type=float, default=0.0,
@@ -142,14 +247,48 @@ def main(argv=None) -> None:
     ap.add_argument("--tick-us", type=float, default=None)
     ap.add_argument("--out", default="results/union")
     ap.add_argument("--emit", metavar="PATH", default=None,
-                    help="write the resolved scenario spec to PATH and exit")
+                    help="write the resolved scenario (or experiment) spec"
+                    " to PATH and exit")
+    ap.add_argument("--plan", action="store_true",
+                    help="print the planner's lowering (nodes, envelopes,"
+                    " engine reuse) and exit without running")
+    ap.add_argument("--list", action="store_true", dest="list_specs",
+                    help="enumerate builtin mixes, catalog apps, and saved"
+                    " scenario/experiment specs, then exit")
     args = ap.parse_args(argv)
 
-    if args.trace is not None:
-        _run_trace_mode(ap, args)
+    if args.list_specs:
+        _list_specs()
         return
+
+    if args.experiment is not None:
+        exp = EXP.load_experiment(args.experiment)
+        if args.emit:
+            exp.to_json(args.emit)
+            print(f"wrote experiment spec to {args.emit}")
+            return
+        print(f"=== experiment: {exp.name} ===")
+        _run_experiment(args, exp, tag=f"experiment__{exp.name}"
+                        f"_s{exp.base_seed}")
+        return
+
+    if args.trace is not None:
+        study = _build_trace_study(ap, args)
+        exp = EXP.Experiment(
+            name=f"trace-{args.trace}" if study.source in
+            ("poisson", "weibull") else f"trace-{os.path.basename(args.trace)}",
+            trace=study, base_seed=args.seed,
+        )
+        seeds = study.seed_list(args.seed)
+        print(f"=== trace campaign: {exp.name} × {len(seeds)} seed(s) × "
+              f"policies {args.sched} ===")
+        _run_experiment(
+            args, exp,
+            tag=f"trace__{exp.name}__{'+'.join(args.sched)}_s{args.seed}")
+        return
+
     if not args.scenario:
-        ap.error("one of --scenario or --trace is required")
+        ap.error("one of --experiment, --scenario or --trace is required")
 
     scenarios = [
         _apply_cli_overrides(load_scenario(s), args) for s in args.scenario
@@ -160,9 +299,8 @@ def main(argv=None) -> None:
         print(f"wrote scenario spec to {args.emit}")
         return
 
-    os.makedirs(args.out, exist_ok=True)
     if len(scenarios) > 1:
-        # ragged campaign: each scenario contributes --members members
+        # ragged campaign: every scenario contributes --members members
         # (seeds base_seed..base_seed+members-1), mixed shapes in one run.
         if args.baselines or args.arrival_jitter_us:
             ap.error("--baselines / --arrival-jitter-us are not supported "
@@ -171,88 +309,38 @@ def main(argv=None) -> None:
         names = "+".join(s.name for s in scenarios)
         print(f"=== ragged campaign: {names} × {args.members} members each "
               f"({'batched' if not args.sequential else 'sequential'}) ===")
-        members = [s for s in scenarios for _ in range(args.members)]
-        seeds = [args.seed + i for s in scenarios for i in range(args.members)]
-        camp = ensemble.run_ragged_campaign(
-            members, seeds=seeds, base_seed=args.seed,
-            vmapped=not args.sequential, strict=args.strict,
+        exp = EXP.Experiment(
+            name=names, scenarios=scenarios, members=args.members,
+            base_seed=args.seed, vmapped=not args.sequential,
+            strict=args.strict,
         )
-        print(REP.format_summary(camp.summary))
-        result: Dict = dict(
-            scenarios=[s.to_dict() for s in scenarios],
-            summary=camp.summary, members=camp.reports,
-        )
-        tag = f"ragged__{names}__m{args.members}_s{args.seed}"[:120]
-        path = os.path.join(args.out, tag + ".json")
-        with open(path, "w") as f:
-            json.dump(result, f, indent=1, default=float)
-        print(f"wrote {path}")
+        _run_experiment(args, exp,
+                        tag=f"ragged__{names}__m{args.members}_s{args.seed}")
         return
 
+    exp_scenarios = [sc]
+    if args.baselines:
+        for job in sc.jobs:
+            exp_scenarios.append(dataclasses.replace(
+                sc, name=f"baseline-{job.app}",
+                jobs=[dataclasses.replace(job, start_us=0.0)], ur=None))
+    grid = EXP.StudyGrid()
+    if args.placements:
+        pols = [sc.placement] + [p for p in args.placements
+                                 if p != sc.placement]
+        grid = EXP.StudyGrid(placements=pols)
+    exp = EXP.Experiment(
+        name=sc.name, scenarios=exp_scenarios, members=args.members,
+        base_seed=args.seed, grid=grid, vmapped=not args.sequential,
+        strict=args.strict, arrival_jitter_us=args.arrival_jitter_us,
+    )
     print(f"=== campaign: {sc.name} × {args.members} members "
           f"({'vmapped' if not args.sequential else 'sequential'}) ===")
-    camp = ensemble.run_campaign(
-        sc, members=args.members, base_seed=args.seed,
-        vmapped=not args.sequential, strict=args.strict,
-        arrival_jitter_us=args.arrival_jitter_us,
-    )
-    print(REP.format_summary(camp.summary))
+    _run_experiment(
+        args, exp,
+        tag=f"{sc.name}__{sc.topo}__{sc.placement}__{sc.routing}"
+        f"__{sc.scale}__m{args.members}_s{args.seed}")
 
-    result: Dict = dict(scenario=sc.to_dict(), summary=camp.summary,
-                        members=camp.reports)
 
-    if args.baselines:
-        def corun_and_baselines(scn):
-            bl = {}
-            for job in scn.jobs:
-                base_sc = dataclasses.replace(
-                    scn, name=f"baseline-{job.app}",
-                    jobs=[dataclasses.replace(job, start_us=0.0)], ur=None)
-                print(f"--- baseline: {job.app} alone "
-                      f"({scn.placement}) ---")
-                bcamp = ensemble.run_campaign(
-                    base_sc, members=args.members, base_seed=args.seed,
-                    vmapped=not args.sequential, strict=args.strict)
-                bl[job.app] = bcamp.summary
-            return bl
-
-        baselines = corun_and_baselines(sc)
-        interference = REP.interference_summary(camp.summary, baselines)
-        result["baselines"] = baselines
-        result["interference"] = interference
-        print("=== interference (co-run vs baseline) ===")
-        for app, d in interference.items():
-            print(f"  {app:>12}: latency x{d['latency_inflation']:.2f} "
-                  f"(variation {d['latency_variation_baseline']:.1%} -> "
-                  f"{d['latency_variation_corun']:.1%}) | "
-                  f"comm time x{d['comm_time_inflation']:.2f}")
-
-        if args.placements:
-            by_policy = {sc.placement: camp.summary}
-            baselines_by_policy = {sc.placement: baselines}
-            for pol in args.placements:
-                if pol == sc.placement:
-                    continue
-                sc_p = dataclasses.replace(
-                    sc, name=f"{sc.name}-{pol}", placement=pol)
-                print(f"--- co-run under placement {pol} ---")
-                pcamp = ensemble.run_campaign(
-                    sc_p, members=args.members, base_seed=args.seed,
-                    vmapped=not args.sequential, strict=args.strict)
-                by_policy[pol] = pcamp.summary
-                baselines_by_policy[pol] = corun_and_baselines(sc_p)
-            matrix = REP.interference_matrix(by_policy, baselines_by_policy)
-            result["interference_matrix"] = matrix
-            print("=== interference matrix (app x placement policy) ===")
-            for app in matrix["apps"]:
-                row = " ".join(
-                    f"{pol}: x{matrix['comm_time_inflation'][app][pol]:.2f}"
-                    for pol in matrix["comm_time_inflation"][app])
-                print(f"  {app:>12} comm-time inflation | {row}")
-
-    tag = f"{sc.name}__{sc.topo}__{sc.placement}__{sc.routing}__{sc.scale}" \
-          f"__m{args.members}_s{args.seed}"
-    path = os.path.join(args.out, tag + ".json")
-    with open(path, "w") as f:
-        json.dump(result, f, indent=1, default=float)
-    print(f"wrote {path}")
+if __name__ == "__main__":
+    main()

@@ -1,34 +1,22 @@
-"""Ensemble campaigns: N members through one batched engine call.
+"""Deprecated campaign front doors — shims over the Experiment facade.
 
-The stacked engine carries the *job set itself* as runtime data and gives
-every state leaf an explicit member dimension, so a campaign is just a
-stack of member states handed to one jitted ``run`` — no ``jax.vmap``
-wrapper, no per-shape re-trace. Members may differ in placement draw,
-engine RNG, arrival schedule, and (ragged campaigns) in their whole job
-list, as long as they fit the engine's capacity envelope
-``(Jmax, Pmax, OPmax)``.
-
-* :func:`run_campaign` — N members of one scenario (the paper's
-  "many seeds × placements" sweep).
-* :func:`run_ragged_campaign` — members drawn from *different* scenarios,
-  bucketed by compatible engine envelope (topology/net/routing/UR shape),
-  padded jobs are no-ops with ``start_us=inf``.
-
-The engine's per-member freeze keeps each member's trajectory
-bit-identical to a sequential ``run_scenario`` with the same seed
-(finished members stop mutating while stragglers tick on).
+Historically this module owned three of the five parallel entry points
+(:func:`run_campaign`, :func:`run_ragged_campaign`,
+:func:`run_sched_campaign`), each with its own engine-construction path.
+They now lower onto :func:`repro.union.experiment.run` — one planner, one
+process-wide engine cache, one executor — and re-shape the uniform
+:class:`~repro.union.experiment.Results` back into their historical
+return types, bit-identically (golden-pinned in
+``tests/test_experiment.py``). New code should declare an
+:class:`~repro.union.experiment.Experiment` instead; see
+``docs/experiment.md`` for the migration table.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-import numpy as np
-
-import jax
-
-from repro.netsim.engine import EngineCapacity, member_state, stack_members
+from repro.netsim.engine import EngineCapacity
 from repro.union import manager as MGR
 from repro.union.scenario import Scenario
 
@@ -37,25 +25,16 @@ from repro.union.scenario import Scenario
 class CampaignEngine:
     """A compiled engine reusable across campaigns of one envelope.
 
-    Holds the jitted ``run`` — batched natively, so the same engine
-    object serves both the one-call campaign path and the looped
-    (debug/bench) path from its single jit cache — plus a ``pmap``'d
-    variant that shards member batches across XLA devices (multiple CPU
-    host devices via ``--xla_force_host_platform_device_count``, or
-    accelerator cores).
+    Backed by the process-wide engine cache since the Experiment facade
+    landed, so two CampaignEngines at one envelope share their jits;
+    kept as the return type of :func:`build_campaign_engine` for
+    callers that pre-widen capacity envelopes.
     """
 
     rs: MGR.ResolvedScenario
     init: Callable
     run: Callable
     capacity: EngineCapacity
-    _prun: Optional[Callable] = None
-
-    @property
-    def prun(self) -> Callable:
-        if self._prun is None:
-            self._prun = jax.pmap(self.run)
-        return self._prun
 
 
 def build_campaign_engine(
@@ -64,9 +43,9 @@ def build_campaign_engine(
     capacity: Optional[EngineCapacity] = None,
 ) -> CampaignEngine:
     rs = MGR.resolve(scenario, seed=base_seed)
-    cap = rs.capacity if capacity is None else capacity.union(rs.capacity)
-    init, run, _ = MGR.build(rs, capacity=cap)
-    return CampaignEngine(rs=rs, init=init, run=run, capacity=cap)
+    eng = MGR.build(rs, capacity=capacity)
+    return CampaignEngine(rs=rs, init=eng.init_state, run=eng.run,
+                          capacity=eng.capacity)
 
 
 @dataclass
@@ -84,6 +63,27 @@ class CampaignResult:
         return self.members / max(self.wall_s, 1e-9)
 
 
+def _campaign_result(scenario, res, members, base_seed, vmapped,
+                     ragged: bool = False, buckets: int = 0):
+    """Re-shape facade Results into the historical CampaignResult."""
+    from repro.union.report import campaign_summary
+
+    reports = [c.report for c in res.cells]
+    out = CampaignResult(
+        scenario=scenario, members=members, base_seed=base_seed,
+        vmapped=vmapped,
+        wall_s=sum(r.get("sim_wall_s", 0.0) for r in reports),
+        reports=reports,
+    )
+    out.summary = campaign_summary(out)
+    if ragged:
+        out.summary["ragged"] = dict(
+            buckets=buckets,
+            envelopes=[r["config"]["envelope"] for r in reports],
+        )
+    return out
+
+
 def run_campaign(
     scenario: Scenario,
     members: int = 8,
@@ -93,101 +93,80 @@ def run_campaign(
     arrival_jitter_us: float = 0.0,
     engine: Optional[CampaignEngine] = None,
 ) -> CampaignResult:
-    """Run ``members`` ensemble members; seeds are ``base_seed + i``.
+    """Deprecated front door — run ``members`` ensemble members of one
+    scenario (seeds ``base_seed + i``).
 
-    ``vmapped=True`` stacks all member states and makes **one** batched
-    engine call; ``False`` loops members through the same engine
-    (debug/bench baseline). ``arrival_jitter_us`` > 0 additionally
-    staggers each member's job arrivals by a deterministic per-(member,
-    job) offset in ``[0, arrival_jitter_us)`` on top of the scenario's
-    ``start_us`` — sampling the dynamic co-scheduling space.
-
-    Pass a prebuilt ``engine`` (``build_campaign_engine``) to reuse the
-    jit cache across campaigns of the same envelope.
+    Shim over ``union.run``: equivalent to an Experiment with one
+    scenario and ``members`` seeds. ``vmapped=True`` is one batched
+    engine call; ``False`` loops members (debug/bench baseline);
+    ``arrival_jitter_us`` staggers each member's arrivals by a
+    deterministic per-(member, job) offset. A prebuilt ``engine``
+    contributes only its (possibly widened) capacity envelope — its jits
+    are already shared through the process-wide engine cache.
     """
-    eng = engine or build_campaign_engine(scenario, base_seed)
-    rs = eng.rs
-    base_start = np.asarray(rs.start_us, np.float32)
+    import dataclasses
 
-    starts: List[np.ndarray] = []
+    from repro.union import experiment as EXP
 
-    def member_init(i: int):
-        seed = base_seed + i
-        start = base_start
-        if arrival_jitter_us > 0:
-            jit_rng = np.random.default_rng(seed)
-            start = base_start + jit_rng.uniform(
-                0.0, arrival_jitter_us, size=base_start.shape
-            ).astype(np.float32)
-        starts.append(start)
-        return eng.init(
-            seed=MGR._engine_seed(seed),
-            placements=rs.placements(seed),
-            start_us=start,
-        )
-
-    t0 = time.time()
-    if vmapped:
-        D = jax.local_device_count()
-        inits = [member_init(i) for i in range(members)]
-        if D > 1 and members % D == 0:
-            # shard the campaign across XLA devices: each device runs a
-            # (members/D)-batched engine call in parallel — the CPU analog
-            # of accelerator lane-parallelism (enable host devices with
-            # XLA_FLAGS=--xla_force_host_platform_device_count=N).
-            chunk = members // D
-            sharded = stack_members([
-                stack_members(inits[d * chunk:(d + 1) * chunk])
-                for d in range(D)
-            ])
-            final = jax.block_until_ready(eng.prun(sharded))
-            states = [
-                member_state(member_state(final, i // chunk), i % chunk)
-                for i in range(members)
-            ]
-        else:
-            batched = stack_members(inits)
-            final = jax.block_until_ready(eng.run(batched))
-            states = [member_state(final, i) for i in range(members)]
-    else:
-        states = [
-            jax.block_until_ready(eng.run(member_init(i)))
-            for i in range(members)
-        ]
-    wall = time.time() - t0
-
-    reports = [
-        MGR.member_report(st, rs, wall / members, seed=base_seed + i,
-                          strict=strict, start_us=starts[i],
-                          capacity=eng.capacity)
-        for i, st in enumerate(states)
-    ]
-    from repro.union.report import campaign_summary
-
-    res = CampaignResult(
-        scenario=scenario, members=members, base_seed=base_seed,
-        vmapped=vmapped, wall_s=wall, reports=reports,
+    EXP.deprecated_entry(
+        "repro.union.run_campaign",
+        "repro.union.run(Experiment(scenarios=[...], members=N))",
     )
-    res.summary = campaign_summary(res)
-    return res
+    if engine is not None:
+        # preserve the historical widened-envelope behavior: run (and
+        # report) every member under the prebuilt engine's capacity.
+        cap = engine.capacity
+        scenario = dataclasses.replace(scenario, reserve=dict(
+            jobs=cap.Jmax, ranks=cap.Pmax, ops=cap.OPmax))
+    res = EXP.run(EXP.Experiment(
+        name=scenario.name, scenarios=[scenario], members=members,
+        base_seed=base_seed, vmapped=vmapped, strict=strict,
+        arrival_jitter_us=arrival_jitter_us,
+    ))
+    return _campaign_result(scenario, res, members, base_seed, vmapped)
 
 
-# ---------------------------------------------------------------------------
-# ragged campaigns: members from different scenarios, one engine per bucket
-# ---------------------------------------------------------------------------
+def run_ragged_campaign(
+    scenarios: Sequence[Scenario],
+    seeds: Optional[Sequence[int]] = None,
+    base_seed: int = 0,
+    vmapped: bool = True,
+    strict: bool = False,
+) -> CampaignResult:
+    """Deprecated front door — one campaign over members with *different*
+    job/rank counts (member ``i`` runs ``scenarios[i]`` with
+    ``seeds[i]``).
 
-def _bucket_key(rs: MGR.ResolvedScenario) -> Tuple:
-    """Scenarios sharing this key can share one compiled engine (their
-    capacity envelopes are unioned; job tables are runtime data)."""
-    sc = rs.scenario
-    ur = rs.ur
-    return (
-        sc.topo, sc.scale, sc.routing.upper(), float(sc.tick_us),
-        float(rs.horizon_us), int(rs.pool_size),
-        None if ur is None else (
-            ur.rank2node.shape[0], float(ur.size_bytes),
-            float(ur.interval_us), float(ur.start_us),
-        ),
+    Shim over ``union.run``: equivalent to an Experiment listing every
+    member's scenario with explicit per-member seeds. The planner buckets
+    members by compatible engine configuration, compiles **one** engine
+    per bucket at the union capacity envelope, and pads smaller members
+    with inert no-op jobs (``start_us=inf``, born done) — provably not
+    perturbing the real jobs' trajectories.
+    """
+    from repro.union import experiment as EXP
+
+    EXP.deprecated_entry(
+        "repro.union.run_ragged_campaign",
+        "repro.union.run(Experiment(scenarios=[...], seeds=[...]))",
+    )
+    from repro.union import planner as PLN
+
+    scenarios = list(scenarios)
+    if seeds is None:
+        seeds = [base_seed + i for i in range(len(scenarios))]
+    if len(seeds) != len(scenarios):
+        raise ValueError("seeds and scenarios must have equal length")
+    exp = EXP.Experiment(
+        name="+".join(dict.fromkeys(sc.name for sc in scenarios)),
+        scenarios=scenarios, members=1, seeds=list(seeds),
+        base_seed=base_seed, vmapped=vmapped, strict=strict,
+    )
+    plan = PLN.plan(exp)
+    res = EXP.run(exp, plan=plan)
+    return _campaign_result(
+        scenarios[0], res, len(scenarios), base_seed, vmapped,
+        ragged=True, buckets=len(plan.batched_nodes),
     )
 
 
@@ -198,128 +177,38 @@ def run_sched_campaign(
     slots: Optional[int] = None,
     tau_us: float = 10_000.0,
 ) -> Dict[str, Any]:
-    """Online-scheduler campaign: trace seeds × queue policies.
+    """Deprecated front door — online-scheduler campaign: trace seeds ×
+    queue policies.
 
-    ``trace_or_factory`` is a :class:`repro.sched.Trace` (same job stream
-    every seed; the seed varies placement draws and engine RNG) or a
-    callable ``seed -> Trace`` (fresh arrival draws per seed — the
-    synthetic-trace sweep). Each (seed, policy) cell runs the full
-    slot-recycling scheduler; one engine is compiled per trace shape and
-    shared across the policy comparison, so the deltas measure
-    scheduling, not recompilation.
+    Shim over ``union.run``: equivalent to an Experiment with a
+    TraceStudy. ``trace_or_factory`` is a :class:`repro.sched.Trace`
+    (same job stream every seed) or a callable ``seed -> Trace`` (fresh
+    arrival draws per seed). One engine per trace envelope is drawn from
+    the process-wide cache and shared across the policy comparison, so
+    the deltas measure scheduling, not recompilation.
     """
-    from repro.sched.scheduler import build_sched_engine, run_trace
-    from repro.union.report import _spread, sched_summary
+    from repro.union import experiment as EXP
 
-    cells: Dict[str, List[Dict]] = {p: [] for p in policies}
-    t0 = time.time()
-    fixed_engine = None
-    engine_cache: Dict = {}  # factory traces sharing an envelope share jits
-    for seed in seeds:
-        if callable(trace_or_factory):
-            trace = trace_or_factory(seed)
-            engine = build_sched_engine(trace, slots,
-                                        engine_cache=engine_cache)
-        else:
-            trace = trace_or_factory
-            if fixed_engine is None:
-                fixed_engine = build_sched_engine(trace, slots)
-            engine = fixed_engine
-        for pol in policies:
-            res = run_trace(trace, policy=pol, slots=slots, seed=seed,
-                            engine=engine)
-            cells[pol].append(sched_summary(res, tau_us=tau_us))
-    wall = time.time() - t0
-    agg = {
-        pol: dict(
-            runs=len(rows),
-            completed=int(sum(r["completed"] for r in rows)),
-            jobs=int(sum(r["jobs"] for r in rows)),
-            mean_wait_us=_spread([r["wait_us"]["mean"] for r in rows]),
-            mean_bounded_slowdown=_spread(
-                [r["bounded_slowdown"]["mean"] for r in rows]),
-            utilization=_spread([r["utilization"] for r in rows]),
-            makespan_ms=_spread([r["makespan_ms"] for r in rows]),
-        )
-        for pol, rows in cells.items()
+    EXP.deprecated_entry(
+        "repro.union.run_sched_campaign",
+        "repro.union.run(Experiment(trace=TraceStudy(...)))",
+    )
+    if callable(trace_or_factory):
+        study = EXP.TraceStudy(
+            factory=trace_or_factory, policies=list(policies),
+            seeds=list(seeds), slots=slots, tau_us=tau_us)
+        name = "trace-factory"
+    else:
+        study = EXP.TraceStudy(
+            trace=trace_or_factory, policies=list(policies),
+            seeds=list(seeds), slots=slots, tau_us=tau_us)
+        name = trace_or_factory.name
+    res = EXP.run(EXP.Experiment(name=name, trace=study))
+    cells: Dict[str, List[Dict]] = {
+        p: [c.report for c in res.trace_cells if c.policy == p]
+        for p in policies
     }
     return dict(
-        policies=list(policies), seeds=list(seeds), wall_s=wall,
-        summary=agg, runs=cells,
+        policies=list(policies), seeds=list(seeds), wall_s=res.wall_s,
+        summary=res.summary["trace_studies"], runs=cells,
     )
-
-
-def run_ragged_campaign(
-    scenarios: Sequence[Scenario],
-    seeds: Optional[Sequence[int]] = None,
-    base_seed: int = 0,
-    vmapped: bool = True,
-    strict: bool = False,
-) -> CampaignResult:
-    """One campaign over members with *different* job/rank counts.
-
-    Member ``i`` runs ``scenarios[i]`` with seed ``seeds[i]`` (default
-    ``base_seed + i``). Members are bucketed by compatible engine
-    configuration (:func:`_bucket_key`); each bucket compiles **one**
-    engine at the union capacity envelope and runs all its members in one
-    batched call — smaller members are padded with no-op jobs
-    (``start_us=inf``, born done) and padded ranks, which provably do not
-    perturb the real jobs' trajectories (the engine equivalence tests
-    assert per-member bit-identity with sequential runs).
-    """
-    scenarios = list(scenarios)
-    if seeds is None:
-        seeds = [base_seed + i for i in range(len(scenarios))]
-    if len(seeds) != len(scenarios):
-        raise ValueError("seeds and scenarios must have equal length")
-
-    resolved = [MGR.resolve(sc, seed=s) for sc, s in zip(scenarios, seeds)]
-    buckets: Dict[Tuple, List[int]] = {}
-    for i, rs in enumerate(resolved):
-        buckets.setdefault(_bucket_key(rs), []).append(i)
-
-    reports: List[Optional[Dict]] = [None] * len(scenarios)
-    t0 = time.time()
-    for idxs in buckets.values():
-        cap = resolved[idxs[0]].capacity
-        for i in idxs[1:]:
-            cap = cap.union(resolved[i].capacity)
-        # the first member's resolution hosts the engine; every member's
-        # own job list is swapped in at init time (runtime data).
-        host = resolved[idxs[0]]
-        init, run, _ = MGR.build(host, capacity=cap)
-        states = []
-        for i in idxs:
-            rs = resolved[i]
-            states.append(init(
-                seed=MGR._engine_seed(seeds[i]),
-                placements=rs.placements(seeds[i]),
-                start_us=rs.start_us,
-                jobs_override=rs.jobs,
-            ))
-        if vmapped:
-            final = jax.block_until_ready(run(stack_members(states)))
-            finals = [member_state(final, k) for k in range(len(idxs))]
-        else:
-            finals = [jax.block_until_ready(run(s)) for s in states]
-        for k, i in enumerate(idxs):
-            reports[i] = MGR.member_report(
-                finals[k], resolved[i], 0.0, seed=seeds[i], strict=strict,
-                capacity=cap,
-            )
-    wall = time.time() - t0
-    for rep in reports:
-        rep["sim_wall_s"] = wall / max(len(scenarios), 1)
-
-    from repro.union.report import campaign_summary
-
-    res = CampaignResult(
-        scenario=scenarios[0], members=len(scenarios), base_seed=base_seed,
-        vmapped=vmapped, wall_s=wall, reports=reports,
-    )
-    res.summary = campaign_summary(res)
-    res.summary["ragged"] = dict(
-        buckets=len(buckets),
-        envelopes=[r["config"]["envelope"] for r in reports],
-    )
-    return res

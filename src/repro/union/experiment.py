@@ -1,0 +1,574 @@
+"""The single front door: declarative Experiments, one ``run``, typed Results.
+
+An **Experiment** declares a whole hybrid-workload study in one spec
+(JSON-loadable): closed-mix scenario ensembles *and* open-stream traces,
+crossed with a study grid of seeds × placements × routing × queue
+policies. :func:`run` lowers it through the planner
+(:mod:`repro.union.planner`) into engine-bucketed execution nodes, draws
+every compiled engine from the process-wide cache in
+:mod:`repro.netsim.engine`, and returns a uniform, schema-versioned
+:class:`Results` container that :mod:`repro.union.report` renders through
+one summary/format pipeline.
+
+Schema (all keys optional unless noted)::
+
+    {
+      "name": "study1",
+      "scenarios": ["workload1",          # builtin mix / baseline-<app>,
+                    "my_mix.json",        # a scenario file,
+                    {"name": ..., "jobs": [...]}],   # or inline
+      "members": 3,                       # ensemble members per variant
+      "base_seed": 0,
+      "seeds": [3, 5, 8],                 # explicit member seeds (optional;
+                                          # length members, or variants ×
+                                          # members consumed flat)
+      "grid": {"placements": ["RN", "RG"],# cross every scenario with these
+               "routing": ["MIN", "ADP"]},
+      "arrival_jitter_us": 0.0,
+      "trace": {                          # open-stream study (optional)
+        "source": "poisson",              # 'poisson'|'weibull'|trace file
+        "jobs": 64, "gap_us": 2000.0,     # synthetic-draw parameters
+        "slots": 8, "policies": ["fcfs", "easy"], "seeds": 2
+      }
+    }
+
+The old entry points (``run_scenario``, ``run_campaign``,
+``run_ragged_campaign``, ``run_sched_campaign``, ``sched.run_trace``) are
+deprecation shims over this facade; see ``docs/experiment.md`` for the
+migration table.
+"""
+from __future__ import annotations
+
+import json
+import time
+import warnings
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import jax
+
+from repro.netsim.engine import (
+    engine_cache_stats,
+    get_engine,
+    member_state,
+    stack_members,
+)
+from repro.union import manager as MGR
+from repro.union.scenario import Scenario, load_scenario
+from repro.union.seeds import engine_seed
+from repro.union.validate import (
+    SpecError,
+    check_keys,
+    check_mapping,
+    dataclass_from_dict,
+    reraise_with_path,
+)
+
+SCHEMA_VERSION = 1
+
+_POLICIES = ("fcfs", "easy")
+
+
+def _resolve_spec_path(spec: str, base_dir: Optional[str]) -> str:
+    """Resolve a file reference inside an experiment spec relative to the
+    spec file's own directory (falling back to the cwd), so saved
+    experiments that name sibling scenario/trace files load from
+    anywhere. Non-path names (builtin mixes) pass through untouched."""
+    import os
+
+    if base_dir and not os.path.isabs(spec):
+        cand = os.path.join(base_dir, spec)
+        if os.path.exists(cand):
+            return cand
+        if spec.endswith(".json") and not os.path.exists(spec):
+            return cand  # missing either way: error against the spec's dir
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StudyGrid:
+    """Factors crossed with every scenario: placement and routing axes.
+
+    ``None`` leaves the scenario's own value; a list replaces it with one
+    variant per entry (seeds are the third axis, via ``members``/``seeds``;
+    queue policies are the trace-side axis in :class:`TraceStudy`).
+    """
+
+    placements: Optional[List[str]] = None
+    routing: Optional[List[str]] = None
+
+    def validate(self) -> None:
+        for p in self.placements or []:
+            if p not in ("RN", "RR", "RG"):
+                raise ValueError(f"unknown placement {p!r} in grid")
+        for r in self.routing or []:
+            if r.upper() not in ("MIN", "ADP", "ADAPTIVE"):
+                raise ValueError(f"unknown routing {r!r} in grid")
+
+    @property
+    def is_default(self) -> bool:
+        return self.placements is None and self.routing is None
+
+
+@dataclass
+class TraceStudy:
+    """The open-stream side of an experiment: a trace × policies × seeds.
+
+    ``source`` is ``'poisson'`` / ``'weibull'`` (synthetic draws — fresh
+    arrivals per seed) or a trace-JSON path (fixed job stream; seeds vary
+    placement draws and engine RNG). An inline ``trace`` dict or Trace
+    object fixes the stream directly; a ``factory`` callable
+    (``seed -> Trace``) is the programmatic escape hatch (not
+    JSON-serializable).
+    """
+
+    source: Optional[str] = None
+    jobs: int = 64
+    gap_us: float = 2000.0
+    slots: Optional[int] = None
+    policies: List[str] = field(default_factory=lambda: ["easy"])
+    seeds: Union[int, List[int]] = 1
+    tau_us: float = 10_000.0  # bounded-slowdown threshold for summaries
+    trace: Optional[Any] = None  # repro.sched.Trace
+    factory: Optional[Callable] = field(default=None, repr=False)
+
+    def validate(self) -> None:
+        if self.source is None and self.trace is None and self.factory is None:
+            raise ValueError(
+                "trace study needs a 'source' ('poisson'/'weibull'/file), "
+                "an inline 'trace', or a factory"
+            )
+        if self.factory is not None and not callable(self.factory):
+            raise ValueError(
+                "trace study 'factory' must be a callable (seed -> Trace); "
+                "it is not JSON-expressible — use 'source' or an inline "
+                "'trace' in specs"
+            )
+        if self.source in ("poisson", "weibull") and self.jobs < 1:
+            raise ValueError("trace study needs jobs >= 1")
+        if not self.policies:
+            raise ValueError("trace study needs at least one policy")
+        for p in self.policies:
+            if p not in _POLICIES:
+                raise ValueError(
+                    f"unknown queue policy {p!r}; expected one of {_POLICIES}")
+        n = self.seeds if isinstance(self.seeds, int) else len(self.seeds)
+        if n < 1:
+            raise ValueError("trace study needs at least one seed")
+
+    def seed_list(self, base_seed: int) -> List[int]:
+        if isinstance(self.seeds, int):
+            return [base_seed + i for i in range(self.seeds)]
+        return list(self.seeds)
+
+    def trace_for(self, seed: int):
+        """Materialize this study's trace for one seed."""
+        from repro.sched.trace import load_trace, synthetic_trace
+
+        if self.factory is not None:
+            return self.factory(seed)
+        if self.trace is not None:
+            return self.trace
+        if self.source in ("poisson", "weibull"):
+            kw = dict(slots=self.slots) if self.slots else {}
+            return synthetic_trace(
+                self.jobs, arrival=self.source, mean_gap_us=self.gap_us,
+                seed=seed, **kw)
+        return load_trace(self.source)
+
+    @property
+    def redraws_per_seed(self) -> bool:
+        """Whether each seed gets a fresh job stream (synthetic/factory)."""
+        return self.factory is not None or (
+            self.trace is None and self.source in ("poisson", "weibull"))
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {
+            k: getattr(self, k)
+            for k in ("source", "jobs", "gap_us", "slots", "policies",
+                      "seeds", "tau_us")
+            if getattr(self, k) is not None
+        }
+        if self.factory is not None:
+            # a record of what ran, not a reconstructible spec — loading
+            # it back raises with the path (factory must be a callable)
+            d["factory"] = "<callable>"
+        if self.trace is not None:
+            d["trace"] = self.trace.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "trace",
+                  base_dir: Optional[str] = None) -> "TraceStudy":
+        from repro.sched.trace import Trace
+
+        d = dict(check_mapping(d, path, "trace study"))
+        trace = d.pop("trace", None)
+        if trace is not None and not isinstance(trace, Trace):
+            trace = Trace.from_dict(trace, path=f"{path}.trace")
+        check_keys(d, cls.__dataclass_fields__, path, "trace study")
+        src = d.get("source")
+        if src is not None and src not in ("poisson", "weibull"):
+            d["source"] = _resolve_spec_path(src, base_dir)
+        try:
+            st = cls(trace=trace, **d)
+        except TypeError as e:
+            raise SpecError(f"{path}: {e}") from e
+        reraise_with_path(st.validate, path)
+        return st
+
+
+@dataclass
+class Experiment:
+    """One declarative spec for a whole study — the facade's only input."""
+
+    name: str
+    scenarios: List[Scenario] = field(default_factory=list)
+    trace: Optional[TraceStudy] = None
+    members: int = 1
+    base_seed: int = 0
+    seeds: Optional[List[int]] = None
+    grid: StudyGrid = field(default_factory=StudyGrid)
+    arrival_jitter_us: float = 0.0
+    vmapped: bool = True
+    strict: bool = False
+
+    def validate(self) -> None:
+        if not self.scenarios and self.trace is None:
+            raise ValueError(
+                "experiment needs at least one scenario or a trace study")
+        if self.members < 1:
+            raise ValueError("experiment needs members >= 1")
+        if self.arrival_jitter_us < 0:
+            raise ValueError("arrival_jitter_us must be >= 0")
+        for sc in self.scenarios:
+            sc.validate()
+        self.grid.validate()
+        if self.trace is not None:
+            self.trace.validate()
+
+    # ---- (de)serialization -------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = dict(name=self.name)
+        if self.scenarios:
+            d["scenarios"] = [sc.to_dict() for sc in self.scenarios]
+        if self.trace is not None:
+            d["trace"] = self.trace.to_dict()
+        if self.members != 1:
+            d["members"] = self.members
+        if self.base_seed:
+            d["base_seed"] = self.base_seed
+        if self.seeds is not None:
+            d["seeds"] = list(self.seeds)
+        if not self.grid.is_default:
+            d["grid"] = {k: v for k, v in asdict(self.grid).items()
+                         if v is not None}
+        if self.arrival_jitter_us:
+            d["arrival_jitter_us"] = self.arrival_jitter_us
+        if not self.vmapped:
+            d["vmapped"] = False
+        if self.strict:
+            d["strict"] = True
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str = "experiment",
+                  base_dir: Optional[str] = None) -> "Experiment":
+        d = dict(check_mapping(d, path, "experiment"))
+        scenarios = []
+        for i, s in enumerate(d.pop("scenarios", [])):
+            if isinstance(s, Scenario):
+                scenarios.append(s)
+            elif isinstance(s, str):
+                scenarios.append(
+                    load_scenario(_resolve_spec_path(s, base_dir)))
+            else:
+                scenarios.append(
+                    Scenario.from_dict(s, path=f"{path}.scenarios[{i}]"))
+        trace = d.pop("trace", None)
+        if trace is not None and not isinstance(trace, TraceStudy):
+            trace = TraceStudy.from_dict(trace, path=f"{path}.trace",
+                                         base_dir=base_dir)
+        grid = d.pop("grid", None)
+        if grid is None:
+            grid = StudyGrid()
+        elif not isinstance(grid, StudyGrid):
+            grid = dataclass_from_dict(
+                StudyGrid, grid, f"{path}.grid", "grid")
+        check_keys(d, cls.__dataclass_fields__, path, "experiment")
+        try:
+            exp = cls(scenarios=scenarios, trace=trace, grid=grid, **d)
+        except TypeError as e:
+            raise SpecError(f"{path}: {e}") from e
+        reraise_with_path(exp.validate, path)
+        return exp
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+
+    @classmethod
+    def from_json(cls, path: str) -> "Experiment":
+        import os
+
+        with open(path) as f:
+            return cls.from_dict(json.load(f),
+                                 base_dir=os.path.dirname(path))
+
+
+def load_experiment(spec: str) -> Experiment:
+    """An experiment from a JSON file path."""
+    return Experiment.from_json(spec)
+
+
+# ---------------------------------------------------------------------------
+# typed results
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CellResult:
+    """One study cell: an ensemble member (scenario cells) or one
+    (trace seed × policy) scheduler run (trace cells). ``report`` holds
+    the raw per-member metrics dict; :meth:`records` flattens it to tidy
+    rows for cross-cell analysis."""
+
+    kind: str  # "scenario" | "trace"
+    name: str
+    seed: int
+    placement: str
+    routing: str
+    member: int = 0
+    policy: Optional[str] = None  # trace cells: queue policy
+    report: Dict[str, Any] = field(default_factory=dict)
+
+    def records(self) -> List[Dict[str, Any]]:
+        """Tidy rows: one per app (scenario cells) or one per cell
+        (trace cells), with the study-grid coordinates repeated."""
+        base = dict(kind=self.kind, name=self.name, seed=self.seed,
+                    placement=self.placement, routing=self.routing,
+                    member=self.member, policy=self.policy)
+        if self.kind == "trace":
+            s = self.report
+            return [dict(
+                base, jobs=s["jobs"], completed=s["completed"],
+                makespan_ms=s["makespan_ms"], utilization=s["utilization"],
+                mean_wait_us=s["wait_us"]["mean"],
+                mean_bounded_slowdown=s["bounded_slowdown"]["mean"],
+            )]
+        rows = []
+        for app, lat in self.report.get("latency", {}).items():
+            ct = self.report.get("comm_time", {}).get(app) or {}
+            rows.append(dict(
+                base, app=app,
+                virtual_time_ms=self.report.get("virtual_time_ms"),
+                msgs=lat.get("count"), avg_latency_us=lat.get("avg_us"),
+                max_latency_us=lat.get("max_us"),
+                max_comm_ms=ct.get("max_ms"), avg_comm_ms=ct.get("avg_ms"),
+            ))
+        return rows
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+@dataclass
+class Results:
+    """The facade's uniform return: every cell of the study, typed, plus
+    one summary — serializable to a schema-versioned JSON artifact."""
+
+    experiment: Dict[str, Any]  # the spec, as a plain dict
+    cells: List[CellResult]
+    wall_s: float = 0.0
+    engine_cache: Dict[str, int] = field(default_factory=dict)
+    summary: Dict[str, Any] = field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+
+    @property
+    def scenario_cells(self) -> List[CellResult]:
+        return [c for c in self.cells if c.kind == "scenario"]
+
+    @property
+    def trace_cells(self) -> List[CellResult]:
+        return [c for c in self.cells if c.kind == "trace"]
+
+    def records(self) -> List[Dict[str, Any]]:
+        """Tidy per-cell rows across the whole study."""
+        return [row for c in self.cells for row in c.records()]
+
+    # ---- the JSON artifact -------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(
+            schema_version=self.schema_version,
+            experiment=self.experiment,
+            wall_s=self.wall_s,
+            engine_cache=dict(self.engine_cache),
+            summary=self.summary,
+            cells=[c.to_dict() for c in self.cells],
+        )
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Results":
+        version = d.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"results artifact has schema_version={version!r}; this "
+                f"build reads version {SCHEMA_VERSION}")
+        return cls(
+            experiment=d["experiment"],
+            cells=[CellResult(**c) for c in d["cells"]],
+            wall_s=d.get("wall_s", 0.0),
+            engine_cache=d.get("engine_cache", {}),
+            summary=d.get("summary", {}),
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, default=float)
+
+    @classmethod
+    def load(cls, path: str) -> "Results":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# the executor: Plan nodes -> cells
+# ---------------------------------------------------------------------------
+
+def _exec_batched(node, exp: Experiment) -> List[CellResult]:
+    """One engine from the shared cache, one batched call per node."""
+    host = node.host
+    eng = get_engine(
+        host.topo, routing=host.scenario.routing, ur=host.ur, net=host.net,
+        pool_size=host.pool_size, horizon_us=host.horizon_us,
+        capacity=node.capacity,
+    )
+    inits = [
+        eng.init_state(
+            seed=engine_seed(cell.seed),
+            placements=cell.rs.placements(cell.seed),
+            start_us=cell.start_us,
+            jobs_override=cell.rs.jobs,
+        )
+        for cell in node.cells
+    ]
+    n = len(node.cells)
+    t0 = time.time()
+    if exp.vmapped:
+        D = jax.local_device_count()
+        if D > 1 and n % D == 0:
+            # shard members across XLA devices (CPU host devices or
+            # accelerator cores): each device runs an (n/D)-batch.
+            chunk = n // D
+            sharded = stack_members([
+                stack_members(inits[d * chunk:(d + 1) * chunk])
+                for d in range(D)
+            ])
+            final = jax.block_until_ready(eng.prun(sharded))
+            states = [
+                member_state(member_state(final, i // chunk), i % chunk)
+                for i in range(n)
+            ]
+        else:
+            final = jax.block_until_ready(eng.run(stack_members(inits)))
+            states = [member_state(final, i) for i in range(n)]
+    else:
+        states = [jax.block_until_ready(eng.run(s)) for s in inits]
+    wall = time.time() - t0
+
+    out = []
+    for cell, st in zip(node.cells, states):
+        rep = MGR.member_report(
+            st, cell.rs, wall / n, seed=cell.seed, strict=exp.strict,
+            start_us=cell.start_us, capacity=node.capacity,
+        )
+        out.append((cell.index, CellResult(
+            kind="scenario", name=cell.scenario.name, seed=cell.seed,
+            placement=cell.scenario.placement,
+            routing=cell.scenario.routing, member=cell.member, report=rep,
+        )))
+    return out
+
+
+def _exec_windowed(node, exp: Experiment) -> List[CellResult]:
+    """The slot-recycling scheduler loop per (trace seed × policy) cell;
+    engines come from the shared process-wide cache."""
+    from repro.sched.scheduler import _run_trace_impl, build_sched_engine
+    from repro.union.report import sched_summary
+
+    study = node.study
+    out = []
+    engine = None
+    trace = None
+    last_seed = None
+    for cell in node.cells:
+        if trace is None or (study.redraws_per_seed and cell.seed != last_seed):
+            trace = study.trace_for(cell.seed)
+            engine = build_sched_engine(trace, study.slots)
+            last_seed = cell.seed
+        res = _run_trace_impl(
+            trace, policy=cell.policy, slots=study.slots, seed=cell.seed,
+            engine=engine,
+        )
+        out.append(CellResult(
+            kind="trace", name=trace.name, seed=cell.seed,
+            placement=trace.placement, routing=trace.routing,
+            policy=cell.policy,
+            report=sched_summary(res, tau_us=study.tau_us),
+        ))
+    return out
+
+
+def run(experiment, plan=None) -> Results:
+    """The facade: lower ``experiment`` through the planner and execute.
+
+    Accepts an :class:`Experiment` (or a prebuilt
+    :class:`~repro.union.planner.Plan` via ``plan``) and returns
+    :class:`Results`. Every engine is drawn from the process-wide cache,
+    so repeated studies — and mixed scenario+trace studies sharing an
+    envelope — pay each compile once per process.
+    """
+    from repro.union import planner as PLN
+    from repro.union.report import results_summary
+
+    if plan is None:
+        plan = PLN.plan(experiment)
+    stats0 = engine_cache_stats()
+    t0 = time.time()
+    # scenario cells come back bucket-grouped; restore study order via the
+    # planner's cell ordinals, then append trace cells.
+    indexed: List = []
+    trace_cells: List[CellResult] = []
+    for node in plan.nodes:
+        if node.kind == "batched":
+            indexed.extend(_exec_batched(node, plan.experiment))
+        elif node.kind == "windowed":
+            trace_cells.extend(_exec_windowed(node, plan.experiment))
+        else:
+            raise ValueError(f"unknown plan node kind {node.kind!r}")
+    cells = [c for _, c in sorted(indexed, key=lambda p: p[0])] + trace_cells
+    stats1 = engine_cache_stats()
+    res = Results(
+        experiment=plan.experiment.to_dict(),
+        cells=cells,
+        wall_s=time.time() - t0,
+        engine_cache=dict(
+            hits=stats1["hits"] - stats0["hits"],
+            misses=stats1["misses"] - stats0["misses"],
+        ),
+    )
+    res.summary = results_summary(res)
+    return res
+
+
+def deprecated_entry(old: str, new: str) -> None:
+    """Warn once per call site that an old front door is a shim now."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see docs/experiment.md for the "
+        "migration table)",
+        DeprecationWarning, stacklevel=3,
+    )

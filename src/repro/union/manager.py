@@ -13,29 +13,28 @@ share one app catalog (SPECS names, ``hlo:`` records, inline DSL).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
-
-import jax
 
 from repro.core import workloads as W
 from repro.core.translator import translate_source
 from repro.netsim import metrics as MET
 from repro.netsim.config import NetConfig
 from repro.netsim.engine import (
+    Engine,
     EngineCapacity,
     JobSpec,
     URSpec,
-    build_engine,
+    get_engine,
     job_vm,
     member_state,
 )
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import Dragonfly, get_topology
 from repro.union.scenario import Scenario, ScenarioJob, UR_RANKS
+from repro.union.seeds import engine_seed
 
 DEFAULT_POOL = {"small": 8192, "paper": 65536}
 
@@ -146,17 +145,52 @@ def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
 
 
 def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None):
-    """Compile the engine for a resolved scenario: an
+    """The engine for a resolved scenario: an
     :class:`~repro.netsim.engine.Engine` (unpacks as ``init, run, tick``;
     carries ``run_window`` for windowed/scheduled runs).
+
+    Drawn from the **process-wide engine cache** (compiled once per
+    capacity envelope + system config), with this scenario's job set and
+    UR placement bound as the init-time defaults — job tables are runtime
+    data, so scenarios sharing an envelope share one set of jits.
 
     ``capacity`` widens the envelope beyond this scenario's own needs so
     the same compiled engine can serve other (smaller) scenarios — the
     ragged-campaign path in :mod:`repro.union.ensemble`.
     """
-    return build_engine(
-        rs.topo, rs.jobs, routing=rs.scenario.routing, ur=rs.ur, net=rs.net,
-        pool_size=rs.pool_size, horizon_us=rs.horizon_us, capacity=capacity,
+    cap = rs.capacity if capacity is None else capacity.union(rs.capacity)
+    eng = get_engine(
+        rs.topo, routing=rs.scenario.routing, ur=rs.ur, net=rs.net,
+        pool_size=rs.pool_size, horizon_us=rs.horizon_us, capacity=cap,
+    )
+    return bind_jobs(eng, rs)
+
+
+def bind_jobs(eng: Engine, rs: ResolvedScenario) -> Engine:
+    """Wrap a cached (job-free) engine so ``init_state`` defaults to this
+    scenario's jobs and UR placement — the historical ``build_engine``
+    call shape, without a per-scenario compile."""
+    default_placements = [np.asarray(j.rank2node) for j in rs.jobs]
+    if rs.ur is not None:
+        default_placements.append(np.asarray(rs.ur.rank2node))
+
+    def init_state(seed: int = 1, placements=None, start_us=None,
+                   jobs_override=None, rank_slowdown_override=None):
+        if jobs_override is None:
+            jobs_override = rs.jobs
+            if placements is None:
+                placements = default_placements
+        return eng.init_state(
+            seed=seed, placements=placements, start_us=start_us,
+            jobs_override=jobs_override,
+            rank_slowdown_override=rank_slowdown_override,
+        )
+
+    # share the host's pmapped run (built lazily on the cached engine, so
+    # every wrapper at this envelope reuses one pmap cache entry)
+    return Engine(
+        init_state=init_state, run=eng.run, tick=eng.tick,
+        run_window=eng.run_window, capacity=eng.capacity, _prun=eng.prun,
     )
 
 
@@ -190,18 +224,27 @@ def member_report(state, rs: ResolvedScenario, wall_s: float = 0.0,
 def run_scenario(
     scenario: Scenario, seed: int = 0, strict: bool = False
 ) -> Dict:
-    """Resolve, compile, and run a single scenario member; return the report.
+    """Deprecated front door — run a single scenario member.
 
-    ``seed`` drives both the placement draw and the engine RNG, so a
-    vmapped campaign member with the same seed reproduces this run exactly.
+    Shim over the :mod:`repro.union.experiment` facade
+    (``union.run(Experiment(scenarios=[sc], members=1, base_seed=seed))``),
+    bit-identical to the historical direct run: ``seed`` drives both the
+    placement draw and the engine RNG, so a batched campaign member with
+    the same seed reproduces this run exactly.
     """
-    rs = resolve(scenario, seed=seed)
-    init, run, _ = build(rs)
-    t0 = time.time()
-    state = jax.block_until_ready(run(init(seed=_engine_seed(seed))))
-    return member_report(state, rs, time.time() - t0, seed=seed, strict=strict)
+    from repro.union import experiment as EXP
+
+    EXP.deprecated_entry(
+        "repro.union.run_scenario",
+        "repro.union.run(Experiment(scenarios=[...], members=1))",
+    )
+    res = EXP.run(EXP.Experiment(
+        name=scenario.name, scenarios=[scenario], members=1,
+        base_seed=seed, strict=strict, vmapped=False,
+    ))
+    return res.cells[0].report
 
 
-def _engine_seed(seed: int) -> int:
-    """Placement seed -> engine RNG stream (keep 0 and 1 distinct, nonzero)."""
-    return (seed * 2654435761 + 1) % (2**32)
+# back-compat alias: the derivation now lives in repro.union.seeds,
+# shared with every other execution path (pinned in tests).
+_engine_seed = engine_seed

@@ -1,0 +1,199 @@
+"""The planner: lower a declarative Experiment into an executable Plan.
+
+Planning is pure resolution — no engine is compiled here. The planner
+
+1. expands the study grid (scenarios × grid placements × grid routing,
+   each with ``members`` seeded ensemble members; trace studies into
+   (trace seed × queue policy) cells);
+2. resolves every scenario variant to its engine inputs and **buckets**
+   member cells by compatible engine configuration (same topology / net /
+   routing / UR shape / horizon), unioning capacity envelopes per bucket
+   so one compiled engine serves the whole bucket in a single batched
+   call — members whose job sets differ are padded with inert no-op jobs;
+3. decides the execution style per node: ``batched`` (one stacked engine
+   call, device-sharded when the member count divides the device count)
+   or ``windowed`` (the slot-recycling online scheduler loop).
+
+The executor (:func:`repro.union.experiment.run`) then walks the plan,
+drawing every engine from the process-wide cache in
+:mod:`repro.netsim.engine` — a new execution style is a new node kind
+here, not a new public entry point.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.netsim.engine import EngineCapacity
+from repro.union import manager as MGR
+from repro.union.scenario import Scenario
+
+
+def bucket_key(rs: MGR.ResolvedScenario) -> Tuple:
+    """Scenario members sharing this key can share one compiled engine
+    (their capacity envelopes are unioned; job tables are runtime data).
+
+    Keys on the whole frozen NetConfig — the same object
+    ``engine_cache_key`` keys on — so any future scenario-derived net
+    field automatically splits buckets instead of silently sharing one."""
+    sc = rs.scenario
+    ur = rs.ur
+    return (
+        sc.topo, sc.scale, sc.routing.upper(), rs.net,
+        float(rs.horizon_us),
+        None if ur is None else (
+            ur.rank2node.shape[0], float(ur.size_bytes),
+            float(ur.interval_us), float(ur.start_us),
+        ),
+    )
+
+
+@dataclass
+class ScenarioCell:
+    """One ensemble member of one grid variant: a (scenario, seed) pair
+    plus its actual arrival schedule (scenario ``start_us`` + jitter)."""
+
+    scenario: Scenario
+    seed: int
+    member: int  # member index within its variant's ensemble
+    index: int = 0  # study-wide cell ordinal (Results preserve this order)
+    rs: MGR.ResolvedScenario = field(repr=False, default=None)
+    start_us: np.ndarray = field(repr=False, default=None)
+
+
+@dataclass
+class TraceCell:
+    """One online-scheduler run: a trace seed under one queue policy."""
+
+    seed: int
+    policy: str
+
+
+@dataclass
+class BatchedNode:
+    """One compiled engine, one batched run over ``cells`` members."""
+
+    cells: List[ScenarioCell]
+    capacity: EngineCapacity
+    host: MGR.ResolvedScenario = field(repr=False, default=None)
+    kind: str = "batched"
+
+
+@dataclass
+class WindowedNode:
+    """The slot-recycling scheduler loop over (trace seed × policy) cells.
+
+    ``study`` is the experiment's TraceStudy; traces are materialized at
+    execution time (synthetic studies redraw arrivals per seed), and every
+    cell's engine comes from the shared process-wide cache.
+    """
+
+    study: Any  # repro.union.experiment.TraceStudy
+    cells: List[TraceCell]
+    kind: str = "windowed"
+
+
+@dataclass
+class Plan:
+    """The lowered experiment: an ordered list of execution nodes."""
+
+    experiment: Any  # repro.union.experiment.Experiment
+    nodes: List[Any]
+
+    @property
+    def batched_nodes(self) -> List[BatchedNode]:
+        return [n for n in self.nodes if n.kind == "batched"]
+
+    @property
+    def windowed_nodes(self) -> List[WindowedNode]:
+        return [n for n in self.nodes if n.kind == "windowed"]
+
+    def describe(self) -> str:
+        """Human-readable lowering: nodes, envelopes, engine reuse."""
+        lines = [f"plan for experiment {self.experiment.name!r}:"]
+        for i, node in enumerate(self.nodes):
+            if node.kind == "batched":
+                cap = node.capacity
+                names = sorted({c.scenario.name for c in node.cells})
+                lines.append(
+                    f"  node {i}: batched × {len(node.cells)} members "
+                    f"({'+'.join(names)}) @ envelope (Jmax={cap.Jmax}, "
+                    f"Pmax={cap.Pmax}, OPmax={cap.OPmax})"
+                )
+            else:
+                lines.append(
+                    f"  node {i}: windowed scheduler × {len(node.cells)} "
+                    f"cells (seeds × policies "
+                    f"{sorted({c.policy for c in node.cells})})"
+                )
+        return "\n".join(lines)
+
+
+def _member_seeds(exp, n_variants: int) -> List[List[int]]:
+    """Per-variant seed lists from the experiment's seed declaration."""
+    m = exp.members
+    if exp.seeds is None:
+        per = [exp.base_seed + i for i in range(m)]
+        return [list(per) for _ in range(n_variants)]
+    seeds = list(exp.seeds)
+    if len(seeds) == m:
+        return [list(seeds) for _ in range(n_variants)]
+    if len(seeds) == n_variants * m:
+        return [seeds[v * m:(v + 1) * m] for v in range(n_variants)]
+    raise ValueError(
+        f"experiment.seeds has {len(seeds)} entries; expected members "
+        f"({m}) or variants × members ({n_variants * m})"
+    )
+
+
+def plan(exp) -> Plan:
+    """Lower an Experiment into a Plan (resolution + bucketing only)."""
+    exp.validate()
+    variants: List[Scenario] = []
+    for sc in exp.scenarios:
+        for pl in (exp.grid.placements or [sc.placement]):
+            for rt in (exp.grid.routing or [sc.routing]):
+                variants.append(
+                    sc if (pl == sc.placement and rt == sc.routing)
+                    else replace(sc, placement=pl, routing=rt)
+                )
+
+    seeds = _member_seeds(exp, len(variants))
+    cells: List[ScenarioCell] = []
+    for v, sc in enumerate(variants):
+        rs = MGR.resolve(sc, seed=seeds[v][0] if seeds[v] else 0)
+        base_start = np.asarray(rs.start_us, np.float32)
+        for m, seed in enumerate(seeds[v]):
+            start = base_start
+            if exp.arrival_jitter_us > 0:
+                jit_rng = np.random.default_rng(seed)
+                start = base_start + jit_rng.uniform(
+                    0.0, exp.arrival_jitter_us, size=base_start.shape
+                ).astype(np.float32)
+            cells.append(ScenarioCell(
+                scenario=sc, seed=seed, member=m, index=len(cells),
+                rs=rs, start_us=start))
+
+    buckets: Dict[Tuple, List[ScenarioCell]] = {}
+    for cell in cells:
+        buckets.setdefault(bucket_key(cell.rs), []).append(cell)
+
+    nodes: List[Any] = []
+    for group in buckets.values():
+        cap = group[0].rs.capacity
+        for cell in group[1:]:
+            cap = cap.union(cell.rs.capacity)
+        nodes.append(BatchedNode(cells=group, capacity=cap,
+                                 host=group[0].rs))
+
+    if exp.trace is not None:
+        study = exp.trace
+        tseeds = study.seed_list(exp.base_seed)
+        nodes.append(WindowedNode(
+            study=study,
+            cells=[TraceCell(seed=s, policy=p)
+                   for s in tseeds for p in study.policies],
+        ))
+    return Plan(experiment=exp, nodes=nodes)

@@ -28,12 +28,25 @@ def _spread(xs: List[float]) -> Dict[str, float]:
 
 
 def campaign_summary(campaign) -> Dict[str, Any]:
-    """Aggregate per-member reports of one CampaignResult.
+    """Aggregate per-member reports of one CampaignResult."""
+    return reports_summary(
+        campaign.reports, members=campaign.members, vmapped=campaign.vmapped,
+        wall_s=campaign.wall_s, members_per_sec=campaign.members_per_sec,
+    )
 
-    Ragged campaigns have members with different app sets; each app is
+
+def reports_summary(reports: List[Dict], members: Optional[int] = None,
+                    vmapped: Optional[bool] = None, wall_s: float = 0.0,
+                    members_per_sec: Optional[float] = None) -> Dict[str, Any]:
+    """Aggregate a list of per-member reports (one ensemble/study group).
+
+    Ragged groups have members with different app sets; each app is
     aggregated over the members that actually ran it.
     """
-    reports = campaign.reports
+    if members is None:
+        members = len(reports)
+    if members_per_sec is None:
+        members_per_sec = members / max(wall_s, 1e-9)
     apps: List[str] = []
     for r in reports:
         for app in r["latency"]:
@@ -55,10 +68,10 @@ def campaign_summary(campaign) -> Dict[str, Any]:
             avg_comm_ms=_spread([c["avg_ms"] for c in ct]),
         )
     return dict(
-        members=campaign.members,
-        vmapped=campaign.vmapped,
-        wall_s=campaign.wall_s,
-        members_per_sec=campaign.members_per_sec,
+        members=members,
+        vmapped=vmapped,
+        wall_s=wall_s,
+        members_per_sec=members_per_sec,
         virtual_time_ms=_spread([r["virtual_time_ms"] for r in reports]),
         dropped_total=int(sum(r["dropped"] for r in reports)),
         all_done=all(all(r["config"]["all_done"]) for r in reports),
@@ -180,6 +193,97 @@ def format_sched_summary(s: Dict[str, Any]) -> str:
         f"{s['bounded_slowdown']['mean']:.2f} max "
         f"{s['bounded_slowdown']['max']:.2f}",
     ]
+    return "\n".join(lines)
+
+
+def sched_campaign_summary(
+    cells_by_policy: Dict[str, List[Dict[str, Any]]]
+) -> Dict[str, Any]:
+    """Aggregate per-cell :func:`sched_summary` rows per queue policy —
+    the trace half of the Results summary pipeline (and the historical
+    ``run_sched_campaign`` aggregate)."""
+    return {
+        pol: dict(
+            runs=len(rows),
+            completed=int(sum(r["completed"] for r in rows)),
+            jobs=int(sum(r["jobs"] for r in rows)),
+            mean_wait_us=_spread([r["wait_us"]["mean"] for r in rows]),
+            mean_bounded_slowdown=_spread(
+                [r["bounded_slowdown"]["mean"] for r in rows]),
+            utilization=_spread([r["utilization"] for r in rows]),
+            makespan_ms=_spread([r["makespan_ms"] for r in rows]),
+        )
+        for pol, rows in cells_by_policy.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# the one summary/format pipeline over Experiment Results
+# ---------------------------------------------------------------------------
+
+def _scenario_groups(cells) -> Dict[str, List]:
+    """Group scenario cells by their study-grid coordinates."""
+    groups: Dict[str, List] = {}
+    for c in cells:
+        groups.setdefault(f"{c.name}/{c.placement}/{c.routing}", []).append(c)
+    return groups
+
+
+def results_summary(results) -> Dict[str, Any]:
+    """One summary over a whole :class:`~repro.union.experiment.Results`:
+    every scenario study group aggregated like a campaign, every trace
+    study aggregated per queue policy."""
+    vmapped = results.experiment.get("vmapped", True)
+    scenario_studies = {
+        key: reports_summary(
+            [c.report for c in group], vmapped=vmapped,
+            wall_s=sum(c.report.get("sim_wall_s", 0.0) for c in group))
+        for key, group in _scenario_groups(results.scenario_cells).items()
+    }
+    trace_cells = results.trace_cells
+    policies: List[str] = []
+    for c in trace_cells:
+        if c.policy not in policies:
+            policies.append(c.policy)
+    trace_studies = sched_campaign_summary({
+        pol: [c.report for c in trace_cells if c.policy == pol]
+        for pol in policies
+    }) if trace_cells else {}
+    return dict(
+        cells=len(results.cells),
+        wall_s=results.wall_s,
+        engine_cache=dict(results.engine_cache),
+        scenario_studies=scenario_studies,
+        trace_studies=trace_studies,
+    )
+
+
+def format_results(results) -> str:
+    """Render a Results container — the single formatting front door that
+    replaces the per-entry-point ``format_summary``/``format_sched_summary``
+    split (both remain as the per-group primitives it composes)."""
+    s = results.summary or results_summary(results)
+    cache = s.get("engine_cache", {})
+    lines = [
+        f"experiment: {results.experiment.get('name', '?')} — "
+        f"{s['cells']} cells in {s['wall_s']:.1f}s (engine cache: "
+        f"{cache.get('hits', 0)} hits, {cache.get('misses', 0)} compiles)"
+    ]
+    for key, summary in s.get("scenario_studies", {}).items():
+        lines.append(f"--- scenario study {key} ---")
+        lines.append(format_summary(summary))
+    for c in results.trace_cells:
+        lines.append(format_sched_summary(c.report))
+    trace_agg = s.get("trace_studies", {})
+    if trace_agg:
+        lines.append("--- trace aggregate (per policy) ---")
+        for pol, a in trace_agg.items():
+            lines.append(
+                f"  {pol:>5}: completed {a['completed']}/{a['jobs']} | "
+                f"wait mean {a['mean_wait_us']['mean']:.0f}us | "
+                f"BSLD mean {a['mean_bounded_slowdown']['mean']:.2f} | "
+                f"util {a['utilization']['mean']:.1%} | makespan "
+                f"{a['makespan_ms']['mean']:.1f}ms")
     return "\n".join(lines)
 
 

@@ -142,21 +142,29 @@ class Scenario:
         return d
 
     @classmethod
-    def from_dict(cls, d: Dict[str, Any]) -> "Scenario":
-        d = dict(d)
+    def from_dict(cls, d: Dict[str, Any], path: str = "scenario") -> "Scenario":
+        from repro.union.validate import (
+            check_keys, check_mapping, dataclass_from_dict, reraise_with_path,
+        )
+
+        d = dict(check_mapping(d, path, "scenario"))
         jobs = [
-            j if isinstance(j, ScenarioJob) else ScenarioJob(**j)
-            for j in d.pop("jobs", [])
+            j if isinstance(j, ScenarioJob)
+            else dataclass_from_dict(
+                ScenarioJob, j, f"{path}.jobs[{i}]", "scenario job")
+            for i, j in enumerate(d.pop("jobs", []))
         ]
         ur = d.pop("ur", None)
         if ur is not None and not isinstance(ur, URDecl):
-            ur = URDecl(**ur)
-        known = {f for f in cls.__dataclass_fields__}
-        unknown = set(d) - known
-        if unknown:
-            raise ValueError(f"unknown scenario keys: {sorted(unknown)}")
-        sc = cls(jobs=jobs, ur=ur, **d)
-        sc.validate()
+            ur = dataclass_from_dict(URDecl, ur, f"{path}.ur", "ur")
+        check_keys(d, cls.__dataclass_fields__, path, "scenario")
+        try:
+            sc = cls(jobs=jobs, ur=ur, **d)
+        except TypeError as e:
+            from repro.union.validate import SpecError
+
+            raise SpecError(f"{path}: {e}") from e
+        reraise_with_path(sc.validate, path)
         return sc
 
     def to_json(self, path: str) -> None:
