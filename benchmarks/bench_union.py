@@ -18,9 +18,15 @@ backfill, recording jobs/sec (scheduling + windowed-engine throughput).
 the direct engine-level path at the same envelope (spec validation +
 planning + summary must cost <= 2% warm).
 
+``--fabric`` sweeps the same tiny mix over every registered fabric
+(dragonfly 1d/2d, fat-tree, torus), recording cold (compile) and warm
+tick wall per fabric — the cross-fabric cost profile of the pluggable
+topology layer.
+
   PYTHONPATH=src python -m benchmarks.bench_union [--members 8] [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --trace [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --experiment [--quick]
+  PYTHONPATH=src python -m benchmarks.bench_union --fabric [--quick]
 """
 from __future__ import annotations
 
@@ -248,6 +254,51 @@ def bench_experiment(quick: bool):
     _append_entry(entry)
 
 
+def bench_fabric(quick: bool):
+    """Warm tick wall per fabric: the same scenario shape through every
+    registered fabric, engines from the shared cache — cold wall is the
+    per-fabric compile price, warm wall the steady-state simulation
+    cost of each topology's routing function."""
+    from repro import union
+    from repro.netsim.fabric import fabric_names
+
+    members = 2 if quick else 4
+    sc = bench_scenario(quick)
+    print(f"scenario={sc.name} members={members} (fabric sweep profile)")
+
+    results = {}
+    for name in fabric_names():
+        def campaign(base_seed):
+            t0 = time.time()
+            res = union.run(union.Experiment(
+                name=f"{sc.name}-{name}", scenarios=[sc], members=members,
+                base_seed=base_seed,
+                grid=union.StudyGrid(fabrics=[name])))
+            wall = time.time() - t0
+            summary = next(iter(res.summary["scenario_studies"].values()))
+            return wall, summary
+
+        cold_wall, _ = campaign(0)
+        warm_wall, summary = campaign(100)
+        results[name] = dict(
+            cold_wall_s=cold_wall, warm_wall_s=warm_wall,
+            warm_members_per_sec=members / max(warm_wall, 1e-9),
+            all_done=summary["all_done"], dropped=summary["dropped_total"],
+        )
+        print(f"  {name:>9}: cold {cold_wall:6.1f}s | warm {warm_wall:6.2f}s "
+              f"({members / max(warm_wall, 1e-9):.2f} members/s) "
+              f"all_done={summary['all_done']}")
+
+    entry = dict(
+        bench="union_fabric_profile",
+        members=members,
+        provenance=provenance(),
+        scenario=sc.to_dict(),
+        **{f"{n}_{k}": v for n, r in results.items() for k, v in r.items()},
+    )
+    _append_entry(entry)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--members", type=int, default=None,
@@ -260,12 +311,18 @@ def main():
     ap.add_argument("--experiment", action="store_true",
                     help="facade-overhead profile: warm union.run vs the"
                     " direct engine-level path (budget: <= 2%%)")
+    ap.add_argument("--fabric", action="store_true",
+                    help="fabric sweep profile: the same mix on every"
+                    " registered fabric, cold + warm wall per fabric")
     args = ap.parse_args()
     if args.trace:
         bench_trace(args.quick)
         return
     if args.experiment:
         bench_experiment(args.quick)
+        return
+    if args.fabric:
+        bench_fabric(args.quick)
         return
     members = args.members if args.members is not None else (
         2 if args.quick else 8)

@@ -12,6 +12,8 @@ class NetConfig:
     global_bw: float = 5.25 * 2**30
     hop_latency_us: float = 0.5  # per traversed link (router+wire)
     tick_us: float = 1.0  # Δt of the tensor-timestepped engine
+    # historical route-row width; superseded by the fabric's own
+    # ``route_width`` (kept for spec/cache-key stability)
     max_route_links: int = 10
     # message pool / emission limits
     pool_size: int = 65536

@@ -58,8 +58,7 @@ import jax.numpy as jnp
 from repro.core.skeleton import OP, SkeletonProgram
 from repro.kernels import ops as KOPS
 from repro.netsim.config import NetConfig
-from repro.netsim.routing import compute_routes, topo_arrays
-from repro.netsim.topology import Dragonfly
+from repro.netsim.fabric import Fabric, fabric_key, routing_tables
 
 MAXE = 8  # max emissions per rank per (op, round)
 
@@ -108,7 +107,7 @@ class PoolState(NamedTuple):
     bytes_rem: jnp.ndarray  # (M,) f32
     inject_t: jnp.ndarray
     min_arrive: jnp.ndarray
-    routes: jnp.ndarray  # (M, 10) int32
+    routes: jnp.ndarray  # (M, route_width) int32 (fabric-declared width)
     free_stack: jnp.ndarray  # (M,) int32
     free_top: jnp.ndarray  # scalar int32 (number of free slots)
     dropped: jnp.ndarray  # scalar int32 (allocation failures; must stay 0)
@@ -332,7 +331,7 @@ def _member_batched(fn):
 
 
 def build_engine(
-    topo: Dragonfly,
+    topo: Fabric,
     jobs: Sequence[JobSpec],
     *,
     routing: str = "ADP",
@@ -370,8 +369,12 @@ def build_engine(
     (default: only on TPU backends; the pure-jnp fused path elsewhere).
     """
     net = net or NetConfig()
-    T = topo_arrays(topo)
+    # the fabric's one dispatch point: its gather tables + vectorized
+    # router (dragonfly MIN/UGAL, fat-tree D-mod-k/spray, torus DOR/bypass)
+    T, route_fn = routing_tables(topo)
     L = topo.n_links
+    RW = topo.route_width  # pool route-row width (fabric-declared)
+    n_nodes = topo.n_nodes
     M = pool_size or net.pool_size
     cap = capacity or EngineCapacity.of_jobs(jobs)
     J, Pmax, OPmax = cap.Jmax, cap.Pmax, cap.OPmax
@@ -392,13 +395,15 @@ def build_engine(
     ur_r2n = jnp.asarray(ur.rank2node, jnp.int32) if ur else None
     Pu = int(ur.rank2node.shape[0]) if ur else 0
     link_dstr = jnp.concatenate(
-        [T.link_dst_router, jnp.zeros((1,), jnp.int32)]
+        [jnp.asarray(topo.link_dst_router, jnp.int32),
+         jnp.zeros((1,), jnp.int32)]
     )  # dummy row
     link_ok = jnp.asarray(
         ~link_down if link_down is not None else np.ones(L, bool)
     )
     bw_eff = jnp.concatenate(
-        [jnp.where(link_ok, T.link_bw, 0.0), jnp.ones((1,), jnp.float32)]
+        [jnp.where(link_ok, jnp.asarray(topo.link_bw, jnp.float32), 0.0),
+         jnp.ones((1,), jnp.float32)]
     )
 
     # static candidate-index patterns for the stacked injection pass:
@@ -571,7 +576,7 @@ def build_engine(
 
         demand_f = demand.reshape(-1)  # (B * (L+1),)
         offs = jnp.repeat(jnp.arange(B, dtype=jnp.int32) * (L + 1), n)
-        routes, hops = compute_routes(
+        routes, hops = route_fn(
             T, srcs_node.reshape(-1), dsts_node.reshape(-1),
             rand.reshape(-1).astype(jnp.int32) & 0x7FFFFFFF,
             demand_f, adaptive, demand_offsets=offs,
@@ -687,7 +692,7 @@ def build_engine(
                 + jnp.arange(Pu, dtype=jnp.uint32)[None, :]
                 + rng_jobs[:, None]
             )
-            dstn = (rnd % jnp.uint32(T.n_nodes)).astype(jnp.int32)
+            dstn = (rnd % jnp.uint32(n_nodes)).astype(jnp.int32)
             ur_rand = _hash(
                 rng_jobs[:, None] + jnp.arange(Pu, dtype=jnp.uint32)[None, :]
             )
@@ -975,7 +980,7 @@ def build_engine(
             bytes_rem=jnp.zeros((M,), jnp.float32),
             inject_t=jnp.zeros((M,), jnp.float32),
             min_arrive=jnp.zeros((M,), jnp.float32),
-            routes=jnp.full((M, net.max_route_links), -1, jnp.int32),
+            routes=jnp.full((M, RW), -1, jnp.int32),
             free_stack=jnp.arange(M, dtype=jnp.int32),
             free_top=jnp.int32(M),
             dropped=jnp.int32(0),
@@ -1072,16 +1077,8 @@ _ENGINE_CACHE: Dict[Tuple, Engine] = {}
 _ENGINE_CACHE_STATS = {"hits": 0, "misses": 0}
 
 
-def _topology_key(topo: Dragonfly) -> Tuple:
-    """A Dragonfly's defining parameters (its arrays are derived)."""
-    return (
-        topo.variant, topo.n_groups, topo.routers_per_group,
-        topo.nodes_per_router, topo.global_per_router, topo.rows, topo.cols,
-    )
-
-
 def engine_cache_key(
-    topo: Dragonfly,
+    topo: Fabric,
     *,
     routing: str = "ADP",
     ur: Optional[URSpec] = None,
@@ -1094,8 +1091,11 @@ def engine_cache_key(
 ) -> Tuple:
     """Everything baked into a compiled engine besides the job tables.
 
-    The UR source contributes only its *shape* (rank count and traffic
-    parameters) — its placement is overridable per member at init time.
+    The fabric contributes :func:`repro.netsim.fabric.fabric_key` — its
+    family name plus defining parameters — so two fabrics with identical
+    capacity envelopes never share a compiled engine. The UR source
+    contributes only its *shape* (rank count and traffic parameters) —
+    its placement is overridable per member at init time.
     """
     net = net or NetConfig()
     ur_key = None if ur is None else (
@@ -1107,14 +1107,14 @@ def engine_cache_key(
         else tuple(np.flatnonzero(np.asarray(link_down)).tolist())
     )
     return (
-        _topology_key(topo), routing.upper() in ("ADP", "ADAPTIVE"), ur_key,
+        fabric_key(topo), routing.upper() in ("ADP", "ADAPTIVE"), ur_key,
         net, int(pool_size or net.pool_size), float(horizon_us), capacity,
         down_key, use_pallas,
     )
 
 
 def get_engine(
-    topo: Dragonfly,
+    topo: Fabric,
     *,
     routing: str = "ADP",
     ur: Optional[URSpec] = None,

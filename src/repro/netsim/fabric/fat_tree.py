@@ -1,0 +1,281 @@
+"""k-ary fat-tree / Clos fabric (Al-Fares et al.) behind the Fabric protocol.
+
+Structure of a k-ary fat-tree (``m = k/2``):
+
+* ``k`` pods, each with ``m`` edge (ToR) switches and ``m`` aggregation
+  switches; ``m*m`` core switches; every edge hosts ``hosts_per_edge``
+  nodes (default ``m`` — the canonical ``k^3/4`` host count).
+* Edge ``i`` of a pod connects up to all ``m`` aggs of its pod; agg ``j``
+  connects up to cores ``j*m .. j*m+m-1``; core ``j*m+i`` connects down
+  to agg ``j`` of *every* pod. Up links (edge->agg, agg->core) and down
+  links (core->agg, agg->edge) are separate unidirectional link rows, so
+  per-level utilization splits cleanly.
+
+Routing:
+
+* **Deterministic up/down (D-mod-k)**: the destination host id picks the
+  agg (``dst % m``) and the core (``(dst // m) % m``) — every
+  source-destination pair uses one fixed path, like static ECMP hashing.
+* **Adaptive upward spraying**: the up links are chosen by live link
+  demand (least outstanding bytes, random-rotation tiebreak) — first the
+  edge->agg hop, then agg->core; the down path is then forced by the
+  destination. Downward routing in a fat-tree is always deterministic.
+
+Router ids: edges ``[0, k*m)`` (pod-major), aggs ``[k*m, 2*k*m)``,
+cores ``[2*k*m, 2*k*m + m*m)``. Node ``n`` lives on edge ``n //
+hosts_per_edge`` — contiguous per edge and per pod, so RR places whole
+edge switches and RG places whole pods (pod-aware placement).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.netsim.config import NetConfig
+from repro.netsim.fabric.base import terminal_link_rows
+
+KIND_UP, KIND_DOWN = 2, 3
+
+
+@dataclass
+class FatTree:
+    k: int  # pods (even); m = k//2 edges/aggs per pod, m*m cores
+    hosts_per_edge: int
+
+    n_routers: int = 0
+    n_nodes: int = 0
+    n_links: int = 0
+    link_kind: np.ndarray = field(default=None, repr=False)
+    link_bw: np.ndarray = field(default=None, repr=False)
+    link_dst_router: np.ndarray = field(default=None, repr=False)
+    link_src_router: np.ndarray = field(default=None, repr=False)
+    # gather tables
+    up1_link: np.ndarray = field(default=None, repr=False)  # (E, m)
+    up2_link: np.ndarray = field(default=None, repr=False)  # (A, m)
+    down1_link: np.ndarray = field(default=None, repr=False)  # (C, k)
+    down2_link: np.ndarray = field(default=None, repr=False)  # (A, m)
+
+    @property
+    def m(self) -> int:
+        return self.k // 2
+
+    @property
+    def n_edges(self) -> int:
+        return self.k * self.m
+
+    # --- Fabric protocol ---
+    @property
+    def family(self) -> str:
+        return "fat_tree"
+
+    @property
+    def route_width(self) -> int:
+        # [term_in, edge->agg, agg->core, core->agg, agg->edge, term_out]
+        return 6
+
+    @property
+    def place_routers(self) -> int:
+        return self.n_edges  # only edge switches own hosts
+
+    @property
+    def nodes_per_router(self) -> int:
+        return self.hosts_per_edge
+
+    @property
+    def place_groups(self) -> int:
+        return self.k  # pods
+
+    @property
+    def nodes_per_group(self) -> int:
+        return self.m * self.hosts_per_edge
+
+    def node_router(self, node):
+        return node // self.hosts_per_edge
+
+    def cache_key(self) -> Tuple:
+        return (self.family, self.k, self.hosts_per_edge)
+
+    def link_levels(self) -> Dict[str, np.ndarray]:
+        return {
+            "up": self.link_kind == KIND_UP,
+            "down": self.link_kind == KIND_DOWN,
+        }
+
+    def routing_tables(self):
+        return fat_tree_arrays(self), fat_tree_routes
+
+
+def build_fat_tree(
+    k: int,
+    hosts_per_edge: Optional[int] = None,
+    net: Optional[NetConfig] = None,
+) -> FatTree:
+    if k < 2 or k % 2:
+        raise ValueError(f"fat-tree k must be even and >= 2, got {k}")
+    net = net or NetConfig()
+    m = k // 2
+    h = hosts_per_edge or m
+    topo = FatTree(k=k, hosts_per_edge=h)
+    E, A, C = k * m, k * m, m * m
+    topo.n_routers = E + A + C
+    N = E * h
+    topo.n_nodes = N
+    agg0, core0 = E, E + A  # router-id bases
+
+    kinds, bws, dsts, srcs = terminal_link_rows(N, h, net.terminal_bw)
+
+    def emit(kind, bw, src_r, dst_r):
+        lid = len(kinds)
+        kinds.append(kind); bws.append(bw)
+        srcs.append(src_r); dsts.append(dst_r)
+        return lid
+
+    # up: edge -> agg (local bw), agg -> core (global bw)
+    up1 = np.zeros((E, m), np.int64)
+    for e in range(E):
+        pod = e // m
+        for j in range(m):
+            up1[e, j] = emit(KIND_UP, net.local_bw, e, agg0 + pod * m + j)
+    up2 = np.zeros((A, m), np.int64)
+    for a in range(A):
+        j = a % m
+        for i in range(m):
+            up2[a, i] = emit(
+                KIND_UP, net.global_bw, agg0 + a, core0 + j * m + i)
+
+    # down: core -> agg (global bw), agg -> edge (local bw)
+    down1 = np.zeros((C, k), np.int64)
+    for c in range(C):
+        j = c // m
+        for pod in range(k):
+            down1[c, pod] = emit(
+                KIND_DOWN, net.global_bw, core0 + c, agg0 + pod * m + j)
+    down2 = np.zeros((A, m), np.int64)
+    for a in range(A):
+        pod = a // m
+        for i in range(m):
+            down2[a, i] = emit(KIND_DOWN, net.local_bw, agg0 + a, pod * m + i)
+
+    topo.up1_link, topo.up2_link = up1, up2
+    topo.down1_link, topo.down2_link = down1, down2
+    topo.link_kind = np.asarray(kinds, np.int32)
+    topo.link_bw = np.asarray(bws, np.float64)
+    topo.link_dst_router = np.asarray(dsts, np.int64)
+    topo.link_src_router = np.asarray(srcs, np.int64)
+    topo.n_links = len(kinds)
+    return topo
+
+
+# ---- the vectorized router ----
+
+class FatTreeArrays(NamedTuple):
+    m: int
+    h: int
+    pods: int
+    n_nodes: int
+    n_links: int
+    up1: "object"  # (E, m) int32
+    up2: "object"  # (A, m) int32
+    down1: "object"  # (C, pods) int32
+    down2: "object"  # (A, m) int32
+    link_bw: "object"  # (L,) f32
+
+
+def fat_tree_arrays(t: FatTree) -> FatTreeArrays:
+    import jax.numpy as jnp
+
+    return FatTreeArrays(
+        m=t.m, h=t.hosts_per_edge, pods=t.k,
+        n_nodes=t.n_nodes, n_links=t.n_links,
+        up1=jnp.asarray(t.up1_link, jnp.int32),
+        up2=jnp.asarray(t.up2_link, jnp.int32),
+        down1=jnp.asarray(t.down1_link, jnp.int32),
+        down2=jnp.asarray(t.down2_link, jnp.int32),
+        link_bw=jnp.asarray(t.link_bw, jnp.float32),
+    )
+
+
+def _spray(T: FatTreeArrays, cand_links, link_demand, off, rand):
+    """Least-demand index over ``cand_links`` (m,) with a random-rotation
+    tiebreak so zero-demand ties spread instead of piling on index 0."""
+    import jax.numpy as jnp
+
+    m = T.m
+    rot = (jnp.arange(m, dtype=jnp.int32) + rand) % m
+    links = cand_links[rot]
+    cost = link_demand[links + off] / T.link_bw[links]
+    return rot[jnp.argmin(cost)]
+
+
+def fat_tree_routes(
+    T: FatTreeArrays,
+    src_nodes,
+    dst_nodes,
+    rand,
+    link_demand,
+    adaptive: bool,
+    demand_offsets=None,
+):
+    """Returns (routes (n, 6) int32, n_hops (n,)) — same contract as
+    :func:`repro.netsim.routing.compute_routes`."""
+    import jax
+    import jax.numpy as jnp
+
+    if demand_offsets is None:
+        demand_offsets = jnp.zeros_like(src_nodes)
+
+    def one(s, d, r, off):
+        e_s = s // T.h
+        e_d = d // T.h
+        pod_s = e_s // T.m
+        pod_d = e_d // T.m
+        i_d = e_d % T.m
+        ti = s
+        to = T.n_nodes + d
+        if adaptive:
+            j = _spray(T, T.up1[e_s], link_demand, off, r % T.m)
+            a_src = pod_s * T.m + j
+            i = _spray(T, T.up2[a_src], link_demand, off, (r // T.m) % T.m)
+        else:
+            j = d % T.m  # D-mod-k: destination picks agg then core
+            i = (d // T.m) % T.m
+            a_src = pod_s * T.m + j
+        u1 = T.up1[e_s, j]
+        u2 = T.up2[a_src, i]
+        core = j * T.m + i
+        d1 = T.down1[core, pod_d]
+        d2 = T.down2[pod_d * T.m + j, i_d]
+        d2_same_pod = T.down2[a_src, i_d]
+        same_edge = e_s == e_d
+        same_pod = (pod_s == pod_d) & ~same_edge
+        neg = -jnp.ones_like(ti)
+        return jnp.stack([
+            ti,
+            jnp.where(same_edge, neg, u1),
+            jnp.where(same_edge | same_pod, neg, u2),
+            jnp.where(same_edge | same_pod, neg, d1),
+            jnp.where(same_edge, neg,
+                      jnp.where(same_pod, d2_same_pod, d2)),
+            to,
+        ])
+
+    routes = jax.vmap(one)(src_nodes, dst_nodes, rand, demand_offsets)
+    n_hops = jnp.sum(routes >= 0, axis=1)
+    return routes.astype(jnp.int32), n_hops.astype(jnp.int32)
+
+
+# ---- scale configurations ----
+
+def fat_tree_small(net: Optional[NetConfig] = None) -> FatTree:
+    # k=12 with 7 hosts/edge: 12 pods x 6 edges x 7 = 504 nodes (the
+    # dragonfly-small host count, so every small-scale mix fits), 180
+    # switches, 36 cores
+    return build_fat_tree(12, hosts_per_edge=7, net=net)
+
+
+def fat_tree_paper(net: Optional[NetConfig] = None) -> FatTree:
+    # canonical k=32: 8192 hosts, 1280 switches (the datacenter-scale
+    # analogue of the paper's 8448-node dragonflies)
+    return build_fat_tree(32, net=net)

@@ -1,0 +1,265 @@
+"""3D torus fabric (dimension-order routing + adaptive bypass).
+
+``dims = (X, Y, Z)`` routers with wraparound links in every dimension of
+size > 1 and ``nodes_per_router`` hosts each. Router ``r`` sits at
+``(x, y, z) = (r % X, (r // X) % Y, r // (X*Y))`` — node ids are
+contiguous per router and per z-plane, so RR places whole routers and RG
+places contiguous plane blocks (the classic torus block placement).
+
+Links are unidirectional rows ``dim_link[r, d, s]`` (s=0 the +1
+direction, s=1 the -1 direction; dims of size 2 get two parallel links).
+Link kinds ``2 + d`` split utilization per dimension (x/y/z levels).
+
+Routing:
+
+* **Dimension-order (DOR)**: traverse x, then y, then z, each dimension
+  going the shorter way around the ring (wrap ties broken per-message by
+  the rand stream).
+* **Adaptive bypass**: the same hop budget routed in *reverse* dimension
+  order (z, y, x) visits a disjoint set of intermediate routers; the
+  router compares live demand over both candidate link chains and takes
+  the less congested one (O1TURN-style order adaptivity — hop count is
+  unchanged, so the route width stays ``2 + sum(d // 2)``).
+
+Routes are packed ``[term_in, per-dim segments in traversal order,
+term_out]`` (-1 padded within each segment), so the non-padding slots
+always form a connected link chain — the property the fabric route
+tests check. The engine itself consumes a route as a link *set*
+(fair-share min over the route's links + a hop-latency floor).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.netsim.config import NetConfig
+from repro.netsim.fabric.base import terminal_link_rows
+
+KIND_DIM0 = 2  # link kind for dimension d is KIND_DIM0 + d
+DIM_NAMES = ("x", "y", "z")
+
+
+@dataclass
+class Torus:
+    dims: Tuple[int, int, int]
+    nodes_per_router: int
+
+    n_routers: int = 0
+    n_nodes: int = 0
+    n_links: int = 0
+    link_kind: np.ndarray = field(default=None, repr=False)
+    link_bw: np.ndarray = field(default=None, repr=False)
+    link_dst_router: np.ndarray = field(default=None, repr=False)
+    link_src_router: np.ndarray = field(default=None, repr=False)
+    dim_link: np.ndarray = field(default=None, repr=False)  # (R, 3, 2)
+
+    # --- Fabric protocol ---
+    @property
+    def family(self) -> str:
+        return "torus"
+
+    @property
+    def route_width(self) -> int:
+        return 2 + sum(d // 2 for d in self.dims)
+
+    @property
+    def place_routers(self) -> int:
+        return self.n_routers
+
+    @property
+    def place_groups(self) -> int:
+        return self.dims[2]  # z-planes: contiguous router/node blocks
+
+    @property
+    def nodes_per_group(self) -> int:
+        return self.dims[0] * self.dims[1] * self.nodes_per_router
+
+    def node_router(self, node):
+        return node // self.nodes_per_router
+
+    def cache_key(self) -> Tuple:
+        return (self.family, *self.dims, self.nodes_per_router)
+
+    def link_levels(self) -> Dict[str, np.ndarray]:
+        return {
+            DIM_NAMES[d]: self.link_kind == KIND_DIM0 + d
+            for d in range(3)
+            if self.dims[d] > 1
+        }
+
+    def routing_tables(self):
+        return torus_arrays(self), torus_routes
+
+
+def build_torus(
+    dims: Tuple[int, int, int],
+    nodes_per_router: int = 1,
+    net: Optional[NetConfig] = None,
+) -> Torus:
+    if len(dims) != 3 or any(d < 1 for d in dims):
+        raise ValueError(f"torus dims must be 3 positive ints, got {dims}")
+    net = net or NetConfig()
+    X, Y, Z = dims
+    R = X * Y * Z
+    p = nodes_per_router
+    topo = Torus(dims=tuple(dims), nodes_per_router=p)
+    topo.n_routers, topo.n_nodes = R, R * p
+
+    kinds, bws, dsts, srcs = terminal_link_rows(R * p, p, net.terminal_bw)
+
+    dim_link = np.full((R, 3, 2), -1, np.int64)
+    strides = (1, X, X * Y)
+    for r in range(R):
+        coord = (r % X, (r // X) % Y, r // (X * Y))
+        for d in range(3):
+            D = dims[d]
+            if D <= 1:
+                continue
+            for s, step in ((0, 1), (1, -1)):
+                nb_c = (coord[d] + step) % D
+                nb = r + (nb_c - coord[d]) * strides[d]
+                dim_link[r, d, s] = len(kinds)
+                kinds.append(KIND_DIM0 + d)
+                bws.append(net.local_bw)
+                srcs.append(r)
+                dsts.append(nb)
+
+    topo.dim_link = dim_link
+    topo.link_kind = np.asarray(kinds, np.int32)
+    topo.link_bw = np.asarray(bws, np.float64)
+    topo.link_dst_router = np.asarray(dsts, np.int64)
+    topo.link_src_router = np.asarray(srcs, np.int64)
+    topo.n_links = len(kinds)
+    return topo
+
+
+# ---- the vectorized router ----
+
+class TorusArrays(NamedTuple):
+    X: int
+    Y: int
+    Z: int
+    p: int
+    n_nodes: int
+    n_links: int
+    dim_link: "object"  # (R, 3, 2) int32 (-1 where dim size 1)
+    link_bw: "object"  # (L,) f32
+
+
+def torus_arrays(t: Torus) -> TorusArrays:
+    import jax.numpy as jnp
+
+    return TorusArrays(
+        X=t.dims[0], Y=t.dims[1], Z=t.dims[2], p=t.nodes_per_router,
+        n_nodes=t.n_nodes, n_links=t.n_links,
+        # -1 rows (dims of size 1) are never gathered: their segment
+        # loops are statically empty
+        dim_link=jnp.asarray(t.dim_link, jnp.int32),
+        link_bw=jnp.asarray(t.link_bw, jnp.float32),
+    )
+
+
+def torus_routes(
+    T: TorusArrays,
+    src_nodes,
+    dst_nodes,
+    rand,
+    link_demand,
+    adaptive: bool,
+    demand_offsets=None,
+):
+    """Returns (routes (n, route_width) int32, n_hops) — same contract as
+    :func:`repro.netsim.routing.compute_routes`."""
+    import jax
+    import jax.numpy as jnp
+
+    dims = (T.X, T.Y, T.Z)
+    segs = [d // 2 for d in dims]  # max hops per dimension
+
+    if demand_offsets is None:
+        demand_offsets = jnp.zeros_like(src_nodes)
+
+    def one(s, d, r, off):
+        rs = s // T.p
+        rd = d // T.p
+        sc = [rs % T.X, (rs // T.X) % T.Y, rs // (T.X * T.Y)]
+        dc = [rd % T.X, (rd // T.X) % T.Y, rd // (T.X * T.Y)]
+        # per-dimension direction + hop count (shorter way around; wrap
+        # ties broken by the per-message rand bits)
+        steps, sign, dirn = [], [], []
+        for dim in range(3):
+            D = dims[dim]
+            fwd = (dc[dim] - sc[dim]) % D
+            bwd = (D - fwd) % D
+            tie = (r >> dim) & 1
+            use_fwd = (fwd < bwd) | ((fwd == bwd) & (tie == 0))
+            steps.append(jnp.minimum(fwd, bwd))
+            sign.append(jnp.where(use_fwd, 0, 1))
+            dirn.append(jnp.where(use_fwd, 1, -1))
+
+        def compose(c):
+            return c[0] + T.X * (c[1] + T.Y * c[2])
+
+        def segments(order):
+            """Emit the per-dimension link chains for a traversal in
+            ``order`` (dims earlier in the order are at their dst
+            coordinate while a later dim is crossed), packed in traversal
+            order so the route slots form a connected chain."""
+            moved = []
+            out = []
+            for dim in order:
+                cur = [dc[i] if i in moved else sc[i] for i in range(3)]
+                links = []
+                for t in range(segs[dim]):
+                    c = list(cur)
+                    c[dim] = (sc[dim] + dirn[dim] * t) % dims[dim]
+                    lid = T.dim_link[compose(c), dim, sign[dim]]
+                    links.append(jnp.where(t < steps[dim], lid, -1))
+                out.append(
+                    jnp.stack(links) if links
+                    else jnp.zeros((0,), jnp.int32))
+                moved.append(dim)
+            return out
+
+        ti = s
+        to = T.n_nodes + d
+
+        def pack(segl):
+            parts = [jnp.reshape(ti, (1,))]
+            parts += [x for x in segl]
+            parts.append(jnp.reshape(to, (1,)))
+            return jnp.concatenate(parts).astype(jnp.int32)
+
+        route_a = pack(segments((0, 1, 2)))
+        if not adaptive:
+            return route_a
+        route_b = pack(segments((2, 1, 0)))
+
+        def cost(route):
+            valid = route >= 0
+            idx = jnp.maximum(route, 0)
+            c = link_demand[idx + off] / T.link_bw[idx]
+            return jnp.sum(jnp.where(valid, c, 0.0))
+
+        take_b = cost(route_b) < cost(route_a) - 1e-6
+        return jnp.where(take_b, route_b, route_a)
+
+    routes = jax.vmap(one)(src_nodes, dst_nodes, rand, demand_offsets)
+    n_hops = jnp.sum(routes >= 0, axis=1)
+    return routes.astype(jnp.int32), n_hops.astype(jnp.int32)
+
+
+# ---- scale configurations ----
+
+def torus_small(net: Optional[NetConfig] = None) -> Torus:
+    # 4x4x4 routers x 8 nodes = 512 nodes (>= the 504-node small
+    # dragonfly, every small-scale mix fits); route width 2+6 = 8
+    return build_torus((4, 4, 4), 8, net=net)
+
+
+def torus_paper(net: Optional[NetConfig] = None) -> Torus:
+    # 11x12x16 routers x 4 nodes = 8448 nodes — exactly the paper's
+    # dragonfly host count on a torus; route width 2+5+6+8 = 21
+    return build_torus((11, 12, 16), 4, net=net)

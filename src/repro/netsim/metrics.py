@@ -8,7 +8,8 @@ from typing import Any, Dict, List, Sequence
 import numpy as np
 
 from repro.netsim.config import NetConfig
-from repro.netsim.topology import Dragonfly, KIND_GLOBAL, KIND_LOCAL
+from repro.netsim.fabric import Fabric
+from repro.netsim.fabric.base import KIND_TERM_IN, KIND_TERM_OUT
 
 
 def latency_summary(state, app_names: Sequence[str], net: NetConfig) -> Dict[str, Any]:
@@ -66,21 +67,59 @@ def comm_time_summary(state, app_names: Sequence[str]) -> Dict[str, Any]:
     return out
 
 
-def link_load_summary(state, topo: Dragonfly) -> Dict[str, Any]:
-    """Table VI: total + per-link load on local vs global links."""
+def link_load_summary(state, topo: Fabric) -> Dict[str, Any]:
+    """Table VI, fabric-generic: total + per-link load per fabric level.
+
+    Links are classified by the fabric's own hierarchy
+    (:meth:`~repro.netsim.fabric.base.Fabric.link_levels`): dragonfly
+    local/global, fat-tree up/down, torus x/y/z. Key names follow the
+    level names (``<level>_total_bytes`` etc.), so dragonfly reports keep
+    their historical ``local_*``/``global_*``/``frac_global`` keys; the
+    ``levels`` entry lists the level order for fabric-agnostic readers.
+    """
     lb = np.asarray(state.metrics.link_bytes)[: topo.n_links]
-    loc = topo.link_kind == KIND_LOCAL
-    glo = topo.link_kind == KIND_GLOBAL
-    n_loc, n_glo = int(loc.sum()), int(glo.sum())
-    return dict(
-        local_total_bytes=float(lb[loc].sum()),
-        global_total_bytes=float(lb[glo].sum()),
-        local_per_link_bytes=float(lb[loc].sum() / max(n_loc, 1)),
-        global_per_link_bytes=float(lb[glo].sum() / max(n_glo, 1)),
-        n_local_links=n_loc,
-        n_global_links=n_glo,
-        frac_global=float(lb[glo].sum() / max(lb[loc].sum() + lb[glo].sum(), 1)),
+    levels = topo.link_levels()
+    names = list(levels)
+    out: Dict[str, Any] = dict(levels=names)
+    totals = {}
+    for name, mask in levels.items():
+        n = int(mask.sum())
+        tot = float(lb[mask].sum())
+        totals[name] = tot
+        out[f"{name}_total_bytes"] = tot
+        out[f"{name}_per_link_bytes"] = float(tot / max(n, 1))
+        out[f"n_{name}_links"] = n
+    inter_total = sum(totals.values())
+    # per-level traffic shares (dragonfly keeps its historical
+    # frac_global; every other level gets the symmetric frac_<level>)
+    for name in names:
+        out[f"frac_{name}"] = float(totals[name] / max(inter_total, 1))
+    return out
+
+
+def link_level_utilization(state, topo: Fabric) -> Dict[str, Any]:
+    """Per-level link utilization: delivered bytes / (level bandwidth ×
+    virtual time) — mean over the level's links, plus the busiest link.
+
+    The cross-fabric comparison metric: at equal offered load, the level
+    that saturates first differs per fabric (dragonfly global links,
+    fat-tree up links, a torus dimension).
+    """
+    lb = np.asarray(state.metrics.link_bytes)[: topo.n_links]
+    bw = np.asarray(topo.link_bw, np.float64)
+    t_s = float(np.max(np.asarray(state.t))) * 1e-6  # us -> s
+    levels = dict(topo.link_levels())
+    levels["terminal"] = (
+        (topo.link_kind == KIND_TERM_IN) | (topo.link_kind == KIND_TERM_OUT)
     )
+    out: Dict[str, Any] = {}
+    for name, mask in levels.items():
+        if not mask.any() or t_s <= 0:
+            out[name] = dict(mean=0.0, max=0.0)
+            continue
+        util = lb[mask] / (bw[mask] * t_s)
+        out[name] = dict(mean=float(util.mean()), max=float(util.max()))
+    return out
 
 
 def router_traffic_windows(state, app_names: Sequence[str], router_set: np.ndarray):
@@ -126,5 +165,6 @@ def run_report(state, app_names, topo, net, sim_wall_s: float = 0.0,
         latency=latency_summary(state, app_names, net),
         comm_time=comm_time_summary(state, app_names),
         link_load=link_load_summary(state, topo),
+        link_utilization=link_level_utilization(state, topo),
         sim_wall_s=sim_wall_s,
     )

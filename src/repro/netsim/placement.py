@@ -1,11 +1,21 @@
-"""Job placement policies (paper §IV-C): RN / RR / RG.
+"""Job placement policies (paper §IV-C): RN / RR / RG — fabric-generic.
 
 * Random Nodes (RN): nodes drawn randomly from the whole system — nodes on
   one router tend to serve different jobs.
-* Random Routers (RR): a random selection of routers; the nodes of each
+* Random Routers (RR): a random selection of hosting routers (dragonfly
+  routers, fat-tree edge/ToR switches, torus routers); the nodes of each
   chosen router are assigned consecutively.
-* Random Groups (RG): a random selection of groups; nodes within the chosen
-  groups assigned consecutively.
+* Random Groups (RG): a random selection of placement groups (dragonfly
+  groups, fat-tree **pods** — pod-aware placement — or torus z-planes —
+  contiguous block placement); nodes within the chosen groups assigned
+  consecutively.
+
+Every fabric exposes its placement units through the
+:class:`~repro.netsim.fabric.base.Fabric` protocol (``place_routers`` /
+``nodes_per_router`` / ``place_groups`` / ``nodes_per_group``, node ids
+contiguous within each), so the three policies — and their RNG draw
+streams — are identical across fabrics. On a dragonfly the draws are
+bit-identical to the historical dragonfly-only implementation.
 
 **Incremental placement** (the online-scheduler path): an ``occupied``
 node mask restricts every policy to the free nodes while preserving the
@@ -20,11 +30,11 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.netsim.topology import Dragonfly
+from repro.netsim.fabric import Fabric
 
 
 def place_jobs(
-    topo: Dragonfly,
+    topo: Fabric,
     job_sizes: Sequence[int],
     policy: str,
     seed: int = 0,
@@ -56,16 +66,15 @@ def place_jobs(
             f"(of {topo.n_nodes})"
         )
     p = topo.nodes_per_router
-    a = topo.routers_per_group
 
     if policy == "RN":
         order = rng.permutation(topo.n_nodes)
     elif policy == "RR":
-        routers = rng.permutation(topo.n_routers)
+        routers = rng.permutation(topo.place_routers)
         order = (routers[:, None] * p + np.arange(p)[None, :]).reshape(-1)
     elif policy == "RG":
-        groups = rng.permutation(topo.n_groups)
-        nodes_per_group = a * p
+        groups = rng.permutation(topo.place_groups)
+        nodes_per_group = topo.nodes_per_group
         order = (
             groups[:, None] * nodes_per_group + np.arange(nodes_per_group)[None, :]
         ).reshape(-1)

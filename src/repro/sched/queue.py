@@ -1,8 +1,8 @@
-"""Pending-queue state and policies: FCFS and EASY backfill.
+"""Pending-queue state and policies: FCFS, EASY and conservative backfill.
 
 The queue is plain host-side state (scheduling decisions happen between
 engine windows). Two resources bound admission: free **nodes** (the
-dragonfly's) and free engine **job slots** (the compiled envelope's
+fabric's) and free engine **job slots** (the compiled envelope's
 ``Jmax``); every job uses one slot and ``n_ranks`` nodes.
 
 * **FCFS** starts the arrival-order prefix that fits; the head of the
@@ -14,16 +14,25 @@ dragonfly's) and free engine **job slots** (the compiled envelope's
   before the shadow time, or (b) it only uses nodes/slots the head won't
   need then ("extra"). The head's reserved start is never delayed —
   :func:`simulate_queue` plus the hypothesis property test pin this.
+* **Conservative backfill** gives *every* queued job a reservation, in
+  arrival order, against the estimate-driven resource profile (running
+  jobs' releases plus earlier reservations' holds). A job starts now only
+  when its earliest feasible start *is* now — so no backfill ever delays
+  any earlier-arrived job's reserved start, not just the head's.
+  Reservations are recomputed from the profile at every decision point
+  (the classic formulation): actual completions come in at or before the
+  estimates, so recomputation only moves reserved starts earlier.
 
 Wait/slowdown accounting lives with the records the scheduler keeps; the
 queue only decides *who starts now*.
 """
 from __future__ import annotations
 
+from bisect import insort
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-POLICIES = ("fcfs", "easy")
+POLICIES = ("fcfs", "easy", "conservative")
 
 
 @dataclass
@@ -84,6 +93,9 @@ class PendingQueue:
         ``running`` lists ``(est_end_us, n_ranks)`` of currently running
         jobs — the estimate base for the shadow-time computation.
         """
+        if self.policy == "conservative":
+            return self._select_conservative(
+                now, free_nodes, free_slots, running)
         starts: List[QueuedJob] = []
         # both policies start the runnable arrival-order prefix
         while self.jobs:
@@ -129,6 +141,109 @@ class PendingQueue:
             else:
                 i += 1
         return starts, resv
+
+    def _select_conservative(
+        self,
+        now: float,
+        free_nodes: int,
+        free_slots: int,
+        running: Sequence[Tuple[float, int]],
+    ) -> Tuple[List[QueuedJob], Optional[Reservation]]:
+        """Walk the queue in arrival order, giving every job its earliest
+        feasible start against the profile of running jobs' releases and
+        earlier jobs' reservations. Jobs whose earliest start is *now*
+        start; everything else holds a reservation no later job may
+        delay."""
+        profile = _Profile(now, free_nodes, free_slots)
+        for end, n in running:
+            # a job past its estimate still holds its resources — model
+            # its release as imminent (strictly after now), never as
+            # already free (counting it free would start jobs that don't
+            # actually fit and crash the admission path)
+            profile.release(end if end > now else now + 1.0, n, 1)
+        starts: List[QueuedJob] = []
+        head_resv: Optional[Reservation] = None
+        i = 0
+        while i < len(self.jobs):
+            job = self.jobs[i]
+            t = profile.earliest(job.n_ranks, job.est_runtime_us)
+            if t is None:
+                raise RuntimeError(
+                    f"job {job.name!r} ({job.n_ranks} ranks) can never start"
+                )
+            if t <= now:
+                starts.append(self.jobs.pop(i))
+                profile.hold(now, now + job.est_runtime_us, job.n_ranks, 1)
+            else:
+                profile.hold(t, t + job.est_runtime_us, job.n_ranks, 1)
+                if head_resv is None:
+                    head_resv = Reservation(
+                        jid=job.jid, shadow_us=t,
+                        extra_nodes=0, extra_slots=0)
+                i += 1
+        return starts, head_resv
+
+
+class _Profile:
+    """Estimate-driven (nodes, slots) availability over time: the base
+    free pool at ``now`` plus release/hold deltas at later instants."""
+
+    def __init__(self, now: float, free_nodes: int, free_slots: int):
+        self.now = now
+        self.base = (free_nodes, free_slots)
+        # (t, dnodes, dslots), kept sorted so queries never re-sort
+        self.deltas: List[Tuple[float, int, int]] = []
+
+    def release(self, t: float, nodes: int, slots: int) -> None:
+        if t > self.now:
+            insort(self.deltas, (t, nodes, slots))
+        else:
+            self.base = (self.base[0] + nodes, self.base[1] + slots)
+
+    def hold(self, t0: float, t1: float, nodes: int, slots: int) -> None:
+        """Consume resources during [t0, t1)."""
+        if t0 <= self.now:
+            self.base = (self.base[0] - nodes, self.base[1] - slots)
+        else:
+            insort(self.deltas, (t0, -nodes, -slots))
+        self.release(t1, nodes, slots)
+
+    def _min_avail(self, events, t0: float, t1: float) -> Tuple[int, int]:
+        """Minimum (nodes, slots) available over [t0, t1); ``events`` is
+        ``self.deltas`` pre-sorted by the caller.
+
+        All deltas at one instant are netted before the running minimum
+        updates: a release and a hold at the same ``t`` cancel (intervals
+        are half-open, so a job ending at ``t`` and one reserved at ``t``
+        never overlap) — folding the hold first would show a transient
+        negative dip and spuriously block feasible backfill windows."""
+        nodes, slots = self.base
+        i = 0
+        while i < len(events) and events[i][0] <= t0:
+            nodes += events[i][1]
+            slots += events[i][2]
+            i += 1
+        mn_nodes, mn_slots = nodes, slots
+        while i < len(events) and events[i][0] < t1:
+            t = events[i][0]
+            while i < len(events) and events[i][0] == t:
+                nodes += events[i][1]
+                slots += events[i][2]
+                i += 1
+            mn_nodes = min(mn_nodes, nodes)
+            mn_slots = min(mn_slots, slots)
+        return mn_nodes, mn_slots
+
+    def earliest(self, n_ranks: int, est_us: float) -> Optional[float]:
+        """Earliest t >= now where (n_ranks nodes, 1 slot) are available
+        throughout [t, t + est_us)."""
+        events = self.deltas  # maintained sorted by insort
+        candidates = [self.now] + [t for t, _, _ in events if t > self.now]
+        for t in candidates:
+            mn_nodes, mn_slots = self._min_avail(events, t, t + est_us)
+            if mn_nodes >= n_ranks and mn_slots >= 1:
+                return t
+        return None
 
 
 def _reservation(

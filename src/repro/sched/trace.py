@@ -83,14 +83,22 @@ class Trace:
     slots: int = 8  # engine envelope Jmax — concurrent job slots
 
     def validate(self) -> None:
+        from repro.netsim.fabric import fabric_names, scale_names
+
         if not self.jobs:
             raise ValueError("trace needs at least one job")
         if self.slots < 1:
             raise ValueError("trace needs at least one job slot")
-        if self.topo not in ("1d", "2d"):
-            raise ValueError(f"unknown topo {self.topo!r}")
-        if self.scale not in ("small", "paper"):
-            raise ValueError(f"unknown scale {self.scale!r}")
+        if self.topo not in fabric_names():
+            raise ValueError(
+                f"unknown topo {self.topo!r}; valid fabrics: "
+                f"{sorted(fabric_names())}"
+            )
+        if self.scale not in scale_names():
+            raise ValueError(
+                f"unknown scale {self.scale!r}; valid scales: "
+                f"{sorted(scale_names())}"
+            )
         if self.placement not in ("RN", "RR", "RG"):
             raise ValueError(f"unknown placement {self.placement!r}")
         if self.routing.upper() not in ("MIN", "ADP", "ADAPTIVE"):

@@ -37,6 +37,7 @@ import glob
 import os
 from typing import Dict, List, Optional
 
+from repro.netsim.fabric import fabric_names
 from repro.union import experiment as EXP
 from repro.union import planner as PLN
 from repro.union import report as REP
@@ -46,6 +47,8 @@ from repro.union.scenario import MIXES, MIX_HAS_UR, Scenario, load_scenario
 def _apply_cli_overrides(sc: Scenario, args) -> Scenario:
     sc = dataclasses.replace(
         sc, jobs=[dataclasses.replace(j) for j in sc.jobs])
+    if args.topo and len(args.topo) == 1:
+        sc.topo = args.topo[0]  # several fabrics become a grid axis instead
     if args.horizon_ms is not None:
         sc.horizon_ms = args.horizon_ms
     if args.tick_us is not None:
@@ -105,12 +108,18 @@ def _save_results(res: EXP.Results, out_dir: str, tag: str) -> None:
 
 def _build_trace_study(ap, args) -> EXP.TraceStudy:
     if args.trace in ("poisson", "weibull"):
+        topo = args.topo[0] if args.topo else None
+        if args.topo and len(args.topo) > 1:
+            ap.error("--trace supports a single --topo fabric per run")
         return EXP.TraceStudy(
             source=args.trace, jobs=args.trace_jobs,
-            gap_us=args.trace_gap_us, slots=args.slots,
+            gap_us=args.trace_gap_us, slots=args.slots, topo=topo,
             policies=list(args.sched), seeds=args.trace_seeds,
         )
     if os.path.exists(args.trace):
+        if args.topo:
+            ap.error("--topo is not supported with a trace file: the file"
+                     " declares its own 'topo' — edit the trace instead")
         return EXP.TraceStudy(
             source=args.trace, slots=args.slots, policies=list(args.sched),
             seeds=args.trace_seeds,
@@ -121,12 +130,12 @@ def _build_trace_study(ap, args) -> EXP.TraceStudy:
              " 'poisson'/'weibull'")
 
 
-def _grid_summaries(res: EXP.Results, name: str, routing: str,
+def _grid_summaries(res: EXP.Results, name: str, topo: str, routing: str,
                     policies: List[str]) -> Dict[str, Dict]:
     """Per-placement-policy campaign summaries of one scenario group."""
     groups = res.summary["scenario_studies"]
-    return {pol: groups[f"{name}/{pol}/{routing}"]
-            for pol in policies if f"{name}/{pol}/{routing}" in groups}
+    return {pol: groups[f"{name}/{topo}/{pol}/{routing}"]
+            for pol in policies if f"{name}/{topo}/{pol}/{routing}" in groups}
 
 
 def _run_experiment(args, exp: EXP.Experiment,
@@ -154,10 +163,10 @@ def _attach_interference(args, exp: EXP.Experiment, res: EXP.Results) -> None:
         p for p in (args.placements or []) if p != sc.placement]
     baseline_apps = [s.name.split("baseline-", 1)[1]
                      for s in exp.scenarios if s.name.startswith("baseline-")]
-    by_policy = _grid_summaries(res, sc.name, sc.routing, pols)
+    by_policy = _grid_summaries(res, sc.name, sc.topo, sc.routing, pols)
     baselines_by_policy = {
         pol: {app: _grid_summaries(
-            res, f"baseline-{app}", sc.routing, [pol])[pol]
+            res, f"baseline-{app}", sc.topo, sc.routing, [pol])[pol]
             for app in baseline_apps}
         for pol in pols
     }
@@ -209,7 +218,7 @@ def main(argv=None) -> None:
                     " 'poisson' / 'weibull' for a synthetic arrival stream"
                     " drawn from the app catalog (see docs/sched.md)")
     ap.add_argument("--sched", nargs="+", default=["easy"],
-                    choices=["fcfs", "easy"],
+                    choices=["fcfs", "easy", "conservative"],
                     help="queue policy(ies) for --trace runs; more than one"
                     " compares policies on the same trace + engine")
     ap.add_argument("--slots", type=int, default=None,
@@ -222,6 +231,12 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-seeds", type=int, default=1,
                     help="number of trace seeds (campaign over seeds x"
                     " policies; synthetic traces redraw arrivals per seed)")
+    ap.add_argument("--topo", nargs="+", default=None,
+                    choices=sorted(fabric_names()),
+                    help="network fabric(s): one value overrides the"
+                    " scenario's/trace's topology; several cross the study"
+                    " grid over fabrics (same job mix on every named"
+                    " fabric, one Results artifact)")
     ap.add_argument("--members", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sequential", action="store_true",
@@ -262,6 +277,9 @@ def main(argv=None) -> None:
         return
 
     if args.experiment is not None:
+        if args.topo:
+            ap.error("--topo is not supported with --experiment: set the"
+                     " scenario 'topo' or grid 'fabrics' in the spec")
         exp = EXP.load_experiment(args.experiment)
         if args.emit:
             exp.to_json(args.emit)
@@ -309,9 +327,12 @@ def main(argv=None) -> None:
         names = "+".join(s.name for s in scenarios)
         print(f"=== ragged campaign: {names} × {args.members} members each "
               f"({'batched' if not args.sequential else 'sequential'}) ===")
+        grid = EXP.StudyGrid()
+        if args.topo and len(args.topo) > 1:
+            grid = EXP.StudyGrid(fabrics=list(dict.fromkeys(args.topo)))
         exp = EXP.Experiment(
             name=names, scenarios=scenarios, members=args.members,
-            base_seed=args.seed, vmapped=not args.sequential,
+            base_seed=args.seed, grid=grid, vmapped=not args.sequential,
             strict=args.strict,
         )
         _run_experiment(args, exp,
@@ -319,16 +340,27 @@ def main(argv=None) -> None:
         return
 
     exp_scenarios = [sc]
+    if args.baselines and args.topo and len(args.topo) > 1:
+        # baseline/interference summaries are single-fabric (they join
+        # co-run and baseline groups on the scenario's own coordinates)
+        ap.error("--baselines is not supported with several --topo fabrics;"
+                 " run one fabric at a time")
     if args.baselines:
         for job in sc.jobs:
             exp_scenarios.append(dataclasses.replace(
                 sc, name=f"baseline-{job.app}",
                 jobs=[dataclasses.replace(job, start_us=0.0)], ur=None))
-    grid = EXP.StudyGrid()
+    fabrics = None
+    if args.topo and len(args.topo) > 1:
+        # exactly the named fabrics, in order (the scenario's own topo
+        # joins the sweep only if named) — same semantics as the ragged
+        # multi-scenario path
+        fabrics = list(dict.fromkeys(args.topo))
+    grid = EXP.StudyGrid(fabrics=fabrics)
     if args.placements:
         pols = [sc.placement] + [p for p in args.placements
                                  if p != sc.placement]
-        grid = EXP.StudyGrid(placements=pols)
+        grid = EXP.StudyGrid(placements=pols, fabrics=fabrics)
     exp = EXP.Experiment(
         name=sc.name, scenarios=exp_scenarios, members=args.members,
         base_seed=args.seed, grid=grid, vmapped=not args.sequential,

@@ -64,9 +64,9 @@ from repro.union.validate import (
     reraise_with_path,
 )
 
-SCHEMA_VERSION = 1
-
-_POLICIES = ("fcfs", "easy")
+# v2: cells carry a `fabric` coordinate, scenario_studies group keys are
+# name/fabric/placement/routing, reports include link_utilization
+SCHEMA_VERSION = 2
 
 
 def _resolve_spec_path(spec: str, base_dir: Optional[str]) -> str:
@@ -91,27 +91,41 @@ def _resolve_spec_path(spec: str, base_dir: Optional[str]) -> str:
 
 @dataclass
 class StudyGrid:
-    """Factors crossed with every scenario: placement and routing axes.
+    """Factors crossed with every scenario: fabric, placement and routing
+    axes.
 
     ``None`` leaves the scenario's own value; a list replaces it with one
-    variant per entry (seeds are the third axis, via ``members``/``seeds``;
+    variant per entry (seeds are the extra axis, via ``members``/``seeds``;
     queue policies are the trace-side axis in :class:`TraceStudy`).
+    ``fabrics`` sweeps the network itself — the same job mix lowered onto
+    each named fabric ("1d"/"2d" dragonflies, "fat_tree", "torus"), each
+    variant on its own compiled engine (the cache keys on fabric
+    identity), all in one Results artifact.
     """
 
     placements: Optional[List[str]] = None
     routing: Optional[List[str]] = None
+    fabrics: Optional[List[str]] = None
 
     def validate(self) -> None:
+        from repro.netsim.fabric import fabric_names
+
         for p in self.placements or []:
             if p not in ("RN", "RR", "RG"):
                 raise ValueError(f"unknown placement {p!r} in grid")
         for r in self.routing or []:
             if r.upper() not in ("MIN", "ADP", "ADAPTIVE"):
                 raise ValueError(f"unknown routing {r!r} in grid")
+        for f in self.fabrics or []:
+            if f not in fabric_names():
+                raise ValueError(
+                    f"unknown fabric {f!r} in grid; valid fabrics: "
+                    f"{sorted(fabric_names())}")
 
     @property
     def is_default(self) -> bool:
-        return self.placements is None and self.routing is None
+        return (self.placements is None and self.routing is None
+                and self.fabrics is None)
 
 
 @dataclass
@@ -130,6 +144,7 @@ class TraceStudy:
     jobs: int = 64
     gap_us: float = 2000.0
     slots: Optional[int] = None
+    topo: Optional[str] = None  # fabric for synthetic draws (default "1d")
     policies: List[str] = field(default_factory=lambda: ["easy"])
     seeds: Union[int, List[int]] = 1
     tau_us: float = 10_000.0  # bounded-slowdown threshold for summaries
@@ -150,12 +165,26 @@ class TraceStudy:
             )
         if self.source in ("poisson", "weibull") and self.jobs < 1:
             raise ValueError("trace study needs jobs >= 1")
+        from repro.netsim.fabric import fabric_names
+        from repro.sched.queue import POLICIES
+
+        if self.topo is not None and self.topo not in fabric_names():
+            raise ValueError(
+                f"unknown topo {self.topo!r}; valid fabrics: "
+                f"{sorted(fabric_names())}")
+        if self.topo is not None and (
+                self.trace is not None or self.factory is not None
+                or self.source not in ("poisson", "weibull")):
+            raise ValueError(
+                "'topo' applies to synthetic sources only "
+                "('poisson'/'weibull'); a trace file or inline trace "
+                "declares its own topo")
         if not self.policies:
             raise ValueError("trace study needs at least one policy")
         for p in self.policies:
-            if p not in _POLICIES:
+            if p not in POLICIES:
                 raise ValueError(
-                    f"unknown queue policy {p!r}; expected one of {_POLICIES}")
+                    f"unknown queue policy {p!r}; expected one of {POLICIES}")
         n = self.seeds if isinstance(self.seeds, int) else len(self.seeds)
         if n < 1:
             raise ValueError("trace study needs at least one seed")
@@ -175,6 +204,8 @@ class TraceStudy:
             return self.trace
         if self.source in ("poisson", "weibull"):
             kw = dict(slots=self.slots) if self.slots else {}
+            if self.topo is not None:
+                kw["topo"] = self.topo
             return synthetic_trace(
                 self.jobs, arrival=self.source, mean_gap_us=self.gap_us,
                 seed=seed, **kw)
@@ -189,8 +220,8 @@ class TraceStudy:
     def to_dict(self) -> Dict[str, Any]:
         d = {
             k: getattr(self, k)
-            for k in ("source", "jobs", "gap_us", "slots", "policies",
-                      "seeds", "tau_us")
+            for k in ("source", "jobs", "gap_us", "slots", "topo",
+                      "policies", "seeds", "tau_us")
             if getattr(self, k) is not None
         }
         if self.factory is not None:
@@ -343,6 +374,7 @@ class CellResult:
     routing: str
     member: int = 0
     policy: Optional[str] = None  # trace cells: queue policy
+    fabric: str = "1d"  # the network fabric this cell ran on
     report: Dict[str, Any] = field(default_factory=dict)
 
     def records(self) -> List[Dict[str, Any]]:
@@ -350,7 +382,8 @@ class CellResult:
         (trace cells), with the study-grid coordinates repeated."""
         base = dict(kind=self.kind, name=self.name, seed=self.seed,
                     placement=self.placement, routing=self.routing,
-                    member=self.member, policy=self.policy)
+                    member=self.member, policy=self.policy,
+                    fabric=self.fabric)
         if self.kind == "trace":
             s = self.report
             return [dict(
@@ -489,7 +522,8 @@ def _exec_batched(node, exp: Experiment) -> List[CellResult]:
         out.append((cell.index, CellResult(
             kind="scenario", name=cell.scenario.name, seed=cell.seed,
             placement=cell.scenario.placement,
-            routing=cell.scenario.routing, member=cell.member, report=rep,
+            routing=cell.scenario.routing, member=cell.member,
+            fabric=cell.scenario.topo, report=rep,
         )))
     return out
 
@@ -517,7 +551,7 @@ def _exec_windowed(node, exp: Experiment) -> List[CellResult]:
         out.append(CellResult(
             kind="trace", name=trace.name, seed=cell.seed,
             placement=trace.placement, routing=trace.routing,
-            policy=cell.policy,
+            policy=cell.policy, fabric=trace.topo,
             report=sched_summary(res, tau_us=study.tau_us),
         ))
     return out

@@ -32,7 +32,7 @@ from repro.netsim.engine import (
     member_state,
 )
 from repro.netsim.placement import place_jobs
-from repro.netsim.topology import Dragonfly, get_topology
+from repro.netsim.topology import Fabric, get_topology
 from repro.union.scenario import Scenario, ScenarioJob, UR_RANKS
 from repro.union.seeds import engine_seed
 
@@ -71,7 +71,7 @@ def build_job_skeleton(job: ScenarioJob, scale: str):
 @dataclass
 class ResolvedScenario:
     scenario: Scenario
-    topo: Dragonfly
+    topo: Fabric
     jobs: List[JobSpec]  # placement for placement_seed baked in
     ur: Optional[URSpec]
     net: NetConfig

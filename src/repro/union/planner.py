@@ -2,9 +2,9 @@
 
 Planning is pure resolution — no engine is compiled here. The planner
 
-1. expands the study grid (scenarios × grid placements × grid routing,
-   each with ``members`` seeded ensemble members; trace studies into
-   (trace seed × queue policy) cells);
+1. expands the study grid (scenarios × grid fabrics × grid placements ×
+   grid routing, each with ``members`` seeded ensemble members; trace
+   studies into (trace seed × queue policy) cells);
 2. resolves every scenario variant to its engine inputs and **buckets**
    member cells by compatible engine configuration (same topology / net /
    routing / UR shape / horizon), unioning capacity envelopes per bucket
@@ -117,10 +117,11 @@ class Plan:
             if node.kind == "batched":
                 cap = node.capacity
                 names = sorted({c.scenario.name for c in node.cells})
+                fabric = node.host.scenario.topo
                 lines.append(
                     f"  node {i}: batched × {len(node.cells)} members "
-                    f"({'+'.join(names)}) @ envelope (Jmax={cap.Jmax}, "
-                    f"Pmax={cap.Pmax}, OPmax={cap.OPmax})"
+                    f"({'+'.join(names)}) @ fabric {fabric} @ envelope "
+                    f"(Jmax={cap.Jmax}, Pmax={cap.Pmax}, OPmax={cap.OPmax})"
                 )
             else:
                 lines.append(
@@ -153,12 +154,14 @@ def plan(exp) -> Plan:
     exp.validate()
     variants: List[Scenario] = []
     for sc in exp.scenarios:
-        for pl in (exp.grid.placements or [sc.placement]):
-            for rt in (exp.grid.routing or [sc.routing]):
-                variants.append(
-                    sc if (pl == sc.placement and rt == sc.routing)
-                    else replace(sc, placement=pl, routing=rt)
-                )
+        for fb in (exp.grid.fabrics or [sc.topo]):
+            for pl in (exp.grid.placements or [sc.placement]):
+                for rt in (exp.grid.routing or [sc.routing]):
+                    variants.append(
+                        sc if (fb == sc.topo and pl == sc.placement
+                               and rt == sc.routing)
+                        else replace(sc, topo=fb, placement=pl, routing=rt)
+                    )
 
     seeds = _member_seeds(exp, len(variants))
     cells: List[ScenarioCell] = []

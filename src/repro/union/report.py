@@ -67,6 +67,18 @@ def reports_summary(reports: List[Dict], members: Optional[int] = None,
             max_comm_ms=_spread([c["max_ms"] for c in ct]),
             avg_comm_ms=_spread([c["avg_ms"] for c in ct]),
         )
+    # per-fabric-level link utilization (mean-of-means / max-of-max over
+    # members) — which level saturates first differs per fabric
+    link_util: Dict[str, Any] = {}
+    per_level: Dict[str, List[Dict]] = {}
+    for r in reports:
+        for lvl, u in r.get("link_utilization", {}).items():
+            per_level.setdefault(lvl, []).append(u)
+    for lvl, us in per_level.items():
+        link_util[lvl] = dict(
+            mean=float(np.mean([u["mean"] for u in us])),
+            max=float(np.max([u["max"] for u in us])),
+        )
     return dict(
         members=members,
         vmapped=vmapped,
@@ -76,6 +88,7 @@ def reports_summary(reports: List[Dict], members: Optional[int] = None,
         dropped_total=int(sum(r["dropped"] for r in reports)),
         all_done=all(all(r["config"]["all_done"]) for r in reports),
         apps=per_app,
+        link_utilization=link_util,
     )
 
 
@@ -222,10 +235,12 @@ def sched_campaign_summary(
 # ---------------------------------------------------------------------------
 
 def _scenario_groups(cells) -> Dict[str, List]:
-    """Group scenario cells by their study-grid coordinates."""
+    """Group scenario cells by their study-grid coordinates
+    (``name/fabric/placement/routing``)."""
     groups: Dict[str, List] = {}
     for c in cells:
-        groups.setdefault(f"{c.name}/{c.placement}/{c.routing}", []).append(c)
+        key = f"{c.name}/{c.fabric}/{c.placement}/{c.routing}"
+        groups.setdefault(key, []).append(c)
     return groups
 
 

@@ -345,7 +345,7 @@ def test_grid_results_grouped_by_coordinates():
         name="g", scenarios=[tiny_scenario()], members=1,
         grid=union.StudyGrid(placements=["RN", "RG"])))
     keys = set(res.summary["scenario_studies"])
-    assert keys == {"tiny/RN/ADP", "tiny/RG/ADP"}
+    assert keys == {"tiny/1d/RN/ADP", "tiny/1d/RG/ADP"}
     rows = res.records()
     assert {r["placement"] for r in rows} == {"RN", "RG"}
     assert all(r["kind"] == "scenario" for r in rows)

@@ -1,0 +1,403 @@
+"""The fabric subsystem: builder invariants for fat-tree/torus, routing
+validity on every fabric (hypothesis property + fixed sweeps), placement
+genericity, engine-cache anti-collision, the conservative-backfill
+ordering, and the cross-fabric experiment grid."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.netsim.engine import (
+    EngineCapacity,
+    clear_engine_cache,
+    engine_cache_stats,
+    get_engine,
+)
+from repro.netsim.fabric import (
+    build_fat_tree,
+    build_torus,
+    fabric_key,
+    fabric_names,
+    fat_tree_small,
+    get_fabric,
+    torus_small,
+)
+from repro.netsim.placement import place_jobs
+from repro.sched.queue import QueuedJob, simulate_queue
+
+ALL_FABRICS = list(fabric_names())
+
+
+# ---------------------------------------------------------------------------
+# builder invariants
+# ---------------------------------------------------------------------------
+
+def test_fat_tree_structure():
+    t = build_fat_tree(4)  # canonical k=4: 16 hosts, 4 cores
+    m = 2
+    assert t.n_nodes == 16
+    assert t.n_routers == 4 * 4 + m * m  # 8 edges + 8 aggs + 4 cores
+    # every level is a complete bipartite stage
+    lv = t.link_levels()
+    assert int(lv["up"].sum()) == 8 * m + 8 * m  # edge->agg + agg->core
+    assert int(lv["down"].sum()) == 4 * 4 + 8 * m  # core->agg + agg->edge
+    # k=32 paper config: the canonical k^3/4 host count
+    assert build_fat_tree(32).n_nodes == 8192
+
+
+def test_fat_tree_small_matches_dragonfly_small_host_count():
+    assert fat_tree_small().n_nodes == 504
+
+
+def test_torus_structure():
+    t = build_torus((4, 3, 2), 2)
+    assert t.n_routers == 24 and t.n_nodes == 48
+    lv = t.link_levels()
+    # 2 directed links per router per dimension (size-2 dims get two
+    # parallel links)
+    assert all(int(v.sum()) == 48 for v in lv.values())
+    assert t.route_width == 2 + 2 + 1 + 1
+    # dims of size 1 drop their level entirely
+    t1 = build_torus((4, 4, 1), 2)
+    assert set(t1.link_levels()) == {"x", "y"}
+
+
+def test_torus_paper_matches_dragonfly_host_count():
+    t = get_fabric("torus", "paper")
+    assert t.n_nodes == 8448  # the paper's dragonfly host count
+
+
+@pytest.mark.parametrize("name", ALL_FABRICS)
+def test_link_table_invariants(name):
+    t = get_fabric(name, "small")
+    assert t.link_kind.shape == (t.n_links,)
+    assert t.link_bw.shape == (t.n_links,)
+    assert (t.link_bw > 0).all()
+    assert (0 <= t.link_dst_router).all()
+    assert (t.link_dst_router < t.n_routers).all()
+    assert (0 <= t.link_src_router).all()
+    assert (t.link_src_router < t.n_routers).all()
+    # terminal rows: link id == node id / N + node id
+    N = t.n_nodes
+    assert (t.link_kind[:N] == 0).all() and (t.link_kind[N:2 * N] == 1).all()
+    # levels partition the inter-router links
+    levels = t.link_levels()
+    total = sum(int(v.sum()) for v in levels.values())
+    assert total == t.n_links - 2 * N
+    # placement units tile the node space
+    assert t.place_routers * t.nodes_per_router == t.n_nodes
+    assert t.place_groups * t.nodes_per_group == t.n_nodes
+
+
+def test_fabric_keys_distinct():
+    keys = [fabric_key(get_fabric(n, "small")) for n in ALL_FABRICS]
+    assert len(set(keys)) == len(keys)
+    assert all(isinstance(k[0], str) for k in keys)
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(ValueError, match="valid fabrics"):
+        get_fabric("hypercube", "small")
+    with pytest.raises(ValueError, match="scales"):
+        get_fabric("torus", "huge")
+
+
+# ---------------------------------------------------------------------------
+# routing validity: fixed sweeps + hypothesis property, every fabric
+# ---------------------------------------------------------------------------
+
+def _assert_route_valid(t, src, dst, route):
+    """Route is a connected link chain src terminal-in -> dst terminal-out
+    over links that exist, using only the fabric's generic link tables."""
+    r = [int(x) for x in route if x >= 0]
+    assert r[0] == src  # terminal-in id == node id
+    assert r[-1] == t.n_nodes + dst
+    cur = src // t.nodes_per_router
+    for lid in r[1:-1]:
+        assert 2 * t.n_nodes <= lid < t.n_links, f"bad link id {lid}"
+        assert int(t.link_src_router[lid]) == cur, (lid, cur)
+        cur = int(t.link_dst_router[lid])
+    assert cur == dst // t.nodes_per_router
+
+
+@pytest.mark.parametrize("name", ALL_FABRICS)
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_routes_valid_fixed_sweep(name, adaptive):
+    t = get_fabric(name, "small")
+    T, fn = t.routing_tables()
+    rng = np.random.default_rng(7)
+    n = 48
+    src = rng.integers(0, t.n_nodes, n)
+    dst = rng.integers(0, t.n_nodes, n)
+    demand = jnp.asarray(
+        rng.uniform(0, 1e9, t.n_links + 1).astype(np.float32))
+    routes, hops = fn(
+        T, jnp.asarray(src), jnp.asarray(dst),
+        jnp.asarray(rng.integers(0, 2**31, n), jnp.int32), demand, adaptive)
+    routes = np.asarray(routes)
+    assert routes.shape == (n, t.route_width)
+    for i in range(n):
+        _assert_route_valid(t, int(src[i]), int(dst[i]), routes[i])
+        assert int(hops[i]) == int((routes[i] >= 0).sum())
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _SMALL = {name: get_fabric(name, "small") for name in ALL_FABRICS}
+
+    @pytest.mark.parametrize("name", ALL_FABRICS)
+    @given(data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_routes_valid_property(name, data):
+        """Every generated route starts at src's terminal-in link, ends at
+        dst's terminal-out link, and only traverses links that exist and
+        chain — under arbitrary demand, rand draws, and both routing
+        modes (back-fills the previously untested dragonfly invariant)."""
+        t = _SMALL[name]
+        T, fn = t.routing_tables()
+        src = data.draw(st.integers(0, t.n_nodes - 1), label="src")
+        dst = data.draw(st.integers(0, t.n_nodes - 1), label="dst")
+        rand = data.draw(st.integers(0, 2**31 - 1), label="rand")
+        adaptive = data.draw(st.booleans(), label="adaptive")
+        seed = data.draw(st.integers(0, 2**16), label="demand_seed")
+        demand = jnp.asarray(
+            np.random.default_rng(seed)
+            .uniform(0, 1e12, t.n_links + 1).astype(np.float32))
+        routes, hops = fn(
+            T, jnp.asarray([src]), jnp.asarray([dst]),
+            jnp.asarray([rand], jnp.int32), demand, adaptive)
+        _assert_route_valid(t, src, dst, np.asarray(routes)[0])
+
+
+# ---------------------------------------------------------------------------
+# placement across fabrics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_FABRICS)
+@pytest.mark.parametrize("policy", ["RN", "RR", "RG"])
+def test_placement_policies_on_every_fabric(name, policy):
+    t = get_fabric(name, "small")
+    sizes = [16, 8, 32]
+    out = place_jobs(t, sizes, policy, seed=3)
+    flat = np.concatenate(out)
+    assert flat.size == np.unique(flat).size  # disjoint
+    assert (flat < t.n_nodes).all()
+    if policy == "RG":
+        # group-aware: the whole mix packs into ceil(total / group)
+        # chosen groups (pods on fat-tree, planes on torus)
+        npg = t.nodes_per_group
+        groups = {int(n) // npg for n in flat}
+        assert len(groups) == -(-sum(sizes) // npg)
+
+
+def test_fat_tree_rg_is_pod_aware():
+    t = fat_tree_small()
+    out = place_jobs(t, [t.nodes_per_group], "RG", seed=0)[0]
+    pods = {int(n) // t.nodes_per_group for n in out}
+    assert len(pods) == 1  # a pod-sized job lands in exactly one pod
+
+
+def test_torus_rg_is_contiguous_block():
+    t = torus_small()
+    out = place_jobs(t, [t.nodes_per_group], "RG", seed=0)[0]
+    assert int(out.max()) - int(out.min()) == t.nodes_per_group - 1
+
+
+# ---------------------------------------------------------------------------
+# engine-cache anti-collision
+# ---------------------------------------------------------------------------
+
+def test_engine_cache_no_cross_fabric_collision():
+    """Two fabrics with identical (Jmax, Pmax, OPmax) envelopes get
+    distinct engine-cache entries — pinned with the cache counters."""
+    clear_engine_cache()
+    cap = EngineCapacity(Jmax=2, Pmax=4, OPmax=8)
+    engines = {}
+    for name in ("1d", "fat_tree", "torus"):
+        t = get_fabric(name, "small")
+        engines[name] = get_engine(t, capacity=cap, horizon_us=1000.0)
+    stats = engine_cache_stats()
+    assert stats["misses"] == 3 and stats["hits"] == 0
+    assert len({id(e) for e in engines.values()}) == 3
+    # same fabric + envelope again: a hit, not a new compile
+    t2 = get_fabric("torus", "small")
+    assert get_engine(t2, capacity=cap, horizon_us=1000.0) is engines["torus"]
+    stats = engine_cache_stats()
+    assert stats["misses"] == 3 and stats["hits"] == 1
+    clear_engine_cache()
+
+
+# ---------------------------------------------------------------------------
+# conservative backfill: FCFS vs EASY vs conservative ordering
+# ---------------------------------------------------------------------------
+
+def _policy_starts(policy):
+    jobs = [
+        QueuedJob(0, "J0", 9, 0.0, 10.0),
+        QueuedJob(1, "J1", 2, 1.0, 100.0),
+        QueuedJob(2, "J2", 8, 2.0, 10.0),
+        QueuedJob(3, "J3", 1, 3.0, 50.0),
+        QueuedJob(4, "J4", 1, 4.0, 5.0),
+    ]
+    res = simulate_queue(jobs, 10, 10, policy=policy)
+    return {jid: s["start_us"] for jid, s in res["spans"].items()}
+
+
+def test_policy_ordering_fcfs_easy_conservative():
+    fcfs = _policy_starts("fcfs")
+    easy = _policy_starts("easy")
+    cons = _policy_starts("conservative")
+    # conservative never delays any job past its FCFS start...
+    assert all(cons[j] <= fcfs[j] for j in fcfs)
+    # ...and still backfills: J4 (short, fits the spare node) jumps
+    assert cons[4] < fcfs[4]
+    # EASY protects only the head: J3's long backfill delays J2 (a
+    # non-head queued job) past both its FCFS and conservative starts
+    assert easy[2] > cons[2] == fcfs[2]
+    # EASY backfills more aggressively than conservative (J3 early)
+    assert easy[3] < cons[3]
+
+
+def test_conservative_reservation_never_delayed():
+    """Recomputing reservations at later events only moves starts
+    earlier: no job starts after its first-computed reservation."""
+    rng = np.random.default_rng(5)
+    jobs = [
+        QueuedJob(i, f"j{i}", int(rng.integers(1, 9)),
+                  float(rng.uniform(0, 50)), float(rng.uniform(5, 40)))
+        for i in range(12)
+    ]
+    res = simulate_queue(jobs, 10, 4, policy="conservative")
+    assert len(res["spans"]) == 12
+    first_resv = {}
+    for r in res["reservations"]:
+        first_resv.setdefault(r.jid, r.shadow_us)
+    for jid, reserved in first_resv.items():
+        assert res["spans"][jid]["start_us"] <= reserved + 1e-9
+
+
+def test_conservative_overrun_estimate_does_not_free_resources():
+    """A running job past its runtime estimate still holds its nodes and
+    slot: conservative must not start a job that doesn't actually fit
+    (regression: expired estimates were folded into the free-now base,
+    crashing the admission path downstream)."""
+    from repro.sched.queue import PendingQueue
+
+    q = PendingQueue(policy="conservative")
+    q.push(QueuedJob(0, "big", 8, 0.0, 10.0))
+    # the only running job's estimate expired 500us ago
+    starts, resv = q.select(
+        now=1000.0, free_nodes=0, free_slots=0, running=[(500.0, 8)])
+    assert starts == []
+    assert resv is not None and resv.jid == 0
+    assert resv.shadow_us > 1000.0
+
+
+def test_conservative_backfills_across_reservation_boundary():
+    """A release and a reservation hold at the same instant net out:
+    a short job that fits the spare nodes for its whole window starts
+    now (regression: same-timestamp holds were folded before releases,
+    showing a phantom dip that degraded conservative toward FCFS)."""
+    jobs = [
+        QueuedJob(0, "J0", 4, 0.0, 100.0),  # holds 4 of 6 until t=100
+        QueuedJob(1, "J1", 4, 1.0, 100.0),  # reserved at exactly t=100
+        QueuedJob(2, "J2", 2, 2.0, 200.0),  # fits the 2 spare nodes
+    ]
+    res = simulate_queue(jobs, 6, 6, policy="conservative")
+    assert res["spans"][2]["start_us"] == 2.0
+
+
+def test_conservative_through_trace_study():
+    """TraceStudy.policies exposes conservative end-to-end (scheduler +
+    engine windows), and all jobs complete under every policy."""
+    from repro import union
+    from repro.sched.trace import CatalogApp, synthetic_trace
+
+    pp = ("For 4 repetitions {\n"
+          " task 0 sends a 1024 byte message to task 1 then\n"
+          " task 1 sends a 1024 byte message to task 0 }")
+    trace = synthetic_trace(
+        6, arrival="poisson", mean_gap_us=400.0, seed=0,
+        catalog=[CatalogApp(app="pp", ranks=2, est_runtime_us=1000.0,
+                            source=pp)],
+        slots=2, tick_us=5.0, horizon_ms=60_000.0, pool_size=512,
+        name="cons-trace")
+    res = union.run(union.Experiment(
+        name="cons", trace=union.TraceStudy(
+            trace=trace, policies=["fcfs", "easy", "conservative"])))
+    assert {c.policy for c in res.cells} == {"fcfs", "easy", "conservative"}
+    for c in res.cells:
+        assert c.report["completed"] == 6, c.policy
+
+
+# ---------------------------------------------------------------------------
+# the cross-fabric experiment grid (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+PP = ("For 4 repetitions {\n"
+      " task 0 sends a 1024 byte message to task 1 then\n"
+      " task 1 sends a 1024 byte message to task 0 }")
+
+
+def test_cross_fabric_experiment_grid():
+    """One job mix, three fabrics, one experiment: per-fabric latency and
+    comm-time summaries in a single Results artifact."""
+    from repro import union
+    from repro.union.scenario import Scenario, ScenarioJob
+
+    sc = Scenario(
+        name="xfab",
+        jobs=[ScenarioJob(app="pp0", source=PP, ranks=2),
+              ScenarioJob(app="pp1", source=PP, ranks=2, start_us=200.0)],
+        placement="RN", tick_us=2.0, horizon_ms=50.0, pool_size=256)
+    res = union.run(union.Experiment(
+        name="xfab", scenarios=[sc], members=2,
+        grid=union.StudyGrid(fabrics=["1d", "fat_tree", "torus"])))
+    assert len(res.cells) == 6
+    assert {c.fabric for c in res.cells} == {"1d", "fat_tree", "torus"}
+    keys = set(res.summary["scenario_studies"])
+    assert keys == {"xfab/1d/RN/ADP", "xfab/fat_tree/RN/ADP",
+                    "xfab/torus/RN/ADP"}
+    for key, summary in res.summary["scenario_studies"].items():
+        assert summary["all_done"] and summary["dropped_total"] == 0
+        assert summary["apps"]["pp0"]["avg_latency_us"]["mean"] > 0
+        assert summary["apps"]["pp0"]["max_comm_ms"]["mean"] >= 0
+    # per-fabric level classification reaches the per-member reports
+    levels = {c.fabric: c.report["link_load"]["levels"] for c in res.cells}
+    assert levels["1d"] == ["local", "global"]
+    assert levels["fat_tree"] == ["up", "down"]
+    assert levels["torus"] == ["x", "y", "z"]
+    for c in res.cells:
+        assert "terminal" in c.report["link_utilization"]
+    # fabric column lands in the tidy records
+    assert {r["fabric"] for r in res.records()} == {
+        "1d", "fat_tree", "torus"}
+
+
+def test_grid_fabrics_validation_lists_fabrics():
+    from repro import union
+    from repro.union.validate import SpecError
+
+    with pytest.raises(SpecError, match="valid fabrics"):
+        union.Experiment.from_dict(dict(
+            name="bad",
+            scenarios=[dict(name="s", jobs=[dict(app="pp", source=PP,
+                                                 ranks=2)])],
+            grid=dict(fabrics=["moebius"])))
+
+
+def test_scenario_topo_validation_lists_fabrics():
+    from repro.union.scenario import Scenario, ScenarioJob
+    from repro.union.validate import SpecError
+
+    with pytest.raises(SpecError, match="valid fabrics"):
+        Scenario.from_dict(dict(
+            name="bad", topo="moebius",
+            jobs=[dict(app="pp", source=PP, ranks=2)]))
