@@ -100,14 +100,46 @@ def enable_host_devices(n: int) -> None:
         )
 
 
+def _check_entry(entry, where="new entry"):
+    """The BENCH_union.json record contract: every record names its
+    bench and carries a provenance block (commit, jax, backend)."""
+    if not isinstance(entry, dict):
+        raise ValueError(f"BENCH_union.json {where}: record must be an "
+                         f"object, got {type(entry).__name__}")
+    if not isinstance(entry.get("bench"), str) or not entry["bench"]:
+        raise ValueError(
+            f"BENCH_union.json {where}: missing/empty 'bench' name")
+    if not isinstance(entry.get("provenance"), dict):
+        raise ValueError(
+            f"BENCH_union.json {where}: missing 'provenance' block "
+            "(git_commit/jax_version/backend)")
+
+
+def load_bench(path=None, backfill=False):
+    """Load + schema-check BENCH_union.json records.
+
+    With ``backfill``, legacy records missing a ``provenance`` block get
+    a stub marked ``backfilled`` (their origin predates the contract and
+    is unrecoverable); without it, such records fail the check.
+    """
+    path = path or os.path.join(ROOT, "BENCH_union.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        entries = [entries]
+    for i, e in enumerate(entries):
+        if backfill and isinstance(e, dict) and "provenance" not in e:
+            e["provenance"] = dict(backfilled=True)
+        _check_entry(e, where=f"record {i}")
+    return entries
+
+
 def _append_entry(entry):
+    _check_entry(entry)
     path = os.path.join(ROOT, "BENCH_union.json")
-    existing = []
-    if os.path.exists(path):
-        with open(path) as f:
-            existing = json.load(f)
-            if not isinstance(existing, list):
-                existing = [existing]
+    existing = load_bench(path, backfill=True)
     existing.append(entry)
     with open(path, "w") as f:
         json.dump(existing, f, indent=1, default=float)

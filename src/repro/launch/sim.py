@@ -18,6 +18,7 @@ import json
 import os
 from typing import Dict, Optional
 
+from repro.obs import log
 from repro.union.scenario import MIXES, MIX_HAS_UR, UR_RANKS, mix_scenario  # noqa: F401 (re-export)
 
 
@@ -65,7 +66,13 @@ def main():
     ap.add_argument("--stagger-us", type=float, default=0.0,
                     help="stagger job arrivals by this offset per job index")
     ap.add_argument("--out", default="results/netsim")
+    ap.add_argument("-v", "--verbose", action="count", default=0,
+                    help="diagnostic logging (-v prints a report excerpt)")
     args = ap.parse_args()
+
+    from repro.obs import set_verbosity
+
+    set_verbosity(args.verbose)
 
     os.makedirs(args.out, exist_ok=True)
     rep = run_sim(
@@ -79,8 +86,9 @@ def main():
     with open(path, "w") as f:
         json.dump(rep, f, indent=1, default=float)
     print(f"wrote {path}")
-    print(json.dumps({k: rep[k] for k in ("virtual_time_ms", "comm_time", "link_load")},
-                     indent=1, default=float)[:1200])
+    log.info("%s", json.dumps(
+        {k: rep[k] for k in ("virtual_time_ms", "comm_time", "link_load")},
+        indent=1, default=float)[:1200])
 
 
 if __name__ == "__main__":

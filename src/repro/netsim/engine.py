@@ -59,6 +59,9 @@ from repro.core.skeleton import OP, SkeletonProgram
 from repro.kernels import ops as KOPS
 from repro.netsim.config import NetConfig
 from repro.netsim.fabric import Fabric, fabric_key, routing_tables
+from repro.obs.probes import (
+    ProbeConfig, ProbeState, init_probes, sample_probes,
+)
 
 MAXE = 8  # max emissions per rank per (op, round)
 
@@ -139,6 +142,10 @@ class SimState(NamedTuple):
     # as long as they fit the engine's (Jmax, Pmax, OPmax) envelope.
     jobs: JobTable
     ur_nodes: Optional[jnp.ndarray]  # (Pu,) int32 (None when no UR source)
+    # sim-plane probe rings (repro.obs): None (an empty pytree subtree,
+    # like ``ur``) unless the engine was built with a ProbeConfig — the
+    # unprobed state layout is unchanged, so goldens stay bit-identical.
+    probes: Optional[ProbeState] = None
 
 
 @dataclass
@@ -344,6 +351,7 @@ def build_engine(
     job_start_us: Optional[Sequence[float]] = None,  # per job arrival offsets
     capacity: Optional[EngineCapacity] = None,
     use_pallas: Optional[bool] = None,
+    probes: Optional[ProbeConfig] = None,
 ):
     """Returns an :class:`Engine` — unpacks as ``(init_state, run, tick)``;
     ``run``: state -> final state (jit); ``engine.run_window`` additionally
@@ -367,6 +375,12 @@ def build_engine(
 
     ``use_pallas`` routes the drain tick through the Pallas kernel
     (default: only on TPU backends; the pure-jnp fused path elsewhere).
+
+    ``probes`` compiles in the sim-plane observation rings
+    (:mod:`repro.obs.probes`): per-level link utilization, per-app
+    in-flight latency, pool occupancy, and queue depth sampled every
+    ``probes.every`` live ticks. A static choice — ``probes=None``
+    builds an engine whose tick contains no probe code at all.
     """
     net = net or NetConfig()
     # the fabric's one dispatch point: its gather tables + vectorized
@@ -405,6 +419,20 @@ def build_engine(
         [jnp.where(link_ok, jnp.asarray(topo.link_bw, jnp.float32), 0.0),
          jnp.ones((1,), jnp.float32)]
     )
+
+    # probe constants (sim-plane observability): link -> level one-hot and
+    # each level's aggregate healthy capacity, baked at build time.
+    if probes is not None:
+        _lm = np.stack(
+            [np.asarray(m, np.float32) for m in topo.link_levels().values()],
+            axis=1,
+        )  # (L, n_levels)
+        probe_level_mask = jnp.asarray(_lm)
+        probe_level_bw = jnp.asarray(
+            (np.asarray(topo.link_bw, np.float32)
+             * np.asarray(link_ok))[:, None] * _lm
+        ).sum(axis=0)  # (n_levels,)
+        probe_n_levels = _lm.shape[1]
 
     # static candidate-index patterns for the stacked injection pass:
     # candidates are job-major, rank-major, emission-minor — the same order
@@ -904,12 +932,26 @@ def build_engine(
             all_done_m & jnp.isfinite(jnp.asarray(t_cap, jnp.float32))
         )
         t_new = jnp.where(idle, jnp.maximum(t + dt, skip_to), t + dt)
+        t_out = jnp.where(live_m, t_new, t)
+
+        # --- 8. sim-plane probes (compiled in only when requested) ---
+        probes_st = state.probes
+        if probes is not None:
+            probes_st = sample_probes(
+                probes_st, probes,
+                t_new=t_out, live_m=live_m,
+                link_bytes=metrics.link_bytes,
+                pool_active=pool.active, pool_job=pool.job,
+                pool_inject_t=pool.inject_t, free_top=pool.free_top,
+                level_mask=probe_level_mask, level_bw=probe_level_bw,
+                n_apps=n_apps, pool_size=M,
+            )
 
         return SimState(
-            t=jnp.where(live_m, t_new, t), vms=vms, ur=ur_state, pool=pool,
+            t=t_out, vms=vms, ur=ur_state, pool=pool,
             metrics=metrics,
             rng=jnp.where(live_m, rng2 + jnp.uint32(1), rng),
-            jobs=jt, ur_nodes=state.ur_nodes,
+            jobs=jt, ur_nodes=state.ur_nodes, probes=probes_st,
         )
 
     # ------------------------------------------------------------------
@@ -1001,6 +1043,10 @@ def build_engine(
             t=jnp.float32(0.0), vms=vms, ur=ur_state, pool=pool,
             metrics=metrics, rng=jnp.uint32(seed),
             jobs=table, ur_nodes=ur_nodes,
+            probes=(
+                init_probes(probes, probe_n_levels, n_apps)
+                if probes is not None else None
+            ),
         )
 
     def all_done(state: SimState):
@@ -1074,7 +1120,7 @@ def build_engine(
 # ---------------------------------------------------------------------------
 
 _ENGINE_CACHE: Dict[Tuple, Engine] = {}
-_ENGINE_CACHE_STATS = {"hits": 0, "misses": 0}
+_ENGINE_CACHE_STATS = {"hits": 0, "misses": 0, "builds": 0}
 
 
 def engine_cache_key(
@@ -1088,6 +1134,7 @@ def engine_cache_key(
     capacity: EngineCapacity,
     link_down: Optional[np.ndarray] = None,
     use_pallas: Optional[bool] = None,
+    probes: Optional[ProbeConfig] = None,
 ) -> Tuple:
     """Everything baked into a compiled engine besides the job tables.
 
@@ -1095,7 +1142,10 @@ def engine_cache_key(
     family name plus defining parameters — so two fabrics with identical
     capacity envelopes never share a compiled engine. The UR source
     contributes only its *shape* (rank count and traffic parameters) —
-    its placement is overridable per member at init time.
+    its placement is overridable per member at init time. ``probes`` is
+    part of the key: a probed engine is a separate compiled entry, so
+    requesting probes never perturbs the unprobed engines other callers
+    hold.
     """
     net = net or NetConfig()
     ur_key = None if ur is None else (
@@ -1109,7 +1159,7 @@ def engine_cache_key(
     return (
         fabric_key(topo), routing.upper() in ("ADP", "ADAPTIVE"), ur_key,
         net, int(pool_size or net.pool_size), float(horizon_us), capacity,
-        down_key, use_pallas,
+        down_key, use_pallas, probes,
     )
 
 
@@ -1124,6 +1174,7 @@ def get_engine(
     capacity: EngineCapacity,
     link_down: Optional[np.ndarray] = None,
     use_pallas: Optional[bool] = None,
+    probes: Optional[ProbeConfig] = None,
 ) -> Engine:
     """A compiled engine from the process-wide cache (compile on miss).
 
@@ -1136,17 +1187,18 @@ def get_engine(
     key = engine_cache_key(
         topo, routing=routing, ur=ur, net=net, pool_size=pool_size,
         horizon_us=horizon_us, capacity=capacity, link_down=link_down,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, probes=probes,
     )
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
         _ENGINE_CACHE_STATS["hits"] += 1
         return eng
     _ENGINE_CACHE_STATS["misses"] += 1
+    _ENGINE_CACHE_STATS["builds"] += 1
     eng = build_engine(
         topo, [], routing=routing, ur=ur, net=net, pool_size=pool_size,
         horizon_us=horizon_us, link_down=link_down, capacity=capacity,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, probes=probes,
     )
     _ENGINE_CACHE[key] = eng
     return eng
@@ -1161,7 +1213,7 @@ def clear_engine_cache() -> None:
     """Drop every cached engine (and its jit executables) and zero the
     counters — test isolation and long-lived-process memory control."""
     _ENGINE_CACHE.clear()
-    _ENGINE_CACHE_STATS.update(hits=0, misses=0)
+    _ENGINE_CACHE_STATS.update(hits=0, misses=0, builds=0)
 
 
 # ---------------------------------------------------------------------------

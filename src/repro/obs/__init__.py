@@ -1,0 +1,38 @@
+"""repro.obs — two-plane observability for the simulation pipeline.
+
+**Host plane** (:mod:`repro.obs.spans` + :mod:`repro.obs.export`): a
+process-wide span tracer instrumenting `union.run` end-to-end — planner
+lowering, engine-cache gets, cold/warm engine execution, windowed
+scheduler loops — exported as Chrome trace-event JSON (Perfetto) or a
+structured JSONL run log, plus the leveled run logger ``log`` that
+replaces stray prints across the CLI/scheduler/launch layers.
+
+**Sim plane** (:mod:`repro.obs.probes`): fixed-size ring buffers inside
+``SimState`` sampling per-level link utilization, per-app in-flight
+latency, pool occupancy, and queue depth every K live ticks — compiled
+in only when a :class:`ProbeConfig` is requested, so the unprobed engine
+stays bit-identical to its goldens.
+
+See ``docs/obs.md`` for the span taxonomy and probe buffer layout.
+"""
+from repro.obs.spans import (  # noqa: F401
+    Tracer, get_tracer, enable, disable, tracing,
+    span, counter, summarize,
+)
+from repro.obs.export import (  # noqa: F401
+    log, get_logger, set_verbosity, log_to_jsonl,
+    chrome_events, write_chrome_trace, write_jsonl,
+)
+from repro.obs.probes import (  # noqa: F401
+    ProbeConfig, ProbeState, init_probes, sample_probes,
+    ring_order, probe_timelines,
+)
+
+__all__ = [
+    "Tracer", "get_tracer", "enable", "disable", "tracing",
+    "span", "counter", "summarize",
+    "log", "get_logger", "set_verbosity", "log_to_jsonl",
+    "chrome_events", "write_chrome_trace", "write_jsonl",
+    "ProbeConfig", "ProbeState", "init_probes", "sample_probes",
+    "ring_order", "probe_timelines",
+]

@@ -38,6 +38,7 @@ from repro.netsim.engine import (
 )
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import get_topology
+from repro.obs import log, span
 from repro.sched.queue import PendingQueue, QueuedJob
 from repro.sched.trace import Trace, TraceJob
 from repro.union import manager as MGR
@@ -153,6 +154,7 @@ def build_sched_engine(
     trace: Trace,
     slots: Optional[int] = None,
     engine_cache: Optional[Dict] = None,
+    probes=None,
 ):
     """Compile the scheduler's engine for a trace: one envelope sized
     ``Jmax=slots`` serves every window. Returns ``(engine, topo,
@@ -164,13 +166,15 @@ def build_sched_engine(
     config), so campaigns over many synthetic-trace seeds whose draws
     resolve to the same envelope pay one compile — and share jits with
     scenario campaigns at the same envelope. The historical
-    ``engine_cache`` dict argument is accepted but ignored."""
+    ``engine_cache`` dict argument is accepted but ignored. ``probes``
+    (a :class:`repro.obs.ProbeConfig`) selects the probed engine
+    variant — its own cache entry, the unprobed one untouched."""
     del engine_cache  # superseded by the process-wide engine cache
     slots = slots or trace.slots
     topo, resolved, cap, net = _resolve_trace(trace, slots)
     eng = get_engine(
         topo, routing=trace.routing, net=net, pool_size=net.pool_size,
-        horizon_us=trace.horizon_ms * 1000.0, capacity=cap,
+        horizon_us=trace.horizon_ms * 1000.0, capacity=cap, probes=probes,
     )
     return eng, topo, resolved, net
 
@@ -333,8 +337,15 @@ def _run_trace_impl(
         t_stop = (
             arrivals[ai].arrival_us if ai < len(arrivals) else np.inf
         )
-        state = eng.run_window(state, np.float32(t_stop))
+        with span("sched.window", cat="sched", window=windows,
+                  t_now_us=t_now, queued=len(queue.jobs),
+                  running=len(running)):
+            state = eng.run_window(state, np.float32(t_stop))
         windows += 1
+        log.debug(
+            "sched window %d: t=%.1fus queued=%d running=%d draining=%d",
+            windows, t_now, len(queue.jobs), len(running), len(draining),
+        )
 
     # horizon-capped leftovers: mark incomplete (still-running, queued,
     # and arrivals the horizon cut off before they ever reached the queue)

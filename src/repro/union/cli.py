@@ -37,7 +37,9 @@ import glob
 import os
 from typing import Dict, List, Optional
 
+from repro import obs
 from repro.netsim.fabric import fabric_names
+from repro.obs import log
 from repro.union import experiment as EXP
 from repro.union import planner as PLN
 from repro.union import report as REP
@@ -142,6 +144,9 @@ def _run_experiment(args, exp: EXP.Experiment,
                     tag: Optional[str] = None) -> None:
     from repro import union
 
+    if args.probes:
+        exp.probes = args.probes
+        exp.probe_every = args.probe_every
     if args.plan:
         print(PLN.plan(exp).describe())
         return
@@ -150,6 +155,11 @@ def _run_experiment(args, exp: EXP.Experiment,
     print(REP.format_results(res))
     _print_interference(res)
     _save_results(res, args.out, tag or f"experiment__{exp.name}")
+    if args.profile:
+        obs.write_chrome_trace(args.profile)
+        base, _ = os.path.splitext(args.profile)
+        obs.write_jsonl(base + ".jsonl")
+        print(f"wrote trace {args.profile} (+ {base}.jsonl)")
 
 
 def _attach_interference(args, exp: EXP.Experiment, res: EXP.Results) -> None:
@@ -261,6 +271,21 @@ def main(argv=None) -> None:
     ap.add_argument("--horizon-ms", type=float, default=None)
     ap.add_argument("--tick-us", type=float, default=None)
     ap.add_argument("--out", default="results/union")
+    ap.add_argument("--profile", metavar="TRACE.json", default=None,
+                    help="enable the host-plane span tracer (repro.obs)"
+                    " and write a Chrome trace-event JSON here (open in"
+                    " Perfetto / chrome://tracing), plus a .jsonl run log"
+                    " beside it")
+    ap.add_argument("--probes", type=int, default=0, metavar="N",
+                    help="enable sim-plane probes: N-sample ring buffers"
+                    " of per-level link utilization, in-flight latency,"
+                    " pool occupancy, and queue depth per cell (a probed"
+                    " engine variant — its own compile cache entry)")
+    ap.add_argument("--probe-every", type=int, default=8, metavar="K",
+                    help="probe sampling period in engine ticks")
+    ap.add_argument("-v", "--verbose", action="count", default=0,
+                    help="diagnostic logging (-v info, -vv debug; default"
+                    " warnings only)")
     ap.add_argument("--emit", metavar="PATH", default=None,
                     help="write the resolved scenario (or experiment) spec"
                     " to PATH and exit")
@@ -271,6 +296,9 @@ def main(argv=None) -> None:
                     help="enumerate builtin mixes, catalog apps, and saved"
                     " scenario/experiment specs, then exit")
     args = ap.parse_args(argv)
+    obs.set_verbosity(args.verbose)
+    if args.profile:
+        obs.enable()
 
     if args.list_specs:
         _list_specs()
@@ -285,7 +313,7 @@ def main(argv=None) -> None:
             exp.to_json(args.emit)
             print(f"wrote experiment spec to {args.emit}")
             return
-        print(f"=== experiment: {exp.name} ===")
+        log.info("experiment: %s", exp.name)
         _run_experiment(args, exp, tag=f"experiment__{exp.name}"
                         f"_s{exp.base_seed}")
         return
@@ -298,8 +326,8 @@ def main(argv=None) -> None:
             trace=study, base_seed=args.seed,
         )
         seeds = study.seed_list(args.seed)
-        print(f"=== trace campaign: {exp.name} × {len(seeds)} seed(s) × "
-              f"policies {args.sched} ===")
+        log.info("trace campaign: %s x %d seed(s) x policies %s",
+                 exp.name, len(seeds), args.sched)
         _run_experiment(
             args, exp,
             tag=f"trace__{exp.name}__{'+'.join(args.sched)}_s{args.seed}")
@@ -325,8 +353,9 @@ def main(argv=None) -> None:
                      "with multiple scenarios (ragged campaigns); run the "
                      "scenarios separately for baselines")
         names = "+".join(s.name for s in scenarios)
-        print(f"=== ragged campaign: {names} × {args.members} members each "
-              f"({'batched' if not args.sequential else 'sequential'}) ===")
+        log.info("ragged campaign: %s x %d members each (%s)", names,
+                 args.members,
+                 "batched" if not args.sequential else "sequential")
         grid = EXP.StudyGrid()
         if args.topo and len(args.topo) > 1:
             grid = EXP.StudyGrid(fabrics=list(dict.fromkeys(args.topo)))
@@ -366,8 +395,8 @@ def main(argv=None) -> None:
         base_seed=args.seed, grid=grid, vmapped=not args.sequential,
         strict=args.strict, arrival_jitter_us=args.arrival_jitter_us,
     )
-    print(f"=== campaign: {sc.name} × {args.members} members "
-          f"({'vmapped' if not args.sequential else 'sequential'}) ===")
+    log.info("campaign: %s x %d members (%s)", sc.name, args.members,
+             "vmapped" if not args.sequential else "sequential")
     _run_experiment(
         args, exp,
         tag=f"{sc.name}__{sc.topo}__{sc.placement}__{sc.routing}"

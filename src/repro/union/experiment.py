@@ -53,6 +53,7 @@ from repro.netsim.engine import (
     member_state,
     stack_members,
 )
+from repro.obs import ProbeConfig, get_tracer, span, summarize, tracing
 from repro.union import manager as MGR
 from repro.union.scenario import Scenario, load_scenario
 from repro.union.seeds import engine_seed
@@ -66,7 +67,9 @@ from repro.union.validate import (
 
 # v2: cells carry a `fabric` coordinate, scenario_studies group keys are
 # name/fabric/placement/routing, reports include link_utilization
-SCHEMA_VERSION = 2
+# v3: results carry a `telemetry` block (spans summary + engine-cache
+# counters); probed runs add per-cell `report["probes"]` timelines
+SCHEMA_VERSION = 3
 
 
 def _resolve_spec_path(spec: str, base_dir: Optional[str]) -> str:
@@ -267,6 +270,17 @@ class Experiment:
     arrival_jitter_us: float = 0.0
     vmapped: bool = True
     strict: bool = False
+    # sim-plane probes (repro.obs): probes > 0 runs every cell on the
+    # probed engine variant with ring buffers of that many samples,
+    # taken every `probe_every` live ticks. 0 (default) = the unprobed
+    # engine, bit-identical to the goldens.
+    probes: int = 0
+    probe_every: int = 8
+
+    def probe_config(self) -> Optional[ProbeConfig]:
+        if not self.probes:
+            return None
+        return ProbeConfig(samples=self.probes, every=self.probe_every)
 
     def validate(self) -> None:
         if not self.scenarios and self.trace is None:
@@ -276,6 +290,10 @@ class Experiment:
             raise ValueError("experiment needs members >= 1")
         if self.arrival_jitter_us < 0:
             raise ValueError("arrival_jitter_us must be >= 0")
+        if self.probes < 0:
+            raise ValueError("probes must be >= 0 (ring-buffer samples)")
+        if self.probe_every < 1:
+            raise ValueError("probe_every must be >= 1 (ticks)")
         for sc in self.scenarios:
             sc.validate()
         self.grid.validate()
@@ -304,6 +322,10 @@ class Experiment:
             d["vmapped"] = False
         if self.strict:
             d["strict"] = True
+        if self.probes:
+            d["probes"] = self.probes
+            if self.probe_every != 8:
+                d["probe_every"] = self.probe_every
         return d
 
     @classmethod
@@ -418,6 +440,11 @@ class Results:
     wall_s: float = 0.0
     engine_cache: Dict[str, int] = field(default_factory=dict)
     summary: Dict[str, Any] = field(default_factory=dict)
+    # v3: host-plane telemetry (repro.obs) — spans summary for this run
+    # (empty unless tracing was enabled), process-wide engine-cache
+    # counters, and the probe configuration that produced any per-cell
+    # `report["probes"]` timelines.
+    telemetry: Dict[str, Any] = field(default_factory=dict)
     schema_version: int = SCHEMA_VERSION
 
     @property
@@ -440,6 +467,7 @@ class Results:
             wall_s=self.wall_s,
             engine_cache=dict(self.engine_cache),
             summary=self.summary,
+            telemetry=self.telemetry,
             cells=[c.to_dict() for c in self.cells],
         )
 
@@ -456,6 +484,7 @@ class Results:
             wall_s=d.get("wall_s", 0.0),
             engine_cache=d.get("engine_cache", {}),
             summary=d.get("summary", {}),
+            telemetry=d.get("telemetry", {}),
         )
 
     def save(self, path: str) -> None:
@@ -475,42 +504,53 @@ class Results:
 def _exec_batched(node, exp: Experiment) -> List[CellResult]:
     """One engine from the shared cache, one batched call per node."""
     host = node.host
-    eng = get_engine(
-        host.topo, routing=host.scenario.routing, ur=host.ur, net=host.net,
-        pool_size=host.pool_size, horizon_us=host.horizon_us,
-        capacity=node.capacity,
-    )
-    inits = [
-        eng.init_state(
-            seed=engine_seed(cell.seed),
-            placements=cell.rs.placements(cell.seed),
-            start_us=cell.start_us,
-            jobs_override=cell.rs.jobs,
+    stats0 = engine_cache_stats()
+    with span("engine.cache_get", cat="engine",
+              fabric=host.scenario.topo) as sp:
+        eng = get_engine(
+            host.topo, routing=host.scenario.routing, ur=host.ur,
+            net=host.net, pool_size=host.pool_size,
+            horizon_us=host.horizon_us, capacity=node.capacity,
+            probes=exp.probe_config(),
         )
-        for cell in node.cells
-    ]
+        cold = engine_cache_stats()["misses"] > stats0["misses"]
+        sp.set(hit=not cold)
+    with span("engine.init", cat="engine", cells=len(node.cells)):
+        inits = [
+            eng.init_state(
+                seed=engine_seed(cell.seed),
+                placements=cell.rs.placements(cell.seed),
+                start_us=cell.start_us,
+                jobs_override=cell.rs.jobs,
+            )
+            for cell in node.cells
+        ]
     n = len(node.cells)
     t0 = time.time()
-    if exp.vmapped:
-        D = jax.local_device_count()
-        if D > 1 and n % D == 0:
-            # shard members across XLA devices (CPU host devices or
-            # accelerator cores): each device runs an (n/D)-batch.
-            chunk = n // D
-            sharded = stack_members([
-                stack_members(inits[d * chunk:(d + 1) * chunk])
-                for d in range(D)
-            ])
-            final = jax.block_until_ready(eng.prun(sharded))
-            states = [
-                member_state(member_state(final, i // chunk), i % chunk)
-                for i in range(n)
-            ]
+    # cold = this node built its engine, so the run below pays the jit
+    # compile; warm = the executable already existed in this process.
+    with span("engine.run", cat="engine", members=n, cold=cold,
+              vmapped=exp.vmapped):
+        if exp.vmapped:
+            D = jax.local_device_count()
+            if D > 1 and n % D == 0:
+                # shard members across XLA devices (CPU host devices or
+                # accelerator cores): each device runs an (n/D)-batch.
+                chunk = n // D
+                sharded = stack_members([
+                    stack_members(inits[d * chunk:(d + 1) * chunk])
+                    for d in range(D)
+                ])
+                final = jax.block_until_ready(eng.prun(sharded))
+                states = [
+                    member_state(member_state(final, i // chunk), i % chunk)
+                    for i in range(n)
+                ]
+            else:
+                final = jax.block_until_ready(eng.run(stack_members(inits)))
+                states = [member_state(final, i) for i in range(n)]
         else:
-            final = jax.block_until_ready(eng.run(stack_members(inits)))
-            states = [member_state(final, i) for i in range(n)]
-    else:
-        states = [jax.block_until_ready(eng.run(s)) for s in inits]
+            states = [jax.block_until_ready(eng.run(s)) for s in inits]
     wall = time.time() - t0
 
     out = []
@@ -535,6 +575,7 @@ def _exec_windowed(node, exp: Experiment) -> List[CellResult]:
     from repro.union.report import sched_summary
 
     study = node.study
+    probes = exp.probe_config()
     out = []
     engine = None
     trace = None
@@ -542,17 +583,34 @@ def _exec_windowed(node, exp: Experiment) -> List[CellResult]:
     for cell in node.cells:
         if trace is None or (study.redraws_per_seed and cell.seed != last_seed):
             trace = study.trace_for(cell.seed)
-            engine = build_sched_engine(trace, study.slots)
+            with span("engine.cache_get", cat="engine", trace=trace.name):
+                engine = build_sched_engine(trace, study.slots,
+                                            probes=probes)
             last_seed = cell.seed
-        res = _run_trace_impl(
-            trace, policy=cell.policy, slots=study.slots, seed=cell.seed,
-            engine=engine,
-        )
+        with span("sched.trace", cat="sched", trace=trace.name,
+                  policy=cell.policy, seed=cell.seed) as sp:
+            res = _run_trace_impl(
+                trace, policy=cell.policy, slots=study.slots,
+                seed=cell.seed, engine=engine,
+                collect_state=probes is not None,
+            )
+            sp.set(windows=res.windows, jobs=len(res.records))
+        rep = sched_summary(res, tau_us=study.tau_us)
+        if probes is not None and res.final_state is not None:
+            from repro.obs import probe_timelines
+
+            # trace cells recycle job slots, so probe app-axis rows are
+            # *slots*, not jobs — label them as such.
+            topo = engine[1]
+            rep["probes"] = probe_timelines(
+                res.final_state.probes, list(topo.link_levels()),
+                [f"slot{j}" for j in range(res.slots)],
+            )
         out.append(CellResult(
             kind="trace", name=trace.name, seed=cell.seed,
             placement=trace.placement, routing=trace.routing,
             policy=cell.policy, fabric=trace.topo,
-            report=sched_summary(res, tau_us=study.tau_us),
+            report=rep,
         ))
     return out
 
@@ -569,33 +627,49 @@ def run(experiment, plan=None) -> Results:
     from repro.union import planner as PLN
     from repro.union.report import results_summary
 
-    if plan is None:
-        plan = PLN.plan(experiment)
-    stats0 = engine_cache_stats()
-    t0 = time.time()
-    # scenario cells come back bucket-grouped; restore study order via the
-    # planner's cell ordinals, then append trace cells.
-    indexed: List = []
-    trace_cells: List[CellResult] = []
-    for node in plan.nodes:
-        if node.kind == "batched":
-            indexed.extend(_exec_batched(node, plan.experiment))
-        elif node.kind == "windowed":
-            trace_cells.extend(_exec_windowed(node, plan.experiment))
-        else:
-            raise ValueError(f"unknown plan node kind {node.kind!r}")
-    cells = [c for _, c in sorted(indexed, key=lambda p: p[0])] + trace_cells
-    stats1 = engine_cache_stats()
-    res = Results(
-        experiment=plan.experiment.to_dict(),
-        cells=cells,
-        wall_s=time.time() - t0,
-        engine_cache=dict(
-            hits=stats1["hits"] - stats0["hits"],
-            misses=stats1["misses"] - stats0["misses"],
+    ev0 = get_tracer().n_events
+    with span("union.run", cat="run",
+              experiment=getattr(experiment, "name", None)):
+        if plan is None:
+            plan = PLN.plan(experiment)
+        stats0 = engine_cache_stats()
+        t0 = time.time()
+        # scenario cells come back bucket-grouped; restore study order via
+        # the planner's cell ordinals, then append trace cells.
+        indexed: List = []
+        trace_cells: List[CellResult] = []
+        for node in plan.nodes:
+            if node.kind == "batched":
+                indexed.extend(_exec_batched(node, plan.experiment))
+            elif node.kind == "windowed":
+                trace_cells.extend(_exec_windowed(node, plan.experiment))
+            else:
+                raise ValueError(f"unknown plan node kind {node.kind!r}")
+        cells = (
+            [c for _, c in sorted(indexed, key=lambda p: p[0])] + trace_cells
+        )
+        stats1 = engine_cache_stats()
+        res = Results(
+            experiment=plan.experiment.to_dict(),
+            cells=cells,
+            wall_s=time.time() - t0,
+            engine_cache=dict(
+                hits=stats1["hits"] - stats0["hits"],
+                misses=stats1["misses"] - stats0["misses"],
+                builds=stats1["builds"] - stats0["builds"],
+            ),
+        )
+        res.summary = results_summary(res)
+    res.telemetry = dict(
+        # this run's spans only (the tracer is process-wide)
+        spans=(summarize(get_tracer().events[ev0:]) if tracing() else {}),
+        engine_cache=engine_cache_stats(),
+        probes=(
+            dict(samples=plan.experiment.probes,
+                 every=plan.experiment.probe_every)
+            if plan.experiment.probes else {}
         ),
     )
-    res.summary = results_summary(res)
     return res
 
 

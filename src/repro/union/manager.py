@@ -144,7 +144,8 @@ def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
     )
 
 
-def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None):
+def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None,
+          probes=None):
     """The engine for a resolved scenario: an
     :class:`~repro.netsim.engine.Engine` (unpacks as ``init, run, tick``;
     carries ``run_window`` for windowed/scheduled runs).
@@ -156,12 +157,15 @@ def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None):
 
     ``capacity`` widens the envelope beyond this scenario's own needs so
     the same compiled engine can serve other (smaller) scenarios — the
-    ragged-campaign path in :mod:`repro.union.ensemble`.
+    ragged-campaign path in :mod:`repro.union.ensemble`. ``probes`` (a
+    :class:`repro.obs.ProbeConfig`) selects the probed variant of the
+    engine — a separate cache entry; the unprobed one is untouched.
     """
     cap = rs.capacity if capacity is None else capacity.union(rs.capacity)
     eng = get_engine(
         rs.topo, routing=rs.scenario.routing, ur=rs.ur, net=rs.net,
         pool_size=rs.pool_size, horizon_us=rs.horizon_us, capacity=cap,
+        probes=probes,
     )
     return bind_jobs(eng, rs)
 
@@ -218,6 +222,12 @@ def member_report(state, rs: ResolvedScenario, wall_s: float = 0.0,
         ],
         envelope=dict(Jmax=cap.Jmax, Pmax=cap.Pmax, OPmax=cap.OPmax),
     )
+    if getattr(state, "probes", None) is not None:
+        from repro.obs import probe_timelines
+
+        rep["probes"] = probe_timelines(
+            state.probes, list(rs.topo.link_levels()), names
+        )
     return rep
 
 

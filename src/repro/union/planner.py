@@ -27,6 +27,7 @@ from typing import Any, Dict, List, Tuple
 import numpy as np
 
 from repro.netsim.engine import EngineCapacity
+from repro.obs import span
 from repro.union import manager as MGR
 from repro.union.scenario import Scenario
 
@@ -151,6 +152,14 @@ def _member_seeds(exp, n_variants: int) -> List[List[int]]:
 
 def plan(exp) -> Plan:
     """Lower an Experiment into a Plan (resolution + bucketing only)."""
+    with span("planner.plan", cat="planner") as sp:
+        p = _plan(exp)
+        sp.set(nodes=len(p.nodes),
+               cells=sum(len(n.cells) for n in p.nodes))
+    return p
+
+
+def _plan(exp) -> Plan:
     exp.validate()
     variants: List[Scenario] = []
     for sc in exp.scenarios:

@@ -279,11 +279,21 @@ def format_results(results) -> str:
     split (both remain as the per-group primitives it composes)."""
     s = results.summary or results_summary(results)
     cache = s.get("engine_cache", {})
+    gets = cache.get("hits", 0) + cache.get("misses", 0)
+    ratio = f" ({cache.get('hits', 0) / gets:.0%} hit)" if gets else ""
     lines = [
         f"experiment: {results.experiment.get('name', '?')} — "
         f"{s['cells']} cells in {s['wall_s']:.1f}s (engine cache: "
-        f"{cache.get('hits', 0)} hits, {cache.get('misses', 0)} compiles)"
+        f"{cache.get('hits', 0)} hits, {cache.get('misses', 0)} "
+        f"compiles{ratio})"
     ]
+    # host-plane telemetry (repro.obs): where this run's wall-clock went
+    spans = (getattr(results, "telemetry", None) or {}).get("spans") or {}
+    for i, (name, total_ms) in enumerate(spans.get("top", [])):
+        info = spans.get("by_name", {}).get(name, {})
+        lines.append(
+            f"  wall sink #{i + 1}: {name} — {total_ms:.0f}ms "
+            f"across {info.get('count', 0)} span(s)")
     for key, summary in s.get("scenario_studies", {}).items():
         lines.append(f"--- scenario study {key} ---")
         lines.append(format_summary(summary))

@@ -198,13 +198,18 @@ def test_engine_cache_shared_across_scenario_and_trace_paths():
     res1 = union.run(union.Experiment(
         name="warmup", scenarios=[sc], members=1))
     assert res1.engine_cache["misses"] == 1  # first sight of this envelope
+    assert res1.engine_cache["builds"] == 1  # a miss is a real build
 
     res2 = union.run(union.Experiment(
         name="mixed", scenarios=[sc], members=2,
         trace=union.TraceStudy(trace=trace, policies=["easy"], seeds=1)))
     # scenario node AND trace node both hit the engine compiled by res1
-    assert res2.engine_cache == {"hits": 2, "misses": 0}
+    assert res2.engine_cache == {"hits": 2, "misses": 0, "builds": 0}
     assert len(res2.cells) == 3
+    # the artifact carries the process-wide counters too (provenance)
+    tel = res2.telemetry["engine_cache"]
+    assert tel["hits"] >= 2 and tel["builds"] >= 1
+    assert set(tel) >= {"hits", "misses", "builds", "size"}
 
 
 # ---------------------------------------------------------------------------

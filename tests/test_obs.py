@@ -1,0 +1,370 @@
+"""repro.obs — spans, probes, exporters, and their engine/facade wiring.
+
+The two contracts that matter most:
+
+* **probes-on bit-identity**: the probed engine variant reproduces the
+  seed goldens (`tests/data_engine_golden.json`) exactly — probe buffers
+  are pure observers, and the *unprobed* engine contains no probe code;
+* **disabled-overhead**: with tracing off, a span is one attribute check
+  and a shared null handle — instrumenting hot host paths costs < 1% of
+  a warm facade run.
+"""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs, union
+from repro.obs import ProbeConfig
+from repro.obs.probes import ring_order
+from repro.union import manager as MGR
+from repro.union.scenario import Scenario, ScenarioJob
+
+import test_engine_equivalence as EQ
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data_engine_golden.json")
+
+PP = (
+    "For 4 repetitions {\n"
+    " task 0 sends a 1024 byte message to task 1 then\n"
+    " task 1 sends a 1024 byte message to task 0 }"
+)
+
+
+def tiny_scenario():
+    return Scenario(
+        name="tiny-obs",
+        jobs=[
+            ScenarioJob(app="pp0", source=PP, ranks=2),
+            ScenarioJob(app="pp1", source=PP, ranks=2, start_us=200.0),
+        ],
+        placement="RN", tick_us=2.0, horizon_ms=50.0, pool_size=256,
+    )
+
+
+@pytest.fixture
+def clean_tracer():
+    """Leave the process-wide tracer exactly as found."""
+    tr = obs.get_tracer()
+    was_enabled = tr.enabled
+    events = tr.events
+    tr.events = []
+    yield tr
+    tr.enabled = was_enabled
+    tr.events = events
+
+
+# ---------------------------------------------------------------------------
+# sim plane: probes
+# ---------------------------------------------------------------------------
+
+def test_probed_engine_bit_identical_to_golden():
+    """Probes are observers: the probed engine variant reproduces the
+    seed golden's integer trajectory exactly (same ticks, same rng
+    schedule, same pool/latency counters) — while filling its rings."""
+    with open(GOLDEN) as f:
+        g = json.load(f)["equiv-mix"]["state"]
+    sc = EQ.mixed_scenario()
+    rs = MGR.resolve(sc, seed=3)
+    eng = MGR.build(rs, probes=ProbeConfig(samples=32, every=4))
+    st = jax.block_until_ready(eng.run(eng.init_state(
+        seed=MGR._engine_seed(3))))
+
+    assert float(st.t) == g["t"]
+    assert int(st.rng) == g["rng"]
+    assert int(st.pool.dropped) == g["dropped"]
+    assert int(st.pool.free_top) == g["free_top"]
+    assert int(st.metrics.win_idx) == g["win_idx"]
+    np.testing.assert_array_equal(np.asarray(st.metrics.lat_cnt),
+                                  g["lat_cnt"])
+
+    # and the rings actually observed the run
+    assert st.probes is not None
+    assert int(st.probes.idx) > 0
+    tl = obs.probe_timelines(
+        st.probes, list(rs.topo.link_levels()),
+        rs.padded_app_names(eng.capacity))
+    assert tl["samples"] == min(int(st.probes.idx), 32)
+    assert tl["t_us"] == sorted(tl["t_us"])  # chronological after unwrap
+    assert set(tl["link_utilization"]) == set(rs.topo.link_levels())
+    assert "ar8" in tl["queue_depth"] and "ur" in tl["inflight_latency_us"]
+    assert any(v > 0 for v in tl["pool_occupancy"])
+    assert any(v > 0 for vs in tl["link_utilization"].values() for v in vs)
+
+
+def test_probe_sampling_cadence_and_values():
+    """Samples land every `every` live ticks; occupancy/depth stay in
+    range; a member that never wraps reports wrapped=False."""
+    sc = tiny_scenario()
+    rs = MGR.resolve(sc, seed=0)
+    eng = MGR.build(rs, probes=ProbeConfig(samples=256, every=2))
+    st = jax.block_until_ready(eng.run(eng.init_state(seed=1)))
+    tl = obs.probe_timelines(
+        st.probes, list(rs.topo.link_levels()),
+        rs.padded_app_names(eng.capacity))
+    idx = int(st.probes.idx)
+    assert 0 < tl["samples"] <= 256
+    assert tl["samples"] == min(idx, 256)
+    assert tl["wrapped"] == (idx > 256)
+    assert all(0.0 <= v <= 1.0 for v in tl["pool_occupancy"])
+    assert all(d >= 0 for vs in tl["queue_depth"].values() for d in vs)
+    # tick counter counted live ticks only; idx = ticks // every
+    assert int(st.probes.idx) == int(st.probes.tick) // 2
+
+
+def test_ring_order_basics():
+    np.testing.assert_array_equal(ring_order(3, 8), [0, 1, 2])
+    np.testing.assert_array_equal(ring_order(8, 8), range(8))
+    # one past full: oldest surviving sample is at position 1
+    np.testing.assert_array_equal(ring_order(9, 8),
+                                  [1, 2, 3, 4, 5, 6, 7, 0])
+
+
+def test_ring_wraparound_property():
+    """hypothesis: replaying idx writes through a K-ring and reading it
+    back via ring_order always yields the last min(idx, K) values in
+    chronological order."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(idx=st.integers(min_value=0, max_value=4096),
+           K=st.integers(min_value=1, max_value=64))
+    def check(idx, K):
+        buf = np.full((K,), -1, np.int64)
+        for i in range(idx):
+            buf[i % K] = i  # the engine's one-hot write at idx % K
+        order = ring_order(idx, K)
+        n = min(idx, K)
+        assert len(order) == n
+        np.testing.assert_array_equal(buf[order], np.arange(idx - n, idx))
+
+    check()
+
+
+def test_probe_config_validation():
+    with pytest.raises(ValueError, match="samples"):
+        ProbeConfig(samples=0)
+    with pytest.raises(ValueError, match="every"):
+        ProbeConfig(every=0)
+    with pytest.raises(ValueError, match="probes"):
+        union.Experiment(name="x", scenarios=[tiny_scenario()],
+                         probes=-1).validate()
+    with pytest.raises(ValueError, match="probe_every"):
+        union.Experiment(name="x", scenarios=[tiny_scenario()],
+                         probes=4, probe_every=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# facade: telemetry + schema v3
+# ---------------------------------------------------------------------------
+
+def test_results_telemetry_and_probe_reports(tmp_path, clean_tracer):
+    clean_tracer.enable()
+    res = union.run(union.Experiment(
+        name="obs-smoke", scenarios=[tiny_scenario()], members=2,
+        probes=8, probe_every=4))
+    clean_tracer.disable()
+
+    assert res.schema_version == 3
+    tel = res.telemetry
+    assert tel["probes"] == {"samples": 8, "every": 4}
+    assert set(tel["engine_cache"]) >= {"hits", "misses", "builds", "size"}
+    by_name = tel["spans"]["by_name"]
+    for expected in ("union.run", "planner.plan", "engine.run"):
+        assert expected in by_name, by_name.keys()
+    # union.run nests everything, so it never ranks among the top sinks
+    assert all(name != "union.run" for name, _ in tel["spans"]["top"])
+
+    for cell in res.cells:
+        pr = cell.report["probes"]
+        assert pr["samples"] > 0
+        n = pr["samples"]
+        assert len(pr["t_us"]) == n == len(pr["pool_occupancy"])
+        for series in pr["link_utilization"].values():
+            assert len(series) == n
+        assert set(pr["queue_depth"]) == {"pp0", "pp1"}
+
+    # artifact round-trip carries telemetry + per-cell probe timelines
+    path = str(tmp_path / "res.json")
+    res.save(path)
+    loaded = union.Results.load(path)
+    assert loaded.telemetry == json.loads(
+        json.dumps(res.telemetry, default=float))
+    assert loaded.cells[0].report["probes"]["t_us"] == pytest.approx(
+        res.cells[0].report["probes"]["t_us"])
+
+    # the formatted report surfaces the wall sinks + cache hit ratio
+    text = union.format_results(res)
+    assert "wall sink #1" in text and "hit)" in text
+
+
+def test_unprobed_run_has_no_probe_report(clean_tracer):
+    clean_tracer.disable()
+    res = union.run(union.Experiment(
+        name="obs-off", scenarios=[tiny_scenario()], members=1))
+    assert "probes" not in res.cells[0].report
+    assert res.telemetry["probes"] == {}
+    assert res.telemetry["spans"] == {}  # tracing disabled
+
+
+# ---------------------------------------------------------------------------
+# host plane: spans + exporters
+# ---------------------------------------------------------------------------
+
+def test_span_records_and_chrome_export(tmp_path, clean_tracer):
+    clean_tracer.enable()
+    with obs.span("outer", cat="test", k=1) as sp:
+        sp.set(extra="v")
+        with obs.span("inner", cat="test"):
+            time.sleep(0.001)
+    obs.counter("pool", occ=0.5)
+    clean_tracer.disable()
+
+    assert clean_tracer.n_events == 3
+    names = [e["name"] for e in clean_tracer.events]
+    assert names == ["inner", "outer", "pool"]  # spans close inner-first
+    outer = clean_tracer.events[1]
+    assert outer["args"] == {"k": 1, "extra": "v"}
+    assert outer["dur_us"] >= clean_tracer.events[0]["dur_us"]
+
+    path = str(tmp_path / "trace.json")
+    obs.write_chrome_trace(path)
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    assert len(evs) == 3 and doc["displayTimeUnit"] == "ms"
+    X = [e for e in evs if e["ph"] == "X"]
+    C = [e for e in evs if e["ph"] == "C"]
+    assert len(X) == 2 and len(C) == 1
+    for e in X:
+        assert {"name", "cat", "ts", "dur", "pid", "tid"} <= set(e)
+    assert C[0]["args"] == {"occ": 0.5}
+
+    jl = str(tmp_path / "trace.jsonl")
+    obs.write_jsonl(jl)
+    with open(jl) as f:
+        lines = [json.loads(line) for line in f]
+    assert len(lines) == 3 and lines[0]["name"] == "inner"
+
+
+def test_summarize_aggregates_and_ranks():
+    events = [
+        dict(name="a", cat="x", ts_us=0.0, dur_us=1000.0, cpu_ms=0.5),
+        dict(name="a", cat="x", ts_us=5.0, dur_us=3000.0, cpu_ms=1.0),
+        dict(name="b", cat="x", ts_us=9.0, dur_us=2000.0, cpu_ms=0.1),
+        dict(name="union.run", cat="run", ts_us=0.0, dur_us=9000.0,
+             cpu_ms=2.0),
+        dict(name="cnt", ph="C", ts_us=1.0, args={"v": 1.0}),
+    ]
+    s = obs.summarize(events, top=3)
+    assert s["by_name"]["a"] == dict(
+        count=2, total_ms=4.0, max_ms=3.0, cpu_ms=1.5, cat="x")
+    assert [name for name, _ in s["top"]] == ["a", "b"]  # no union.run
+    assert "cnt" not in s["by_name"]
+
+
+def test_span_disabled_overhead_smoke(clean_tracer):
+    """The instrumented-but-disabled path costs < 1% of a warm facade
+    run: time as many disabled span entries as an enabled run actually
+    records, against the warm facade wall."""
+    clean_tracer.disable()
+    exp = union.Experiment(
+        name="overhead", scenarios=[tiny_scenario()], members=1)
+    union.run(exp)  # pays any compile
+    t0 = time.perf_counter()
+    union.run(exp)
+    warm_wall = time.perf_counter() - t0
+
+    clean_tracer.enable()
+    union.run(exp)
+    n_spans = clean_tracer.n_events
+    clean_tracer.disable()
+    assert n_spans > 0
+
+    assert not obs.tracing()
+    t0 = time.perf_counter()
+    for _ in range(n_spans):
+        with obs.span("noop", cat="test"):
+            pass
+    disabled_wall = time.perf_counter() - t0
+    assert disabled_wall < 0.01 * warm_wall, (
+        f"{n_spans} disabled spans cost {disabled_wall * 1e3:.3f}ms "
+        f"vs warm facade {warm_wall * 1e3:.1f}ms")
+
+
+def test_logger_verbosity_levels():
+    import logging
+
+    from repro.obs import log, set_verbosity
+
+    try:
+        set_verbosity(0)
+        assert log.level == logging.WARNING  # quiet by default
+        set_verbosity(1)
+        assert log.level == logging.INFO
+        set_verbosity(2)
+        assert log.level == logging.DEBUG
+    finally:
+        set_verbosity(0)
+
+
+def test_log_to_jsonl_sink(tmp_path):
+    from repro.obs import log, log_to_jsonl, set_verbosity
+
+    path = str(tmp_path / "run.jsonl")
+    h = log_to_jsonl(path)
+    try:
+        set_verbosity(1)
+        log.info("hello %s", "world")
+    finally:
+        set_verbosity(0)
+        log.removeHandler(h)
+        h.close()
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
+    assert recs and recs[-1]["msg"] == "hello world"
+    assert recs[-1]["level"] == "INFO"
+
+
+# ---------------------------------------------------------------------------
+# bench provenance contract
+# ---------------------------------------------------------------------------
+
+def test_bench_records_all_carry_provenance():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "bench_union",
+        os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                     "bench_union.py"))
+    bench = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench)
+
+    # the checked-in file passes the strict check (no backfill needed)
+    entries = bench.load_bench(backfill=False)
+    assert entries, "BENCH_union.json should have records"
+    for e in entries:
+        assert isinstance(e["provenance"], dict)
+
+    # a legacy record without provenance is rejected strictly and
+    # backfilled (marked) otherwise
+    with pytest.raises(ValueError, match="provenance"):
+        bench._check_entry({"bench": "x"})
+    import tempfile
+
+    with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                     delete=False) as f:
+        json.dump([{"bench": "legacy"}], f)
+        tmp = f.name
+    try:
+        with pytest.raises(ValueError, match="provenance"):
+            bench.load_bench(tmp, backfill=False)
+        fixed = bench.load_bench(tmp, backfill=True)
+        assert fixed[0]["provenance"] == {"backfilled": True}
+    finally:
+        os.unlink(tmp)
