@@ -10,9 +10,12 @@ members/sec. Each ``BENCH_union.json`` entry records its provenance (git
 commit, jax version, backend, device count). ``--quick`` is the CI smoke
 profile.
 
-``--trace`` switches to the online-scheduler profile instead: a synthetic
-Poisson trace drained through a small slot envelope under FCFS and EASY
-backfill, recording jobs/sec (scheduling + windowed-engine throughput).
+``--trace`` switches to the online-scheduler profile instead: the same
+(seeds × policies) grid over a synthetic Poisson trace run both ways —
+lock-stepped through one batched windowed engine (the planner's
+``WindowedBatchNode``) and as sequential per-cell loops — recording
+aggregate jobs/sec for each path and the batched speedup (the results
+are bit-identical; the delta is pure execution strategy).
 
 ``--experiment`` measures the facade itself: warm ``union.run`` wall vs
 the direct engine-level path at the same envelope (spec validation +
@@ -147,6 +150,10 @@ def _append_entry(entry):
 
 
 def _bench_trace_spec(quick: bool):
+    """The many-small-jobs regime ROADMAP item 1 targets: fine-grained
+    pp/ar jobs streaming through a tight slot envelope, where per-window
+    host + dispatch overhead (not tick compute) dominates the sequential
+    loop — exactly what lock-step batching amortizes."""
     from repro.sched.trace import CatalogApp, synthetic_trace
 
     pp = (
@@ -155,61 +162,83 @@ def _bench_trace_spec(quick: bool):
         " task 1 sends a 2048 byte message to task 0 }"
     )
     ar = (
-        "For 3 repetitions {\n"
-        " all tasks compute for 200 microseconds then\n"
-        " all tasks allreduce a 65536 byte message }"
+        "For 2 repetitions {\n"
+        " all tasks compute for 100 microseconds then\n"
+        " all tasks allreduce a 4096 byte message }"
     )
     catalog = [
         CatalogApp(app="pp", ranks=2, est_runtime_us=1500.0, weight=2.0,
                    source=pp),
-        CatalogApp(app="ar", ranks=16, est_runtime_us=4000.0, weight=1.0,
+        CatalogApp(app="ar", ranks=4, est_runtime_us=2000.0, weight=1.0,
                    source=ar),
     ]
-    n_jobs = 16 if quick else 64
-    slots = 4 if quick else 8
+    n_jobs = 8 if quick else 32
+    slots = 3 if quick else 4
     trace = synthetic_trace(
         n_jobs, arrival="poisson", mean_gap_us=300.0, seed=0,
-        catalog=catalog, slots=slots, tick_us=5.0,
-        horizon_ms=60_000.0, pool_size=4096,
+        catalog=catalog, slots=slots, tick_us=20.0,
+        horizon_ms=60_000.0, pool_size=256,
         name=f"bench-trace-{'quick' if quick else 'full'}",
     )
-    return trace, n_jobs, slots
+    seeds = [0, 1] if quick else [0, 1, 2, 3]
+    policies = ["fcfs", "easy"] if quick else ["fcfs", "easy",
+                                               "conservative"]
+    return trace, n_jobs, slots, seeds, policies
 
 
 def bench_trace(quick: bool):
-    """Online-scheduler throughput: jobs/sec drained through a small
-    envelope under both queue policies — one TraceStudy through the
-    facade, one cached engine."""
+    """Batched-vs-sequential scheduler campaign: the same (seeds ×
+    policies) TraceStudy grid through the lock-step ``WindowedBatchNode``
+    (one batched engine, per-member ``t_stop``) and through the per-cell
+    sequential loop (``batch=False``). Warm walls (each mode runs twice,
+    engines from the process-wide cache) give aggregate jobs/sec both
+    ways plus the speedup — the results are bit-identical, so the delta
+    is pure execution strategy."""
     from repro import union
 
-    trace, n_jobs, slots = _bench_trace_spec(quick)
-    print(f"trace={trace.name} jobs={n_jobs} slots={slots}")
-    res = union.run(union.Experiment(
-        name="bench-trace",
-        trace=union.TraceStudy(trace=trace, policies=["fcfs", "easy"]),
-    ))
+    trace, n_jobs, slots, seeds, policies = _bench_trace_spec(quick)
+    grid = len(seeds) * len(policies)
+    total_jobs = n_jobs * grid
+    print(f"trace={trace.name} jobs={n_jobs} slots={slots} grid="
+          f"{len(seeds)} seeds x {len(policies)} policies ({grid} cells)")
+
+    def run_mode(batch: bool):
+        t0 = time.time()
+        res = union.run(union.Experiment(
+            name=f"bench-trace-{'batched' if batch else 'sequential'}",
+            trace=union.TraceStudy(
+                trace=trace, policies=policies, seeds=seeds, batch=batch),
+        ))
+        wall = time.time() - t0
+        completed = sum(c.report["completed"] for c in res.cells)
+        assert completed == total_jobs, (
+            f"batch={batch}: only {completed}/{total_jobs} completed")
+        return wall, res
+
     results = {}
-    for cell in res.cells:
-        s = cell.report
-        assert s["completed"] == n_jobs, (
-            f"{cell.policy}: only {s['completed']}/{n_jobs} completed")
-        results[cell.policy] = dict(
-            wall_s=s["wall_s"], jobs_per_sec=s["jobs_per_sec"],
-            windows=s["windows"], makespan_ms=s["makespan_ms"],
-            utilization=s["utilization"],
-            mean_wait_us=s["wait_us"]["mean"],
+    for mode, batch in (("sequential", False), ("batched", True)):
+        cold_wall, _ = run_mode(batch)
+        warm_wall, res = run_mode(batch)
+        results[mode] = dict(
+            cold_wall_s=cold_wall, warm_wall_s=warm_wall,
+            jobs_per_sec=total_jobs / max(warm_wall, 1e-9),
+            windows=max(c.report["windows"] for c in res.cells),
         )
-        print(f"  {cell.policy:>5}: {s['wall_s']:6.1f}s "
-              f"({s['jobs_per_sec']:.2f} jobs/s, {s['windows']} windows) | "
-              f"makespan {s['makespan_ms']:.1f}ms | "
-              f"util {s['utilization']:.1%}")
+        print(f"  {mode:>10}: cold {cold_wall:6.1f}s | warm {warm_wall:6.1f}s"
+              f" ({total_jobs / max(warm_wall, 1e-9):.2f} jobs/s aggregate)")
+
+    speedup = (results["sequential"]["warm_wall_s"]
+               / max(results["batched"]["warm_wall_s"], 1e-9))
+    print(f"speedup (warm, batched/sequential): {speedup:.2f}x")
     entry = dict(
-        bench="union_trace_throughput",
-        jobs=n_jobs, slots=slots,
+        bench="union_trace_batched",
+        jobs=n_jobs, slots=slots, seeds=len(seeds), policies=policies,
+        grid_cells=grid, total_jobs=total_jobs,
         provenance=provenance(),
         trace=dict(name=trace.name, arrival="poisson", mean_gap_us=300.0,
                    placement=trace.placement),
-        **{f"{p}_{k}": v for p, r in results.items() for k, v in r.items()},
+        **{f"{m}_{k}": v for m, r in results.items() for k, v in r.items()},
+        speedup_batched_over_sequential=speedup,
     )
     _append_entry(entry)
 

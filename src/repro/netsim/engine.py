@@ -1074,11 +1074,15 @@ def build_engine(
     # one scheduling window: advance until virtual time reaches ``t_stop``
     # (the next trace arrival) or a job slot completes — then hand control
     # back to the host so it can retire/admit slots. ``t_stop`` is a traced
-    # scalar (or a (B,) vector): every window of a trace run shares one jit
-    # cache entry. Per-member: a member that reached its own window event
-    # freezes in place while batch-mates tick on (the stop condition is
-    # monotone — a frozen member stays frozen), so batched windowed runs
-    # keep each member bit-identical to its own B=1 windows.
+    # scalar or a per-member (B,) vector — each member is capped by its
+    # OWN stop time (the cap broadcasts through the PDES skip min), which
+    # is what lets the lock-step batched scheduler advance every trace
+    # cell to its own next event in one call. Every window of a trace run
+    # shares one jit cache entry per t_stop shape. Per-member: a member
+    # that reached its own window event freezes in place while batch-mates
+    # tick on (the stop condition is monotone — a frozen member stays
+    # frozen), so batched windowed runs keep each member bit-identical to
+    # its own B=1 windows.
     @jax.jit
     def run_window_batched(state: SimState, t_stop) -> SimState:
         t_stop = jnp.asarray(t_stop, jnp.float32)
@@ -1272,6 +1276,171 @@ def slot_in_flight(state: SimState, slot: int) -> bool:
     )
 
 
+class WindowView(NamedTuple):
+    """Everything the scheduler host loop reads between engine windows,
+    fetched in **one** device transfer (:func:`window_host_view`).
+
+    Shapes are per-member (``(J,)``/``(J, Pmax)``) for a member state or
+    carry a leading batch dim (``(B, J)``/``(B, J, Pmax)``) for a batched
+    state; arrays are host numpy, so per-slot indexing is free."""
+
+    t: np.ndarray          # () | (B,)       float32 virtual clock
+    slot_done: np.ndarray  # (J,) | (B, J)   every rank at END
+    in_flight: np.ndarray  # (J,) | (B, J)   slot owns active pool msgs
+    lat_sum: np.ndarray    # per-slot latency sums (metrics app axis)
+    lat_cnt: np.ndarray    # per-slot delivered-message counts
+    comm_time: np.ndarray  # (J, Pmax) | (B, J, Pmax) per-rank comm time
+
+    def member(self, i: int) -> "WindowView":
+        """Member ``i``'s rows of a batched view (no further transfers)."""
+        return WindowView(*(a[i] for a in self))
+
+
+def window_host_view(state: SimState) -> WindowView:
+    """Fetch the scheduler's whole per-window host view in one transfer.
+
+    Replaces the per-slot ``slot_done``/``slot_in_flight``/metrics reads
+    of the window loop (each a separate device fetch) with a single
+    ``jax.device_get`` of the six leaves the host actually consumes; the
+    slot masks are then computed host-side in numpy. Works on member and
+    batched states alike — the lock-step batched scheduler fetches one
+    view per window **round**, covering every member.
+    """
+    t, done, active, job, lat_sum, lat_cnt, comm = jax.device_get((
+        state.t, state.vms.done, state.pool.active, state.pool.job,
+        state.metrics.lat_sum, state.metrics.lat_cnt, state.vms.comm_time,
+    ))
+    slot_done_m = done.all(axis=-1)
+    J = done.shape[-2]
+    in_flight = np.zeros(slot_done_m.shape, bool)
+    sel = active & (job < J)  # UR traffic uses the extra app id J
+    if slot_done_m.ndim == 1:
+        in_flight[job[sel]] = True
+    else:
+        b_idx = np.broadcast_to(
+            np.arange(job.shape[0])[:, None], job.shape)[sel]
+        in_flight[b_idx, job[sel]] = True
+    return WindowView(t, slot_done_m, in_flight, lat_sum, lat_cnt, comm)
+
+
+def admit_jobs(
+    state: SimState, admits: Sequence[Tuple[int, int, JobSpec]]
+) -> SimState:
+    """Write many jobs into vacant slots of a **batched** state at once.
+
+    ``admits`` is ``[(member, slot, spec), ...]`` with distinct
+    ``(member, slot)`` pairs; payload rows are assembled host-side and
+    applied with one scatter per state leaf, so the device cost of a
+    lock-step scheduler round is O(leaves), independent of how many
+    members admit. Envelope checks run here; *vacancy* checks are the
+    caller's — the batched scheduler's host bookkeeping is authoritative
+    (fetching per-slot occupancy back would reintroduce exactly the
+    per-member round-trips this API removes).
+    """
+    if not admits:
+        return state
+    jt = state.jobs
+    J, OPmax = jt.ops.shape[-3], jt.ops.shape[-2]
+    Pmax = jt.r2n.shape[-1]
+    K = len(admits)
+    mi = np.empty((K,), np.int32)
+    si = np.empty((K,), np.int32)
+    ops_rows = np.zeros((K, OPmax, 4), np.int32)
+    ops_rows[:, :, 0] = OP["END"]
+    grid_rows = np.zeros((K, OPmax, 4), np.int32)
+    p_vals = np.empty((K,), np.int32)
+    logp_vals = np.empty((K,), np.int32)
+    r2n_rows = np.zeros((K, Pmax), np.int32)
+    start_vals = np.empty((K,), np.float32)
+    done_rows = np.empty((K, Pmax), bool)
+    for k, (m, slot, spec) in enumerate(admits):
+        sk = spec.skeleton
+        if not 0 <= slot < J:
+            raise ValueError(f"slot {slot} outside envelope Jmax={J}")
+        if sk.n_ranks > Pmax or sk.n_ops > OPmax:
+            raise ValueError(
+                f"job {spec.name!r} ({sk.n_ranks} ranks, {sk.n_ops} ops) "
+                f"exceeds engine capacity (Pmax={Pmax}, OPmax={OPmax})"
+            )
+        mi[k], si[k] = m, slot
+        ops_rows[k, : sk.n_ops] = sk.ops
+        grid_rows[k, : sk.n_ops] = sk.grid
+        p_vals[k] = sk.n_ranks
+        logp_vals[k] = _ceil_log2(sk.n_ranks)
+        r2n_rows[k, : sk.n_ranks] = np.asarray(spec.rank2node, np.int32)
+        start_vals[k] = np.float32(spec.start_us)
+        done_rows[k] = np.arange(Pmax) >= sk.n_ranks
+    jobs = jt._replace(
+        ops=jt.ops.at[mi, si].set(ops_rows),
+        grid=jt.grid.at[mi, si].set(grid_rows),
+        P=jt.P.at[mi, si].set(p_vals),
+        logp=jt.logp.at[mi, si].set(logp_vals),
+        r2n=jt.r2n.at[mi, si].set(r2n_rows),
+        slowdown=jt.slowdown.at[mi, si].set(np.ones((K, Pmax), np.float32)),
+        start=jt.start.at[mi, si].set(start_vals),
+    )
+    z_i = np.zeros((K, Pmax), np.int32)
+    z_f = np.zeros((K, Pmax), np.float32)
+    z_b = np.zeros((K, Pmax), bool)
+    vms = state.vms
+    vms = vms._replace(
+        pc=vms.pc.at[mi, si].set(z_i), rnd=vms.rnd.at[mi, si].set(z_i),
+        emitted=vms.emitted.at[mi, si].set(z_b),
+        busy_until=vms.busy_until.at[mi, si].set(z_f),
+        send_need=vms.send_need.at[mi, si].set(z_i),
+        send_done=vms.send_done.at[mi, si].set(z_i),
+        recv_need=vms.recv_need.at[mi, si].set(z_i),
+        recv_done=vms.recv_done.at[mi, si].set(z_i),
+        comm_time=vms.comm_time.at[mi, si].set(z_f),
+        done=vms.done.at[mi, si].set(done_rows),
+    )
+    return state._replace(jobs=jobs, vms=vms)
+
+
+def retire_jobs(
+    state: SimState, retires: Sequence[Tuple[int, int]]
+) -> SimState:
+    """Vacate many ``(member, slot)`` pairs of a **batched** state at
+    once — the multi-member mirror of :func:`retire_job`, one scatter per
+    state leaf. Done/drained validation is the caller's (the lock-step
+    scheduler just read both masks from :func:`window_host_view`)."""
+    if not retires:
+        return state
+    jt = state.jobs
+    OPmax = jt.ops.shape[-2]
+    Pmax = jt.r2n.shape[-1]
+    K = len(retires)
+    mi = np.asarray([m for m, _ in retires], np.int32)
+    si = np.asarray([s for _, s in retires], np.int32)
+    ops_rows = np.zeros((K, OPmax, 4), np.int32)
+    ops_rows[:, :, 0] = OP["END"]
+    z_i = np.zeros((K, Pmax), np.int32)
+    z_f = np.zeros((K, Pmax), np.float32)
+    z_b = np.zeros((K, Pmax), bool)
+    jobs = jt._replace(
+        ops=jt.ops.at[mi, si].set(ops_rows),
+        grid=jt.grid.at[mi, si].set(np.zeros((K, OPmax, 4), np.int32)),
+        P=jt.P.at[mi, si].set(np.ones((K,), np.int32)),
+        logp=jt.logp.at[mi, si].set(np.ones((K,), np.int32)),
+        r2n=jt.r2n.at[mi, si].set(z_i),
+        slowdown=jt.slowdown.at[mi, si].set(np.ones((K, Pmax), np.float32)),
+        start=jt.start.at[mi, si].set(np.full((K,), np.inf, np.float32)),
+    )
+    vms = state.vms
+    vms = vms._replace(
+        pc=vms.pc.at[mi, si].set(z_i), rnd=vms.rnd.at[mi, si].set(z_i),
+        emitted=vms.emitted.at[mi, si].set(z_b),
+        busy_until=vms.busy_until.at[mi, si].set(z_f),
+        send_need=vms.send_need.at[mi, si].set(z_i),
+        send_done=vms.send_done.at[mi, si].set(z_i),
+        recv_need=vms.recv_need.at[mi, si].set(z_i),
+        recv_done=vms.recv_done.at[mi, si].set(z_i),
+        comm_time=vms.comm_time.at[mi, si].set(z_f),
+        done=vms.done.at[mi, si].set(np.ones((K, Pmax), bool)),
+    )
+    return state._replace(jobs=jobs, vms=vms)
+
+
 def occupied_node_mask(state: SimState, n_nodes: int) -> np.ndarray:
     """(n_nodes,) bool — nodes held by non-vacant job slots.
 
@@ -1288,12 +1457,17 @@ def occupied_node_mask(state: SimState, n_nodes: int) -> np.ndarray:
     return occ
 
 
-def admit_job(state: SimState, slot: int, spec: JobSpec) -> SimState:
+def admit_job(
+    state: SimState, slot: int, spec: JobSpec, checked: bool = True
+) -> SimState:
     """Write ``spec`` into vacant job ``slot`` of a member state.
 
     Resets the slot's program/placement/arrival tables and its VM rows
     (padded ranks born done), leaving every other slot untouched. The
     admitted job idles until ``spec.start_us`` of virtual time.
+    ``checked=False`` skips the vacancy validation (a device fetch) for
+    callers whose own bookkeeping tracks slot occupancy — the scheduler's
+    hot loop.
     """
     jt = state.jobs
     J, OPmax = jt.ops.shape[0], jt.ops.shape[1]
@@ -1301,7 +1475,7 @@ def admit_job(state: SimState, slot: int, spec: JobSpec) -> SimState:
     sk = spec.skeleton
     if not 0 <= slot < J:
         raise ValueError(f"slot {slot} outside envelope Jmax={J}")
-    if not np.isinf(float(jt.start[slot])):
+    if checked and not np.isinf(float(jt.start[slot])):
         raise ValueError(f"slot {slot} is occupied (start="
                          f"{float(jt.start[slot])}); retire it first")
     if sk.n_ranks > Pmax or sk.n_ops > OPmax:
@@ -1343,21 +1517,23 @@ def admit_job(state: SimState, slot: int, spec: JobSpec) -> SimState:
     return state._replace(jobs=jobs, vms=vms)
 
 
-def retire_job(state: SimState, slot: int) -> SimState:
+def retire_job(state: SimState, slot: int, checked: bool = True) -> SimState:
     """Vacate job ``slot``: END-only program, ``start=inf``, all-done VMs.
 
     The slot must have finished (``slot_done``) and drained
     (``not slot_in_flight``) — retiring earlier would let in-flight
-    deliveries credit the next tenant.
+    deliveries credit the next tenant. ``checked=False`` skips those two
+    validations (each a device fetch) for callers that just read the
+    masks from :func:`window_host_view`.
     """
     jt = state.jobs
     J, OPmax = jt.ops.shape[0], jt.ops.shape[1]
     Pmax = jt.r2n.shape[1]
     if not 0 <= slot < J:
         raise ValueError(f"slot {slot} outside envelope Jmax={J}")
-    if not slot_done(state, slot):
+    if checked and not slot_done(state, slot):
         raise ValueError(f"slot {slot} has unfinished ranks; cannot retire")
-    if slot_in_flight(state, slot):
+    if checked and slot_in_flight(state, slot):
         raise ValueError(
             f"slot {slot} still has in-flight messages; drain before retiring"
         )

@@ -32,6 +32,8 @@ from bisect import insort
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 POLICIES = ("fcfs", "easy", "conservative")
 
 
@@ -92,20 +94,32 @@ class PendingQueue:
 
         ``running`` lists ``(est_end_us, n_ranks)`` of currently running
         jobs — the estimate base for the shadow-time computation.
+
+        The arrival-order prefix is computed as an array program over the
+        rank table (cumulative demand vs free capacity). Backfill (EASY's
+        shadow window, conservative's per-job reservations) is inherently
+        sequential in decision order and stays host-side — the batched
+        trace driver interleaves those decisions across cells between
+        shared engine windows instead of vectorizing them.
         """
         if self.policy == "conservative":
             return self._select_conservative(
                 now, free_nodes, free_slots, running)
-        starts: List[QueuedJob] = []
-        # both policies start the runnable arrival-order prefix
-        while self.jobs:
-            head = self.jobs[0]
-            if free_slots >= 1 and head.n_ranks <= free_nodes:
-                starts.append(self.jobs.pop(0))
-                free_slots -= 1
-                free_nodes -= head.n_ranks
-            else:
-                break
+        # both policies start the runnable arrival-order prefix; as an
+        # array program over the rank table: job i starts iff every job
+        # up to and including i fits, i.e. the cumulative rank demand
+        # stays within free_nodes and i is within the free slot budget
+        k = 0
+        if self.jobs and free_slots >= 1:
+            ranks = np.fromiter(
+                (j.n_ranks for j in self.jobs), np.int64, len(self.jobs))
+            ok = (np.cumsum(ranks) <= free_nodes) & (
+                np.arange(len(ranks)) < free_slots)
+            k = len(ranks) if ok.all() else int(ok.argmin())
+        starts: List[QueuedJob] = self.jobs[:k]
+        del self.jobs[:k]
+        free_slots -= k
+        free_nodes -= sum(j.n_ranks for j in starts)
         if not self.jobs or self.policy == "fcfs":
             return starts, None
 

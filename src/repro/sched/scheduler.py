@@ -20,9 +20,11 @@ job set (pinned by tests/test_sched.py).
 """
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from operator import attrgetter
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -30,12 +32,17 @@ from repro.netsim.config import NetConfig
 from repro.netsim.engine import (
     EngineCapacity,
     JobSpec,
+    WindowView,
     admit_job,
+    admit_jobs,
     get_engine,
+    member_state,
     retire_job,
-    slot_done,
-    slot_in_flight,
+    retire_jobs,
+    stack_members,
+    window_host_view,
 )
+from repro.netsim.fabric import fabric_key
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import get_topology
 from repro.obs import log, span
@@ -155,6 +162,7 @@ def build_sched_engine(
     slots: Optional[int] = None,
     engine_cache: Optional[Dict] = None,
     probes=None,
+    capacity: Optional[EngineCapacity] = None,
 ):
     """Compile the scheduler's engine for a trace: one envelope sized
     ``Jmax=slots`` serves every window. Returns ``(engine, topo,
@@ -168,10 +176,16 @@ def build_sched_engine(
     scenario campaigns at the same envelope. The historical
     ``engine_cache`` dict argument is accepted but ignored. ``probes``
     (a :class:`repro.obs.ProbeConfig`) selects the probed engine
-    variant — its own cache entry, the unprobed one untouched."""
+    variant — its own cache entry, the unprobed one untouched.
+    ``capacity`` widens the envelope beyond this trace's own needs (the
+    planner's WindowedBatchNode passes the union over its whole bucket so
+    every cell fits one engine; envelope widening is trajectory-inert —
+    padded ranks are born done, padded ops END)."""
     del engine_cache  # superseded by the process-wide engine cache
     slots = slots or trace.slots
     topo, resolved, cap, net = _resolve_trace(trace, slots)
+    if capacity is not None:
+        cap = cap.union(capacity)
     eng = get_engine(
         topo, routing=trace.routing, net=net, pool_size=net.pool_size,
         horizon_us=trace.horizon_ms * 1000.0, capacity=cap, probes=probes,
@@ -206,6 +220,191 @@ def run_trace(
     )
 
 
+class _CellLoop:
+    """Host-side state machine for ONE trace cell (trace × policy × seed).
+
+    :meth:`step` consumes this cell's freshly fetched
+    :class:`~repro.netsim.engine.WindowView` and performs exactly one
+    scheduling round — arrivals, retires, admissions — mutating the host
+    bookkeeping and returning the engine surgery (slots to retire, specs
+    to admit) plus the next window's ``t_stop``. Both drivers advance
+    cells through this one code path: the sequential
+    :func:`_run_trace_impl` steps one cell against a member state, the
+    lock-step :func:`run_trace_batch` steps every cell of a batch against
+    one shared batched state. One decision path is what keeps the batched
+    campaign bit-identical to the sequential one.
+    """
+
+    def __init__(self, trace, policy, slots, seed, topo, resolved, net):
+        self.trace = trace
+        self.policy = policy
+        self.slots = slots
+        self.seed = seed
+        self.topo = topo
+        self.net = net
+        self.horizon_us = trace.horizon_ms * 1000.0
+        self.queue = PendingQueue(policy=policy)
+        self.free_slots = list(range(slots))  # ascending == a valid heap
+        self.occupied = np.zeros((topo.n_nodes,), bool)
+        self.running: Dict[int, JobRecord] = {}
+        self.draining: Dict[int, JobRecord] = {}
+        self.records: List[JobRecord] = []
+        self.lat0: Dict[int, Tuple[float, int]] = {}  # slot -> (sum, cnt)
+        self.arrivals = [
+            QueuedJob(jid=i, name=r.tj.name, n_ranks=r.n_ranks,
+                      arrival_us=r.arrival_us,
+                      est_runtime_us=float(r.tj.est_runtime_us), payload=r)
+            for i, r in enumerate(resolved)
+        ]
+        self.ai = 0
+        self.windows = 0
+        self.t_now = 0.0
+        self.horizon_hit = False
+        self.guard = 20 * len(self.arrivals) + 1000
+        self.active = bool(self.arrivals)
+
+    def step(
+        self, view: WindowView
+    ) -> Tuple[List[int], List[Tuple[int, JobSpec]], float]:
+        """One scheduling round against the post-window host view.
+
+        Returns ``(retires, admits, t_stop)``; flips ``active`` off when
+        the cell is finished (horizon hit, or nothing left to run) — a
+        deactivated cell runs no further windows.
+        """
+        self.guard -= 1
+        if self.guard < 0:
+            raise RuntimeError(
+                "scheduler made no progress (windows stopped advancing); "
+                "this is a bug — please report the trace"
+            )
+        retires: List[int] = []
+        admits: List[Tuple[int, JobSpec]] = []
+        t_now = self.t_now = float(view.t)
+        if t_now >= self.horizon_us:
+            self.horizon_hit = True
+            self.active = False
+            return retires, admits, np.inf
+
+        # 1. arrivals whose time has come (plus a fast-forward pull when
+        # the system is empty: the engine skips to the job's start)
+        arrivals, queue = self.arrivals, self.queue
+        while self.ai < len(arrivals) and (
+                arrivals[self.ai].arrival_us <= t_now):
+            queue.push(arrivals[self.ai])
+            self.ai += 1
+        if (not queue and not self.running and not self.draining
+                and self.ai < len(arrivals)):
+            queue.push(arrivals[self.ai])
+            self.ai += 1
+
+        # 2. retire finished slots; free nodes immediately, recycle the
+        # slot once its messages drained. All per-slot flags and metric
+        # deltas come from the single prefetched view — no device reads.
+        for slot, rec in list(self.running.items()):
+            if view.slot_done[slot]:
+                rec.finish_us = min(t_now, self.horizon_us)
+                rec.completed = True
+                s1 = float(view.lat_sum[slot])
+                c1 = int(view.lat_cnt[slot])
+                s0, c0 = self.lat0[slot]
+                rec.msgs = c1 - c0
+                rec.avg_latency_us = (s1 - s0) / max(rec.msgs, 1)
+                ct = view.comm_time[slot, : rec.n_ranks]
+                rec.max_comm_ms = float(ct.max()) / 1000.0
+                self.occupied[rec.nodes] = False
+                del self.running[slot]
+                self.draining[slot] = rec
+        for slot, rec in list(self.draining.items()):
+            if not view.in_flight[slot]:
+                retires.append(slot)
+                heapq.heappush(self.free_slots, slot)
+                self.records.append(rec)
+                del self.draining[slot]
+
+        # 3. admissions: the queue policy decides who starts now
+        free_nodes = int(self.topo.n_nodes - self.occupied.sum())
+        running_ests = [
+            (r.start_us + r.est_runtime_us, r.n_ranks)
+            for r in self.running.values()
+        ]
+        # draining slots hold no nodes but do hold their slot until the
+        # last in-flight message lands — model that as an imminent free
+        running_ests += [(t_now + self.net.tick_us, 0)
+                         for _ in self.draining]
+        starts, _resv = queue.select(
+            t_now, free_nodes, len(self.free_slots), running_ests)
+        for qjob in starts:
+            r: _Resolved = qjob.payload
+            slot = heapq.heappop(self.free_slots)
+            nodes = place_jobs(
+                self.topo, [qjob.n_ranks], self.trace.placement,
+                seed=place_seed(self.seed, qjob.jid),
+                occupied=self.occupied,
+            )[0]
+            self.occupied[nodes] = True
+            start = float(np.float32(max(t_now, qjob.arrival_us)))
+            rec = JobRecord(
+                jid=qjob.jid, name=qjob.name, app=r.tj.app,
+                n_ranks=qjob.n_ranks, arrival_us=qjob.arrival_us,
+                est_runtime_us=qjob.est_runtime_us, slot=slot,
+                start_us=start, nodes=nodes,
+            )
+            # metrics are untouched by admit/retire surgery, so the
+            # window-end view still holds the admission-time baselines
+            self.lat0[slot] = (
+                float(view.lat_sum[slot]), int(view.lat_cnt[slot]))
+            admits.append(
+                (slot, JobSpec(qjob.name, r.skeleton, nodes,
+                               start_us=start)))
+            self.running[slot] = rec
+
+        if (not (self.running or self.draining or queue)
+                and self.ai >= len(arrivals)):
+            self.active = False
+            return retires, admits, np.inf
+
+        # 4. the next window's cap: the next arrival or unbounded
+        t_stop = (
+            arrivals[self.ai].arrival_us
+            if self.ai < len(arrivals) else np.inf
+        )
+        return retires, admits, t_stop
+
+    def finalize(
+        self, wall_s: float, capacity: EngineCapacity, final_state=None
+    ) -> SchedResult:
+        """Close the books: horizon-capped leftovers (still-running,
+        queued, and arrivals the horizon cut off before they ever reached
+        the queue) become incomplete records; one stable jid sort."""
+        records = self.records
+        for rec in list(self.running.values()) + list(
+                self.draining.values()):
+            records.append(rec)
+        for qjob in self.queue.jobs + self.arrivals[self.ai:]:
+            records.append(JobRecord(
+                jid=qjob.jid, name=qjob.name, app=qjob.payload.tj.app,
+                n_ranks=qjob.n_ranks, arrival_us=qjob.arrival_us,
+                est_runtime_us=qjob.est_runtime_us,
+            ))
+        records.sort(key=attrgetter("jid"))
+        assert len(records) == len(self.arrivals)
+
+        done = [r for r in records if r.completed]
+        makespan = max((r.finish_us for r in done), default=0.0)
+        util = (
+            sum(r.n_ranks * r.runtime_us for r in done)
+            / max(self.topo.n_nodes * makespan, 1e-9)
+        )
+        return SchedResult(
+            trace=self.trace, policy=self.policy, slots=self.slots,
+            seed=self.seed, records=records, makespan_us=makespan,
+            utilization=util, windows=self.windows, wall_s=wall_s,
+            horizon_hit=self.horizon_hit, n_nodes=self.topo.n_nodes,
+            capacity=capacity, final_state=final_state,
+        )
+
+
 def _run_trace_impl(
     trace: Trace,
     policy: str = "easy",
@@ -220,159 +419,171 @@ def _run_trace_impl(
     tiebreaks). Pass a prebuilt ``engine`` tuple (from
     :func:`build_sched_engine`) to reuse the jit cache across policies
     and seeds — the policy comparison then measures scheduling, not
-    recompilation.
+    recompilation. One :func:`~repro.netsim.engine.window_host_view`
+    fetch per window feeds the whole host round (the historical per-slot
+    ``slot_done``/``slot_in_flight`` reads were each a device fetch).
     """
     slots = slots or trace.slots
     t0 = time.time()
     if engine is None:
         engine = build_sched_engine(trace, slots)
     eng, topo, resolved, net = engine
-    horizon_us = trace.horizon_ms * 1000.0
 
     state = eng.init_state(seed=engine_seed(seed))
-    queue = PendingQueue(policy=policy)
-    free_slots = list(range(slots))
-    occupied = np.zeros((topo.n_nodes,), bool)
-    running: Dict[int, JobRecord] = {}
-    draining: Dict[int, JobRecord] = {}
-    records: List[JobRecord] = []
-    lat0: Dict[int, Tuple[float, int]] = {}  # slot -> (lat_sum, lat_cnt)
-
-    arrivals = [
-        QueuedJob(jid=i, name=r.tj.name, n_ranks=r.n_ranks,
-                  arrival_us=r.arrival_us,
-                  est_runtime_us=float(r.tj.est_runtime_us), payload=r)
-        for i, r in enumerate(resolved)
-    ]
-    ai = 0
-    windows = 0
-    horizon_hit = False
-    guard = 20 * len(arrivals) + 1000
-
-    while ai < len(arrivals) or queue or running or draining:
-        guard -= 1
-        if guard < 0:
-            raise RuntimeError(
-                "scheduler made no progress (windows stopped advancing); "
-                "this is a bug — please report the trace"
-            )
-        t_now = float(state.t)
-        if t_now >= horizon_us:
-            horizon_hit = True
+    cell = _CellLoop(trace, policy, slots, seed, topo, resolved, net)
+    while cell.active:
+        view = window_host_view(state)
+        retires, admits, t_stop = cell.step(view)
+        for slot in retires:
+            state = retire_job(state, slot, checked=False)
+        for slot, spec in admits:
+            state = admit_job(state, slot, spec, checked=False)
+        if not cell.active:
             break
-
-        # 1. arrivals whose time has come (plus a fast-forward pull when
-        # the system is empty: the engine skips to the job's start)
-        while ai < len(arrivals) and arrivals[ai].arrival_us <= t_now:
-            queue.push(arrivals[ai])
-            ai += 1
-        if not queue and not running and not draining and ai < len(arrivals):
-            queue.push(arrivals[ai])
-            ai += 1
-
-        # 2. retire finished slots; free nodes immediately, recycle the
-        # slot once its messages drained
-        for slot, rec in list(running.items()):
-            if slot_done(state, slot):
-                rec.finish_us = min(t_now, horizon_us)
-                rec.completed = True
-                s1 = float(state.metrics.lat_sum[slot])
-                c1 = int(state.metrics.lat_cnt[slot])
-                s0, c0 = lat0[slot]
-                rec.msgs = c1 - c0
-                rec.avg_latency_us = (s1 - s0) / max(rec.msgs, 1)
-                ct = np.asarray(state.vms.comm_time[slot, : rec.n_ranks])
-                rec.max_comm_ms = float(ct.max()) / 1000.0
-                occupied[rec.nodes] = False
-                del running[slot]
-                draining[slot] = rec
-        for slot, rec in list(draining.items()):
-            if not slot_in_flight(state, slot):
-                state = retire_job(state, slot)
-                free_slots.append(slot)
-                records.append(rec)
-                del draining[slot]
-
-        # 3. admissions: the queue policy decides who starts now
-        free_nodes = int(topo.n_nodes - occupied.sum())
-        running_ests = [
-            (r.start_us + r.est_runtime_us, r.n_ranks)
-            for r in running.values()
-        ]
-        # draining slots hold no nodes but do hold their slot until the
-        # last in-flight message lands — model that as an imminent free
-        running_ests += [(t_now + net.tick_us, 0) for _ in draining]
-        starts, _resv = queue.select(
-            t_now, free_nodes, len(free_slots), running_ests)
-        for qjob in starts:
-            r: _Resolved = qjob.payload
-            slot = min(free_slots)
-            free_slots.remove(slot)
-            nodes = place_jobs(
-                topo, [qjob.n_ranks], trace.placement,
-                seed=place_seed(seed, qjob.jid), occupied=occupied,
-            )[0]
-            occupied[nodes] = True
-            start = float(np.float32(max(t_now, qjob.arrival_us)))
-            rec = JobRecord(
-                jid=qjob.jid, name=qjob.name, app=r.tj.app,
-                n_ranks=qjob.n_ranks, arrival_us=qjob.arrival_us,
-                est_runtime_us=qjob.est_runtime_us, slot=slot,
-                start_us=start, nodes=nodes,
-            )
-            lat0[slot] = (
-                float(state.metrics.lat_sum[slot]),
-                int(state.metrics.lat_cnt[slot]),
-            )
-            state = admit_job(
-                state, slot,
-                JobSpec(qjob.name, r.skeleton, nodes, start_us=start),
-            )
-            running[slot] = rec
-
-        if not (running or draining or queue) and ai >= len(arrivals):
-            break
-
-        # 4. one window: run to the next arrival or the next completion
-        t_stop = (
-            arrivals[ai].arrival_us if ai < len(arrivals) else np.inf
-        )
-        with span("sched.window", cat="sched", window=windows,
-                  t_now_us=t_now, queued=len(queue.jobs),
-                  running=len(running)):
+        with span("sched.window", cat="sched", window=cell.windows,
+                  t_now_us=cell.t_now, queued=len(cell.queue.jobs),
+                  running=len(cell.running)):
             state = eng.run_window(state, np.float32(t_stop))
-        windows += 1
+        cell.windows += 1
         log.debug(
             "sched window %d: t=%.1fus queued=%d running=%d draining=%d",
-            windows, t_now, len(queue.jobs), len(running), len(draining),
+            cell.windows, cell.t_now, len(cell.queue.jobs),
+            len(cell.running), len(cell.draining),
         )
-
-    # horizon-capped leftovers: mark incomplete (still-running, queued,
-    # and arrivals the horizon cut off before they ever reached the queue)
-    for rec in list(running.values()) + list(draining.values()):
-        records.append(rec)
-    for qjob in queue.jobs + arrivals[ai:]:
-        records.append(JobRecord(
-            jid=qjob.jid, name=qjob.name, app=qjob.payload.tj.app,
-            n_ranks=qjob.n_ranks, arrival_us=qjob.arrival_us,
-            est_runtime_us=qjob.est_runtime_us,
-        ))
-    records.sort(key=lambda r: r.jid)
-    assert len(records) == len(arrivals)
-
-    done = [r for r in records if r.completed]
-    makespan = max((r.finish_us for r in done), default=0.0)
-    util = (
-        sum(r.n_ranks * r.runtime_us for r in done)
-        / max(topo.n_nodes * makespan, 1e-9)
+    return cell.finalize(
+        time.time() - t0, eng.capacity,
+        state if collect_state else None,
     )
-    return SchedResult(
-        trace=trace, policy=policy, slots=slots, seed=seed, records=records,
-        makespan_us=makespan, utilization=util, windows=windows,
-        wall_s=time.time() - t0, horizon_hit=horizon_hit,
-        n_nodes=topo.n_nodes, capacity=eng.capacity,
-        final_state=state if collect_state else None,
+
+
+def run_trace_batch(
+    specs: Sequence[Tuple[Trace, str, int]],
+    slots: Optional[int] = None,
+    engine=None,
+    collect_state: bool = False,
+    probes=None,
+) -> List[SchedResult]:
+    """Lock-step many trace cells through ONE batched windowed engine.
+
+    ``specs`` is ``[(trace, policy, seed), ...]`` — every cell of a
+    (seed × policy) grid whose traces resolve to the same fabric, net
+    config, horizon and slot count (the planner's ``WindowedBatchNode``
+    buckets guarantee this; mismatches raise). Each round the driver
+
+    1. fetches one :func:`~repro.netsim.engine.window_host_view` covering
+       every member (a single device transfer),
+    2. steps every live cell's host :class:`_CellLoop` — the exact
+       decision path the sequential driver uses,
+    3. applies all cells' retires/admissions in one multi-member scatter
+       each (:func:`retire_jobs` / :func:`admit_jobs`),
+    4. runs one ``run_window`` with a per-member ``t_stop`` vector —
+       every member advances to its OWN next event, finished members
+       freeze in place.
+
+    C cells thus cost ~max(windows) engine dispatches instead of
+    Σ windows, with no per-cell host↔device round-trips — and every
+    member's trajectory stays bit-identical to its own sequential run
+    (pinned by the grid-equality and per-member window tests).
+
+    Pass a prebuilt ``engine`` tuple from :func:`build_sched_engine`
+    (built with ``capacity=`` the union envelope) to share jits; with
+    ``engine=None`` one is built over the union of the specs' envelopes.
+    ``collect_state`` returns each member's final state on its result.
+    """
+    t0 = time.time()
+    specs = list(specs)
+    if not specs:
+        return []
+    resolved_by: Dict[int, Tuple] = {}
+    slots_by: Dict[int, int] = {}
+    for trace, _, _ in specs:
+        if id(trace) not in resolved_by:
+            n_slots = slots or trace.slots
+            resolved_by[id(trace)] = _resolve_trace(trace, n_slots)
+            slots_by[id(trace)] = n_slots
+    first = specs[0][0]
+    if engine is None:
+        cap = resolved_by[id(first)][2]
+        for trace, _, _ in specs:
+            cap = cap.union(resolved_by[id(trace)][2])
+        engine = build_sched_engine(
+            first, slots_by[id(first)], probes=probes, capacity=cap)
+    eng, topo, _, net = engine
+
+    # bucket-compatibility checks: one compiled engine must serve every
+    # cell, so anything baked into the engine has to agree across specs
+    key0 = (fabric_key(topo), net, slots_by[id(first)],
+            first.routing.upper() in ("ADP", "ADAPTIVE"),
+            float(first.horizon_ms))
+    for trace, _, _ in specs:
+        topo_i, _, cap_i, net_i = resolved_by[id(trace)]
+        key_i = (fabric_key(topo_i), net_i, slots_by[id(trace)],
+                 trace.routing.upper() in ("ADP", "ADAPTIVE"),
+                 float(trace.horizon_ms))
+        if key_i != key0:
+            raise ValueError(
+                f"trace {trace.name!r} resolves to a different engine "
+                "config than the batch's; batch cells must share fabric, "
+                "net, slots, routing and horizon"
+            )
+        if (cap_i.Pmax > eng.capacity.Pmax
+                or cap_i.OPmax > eng.capacity.OPmax):
+            raise ValueError(
+                f"trace {trace.name!r} needs envelope {cap_i}, beyond the "
+                f"shared engine's {eng.capacity}"
+            )
+
+    cells = [
+        _CellLoop(trace, policy, slots_by[id(trace)], seed, topo,
+                  resolved_by[id(trace)][1], net)
+        for trace, policy, seed in specs
+    ]
+    batched = stack_members(
+        [eng.init_state(seed=engine_seed(seed)) for _, _, seed in specs])
+    B = len(cells)
+    rounds = 0
+    while True:
+        live = [i for i in range(B) if cells[i].active]
+        if not live:
+            break
+        view = window_host_view(batched)
+        all_retires: List[Tuple[int, int]] = []
+        all_admits: List[Tuple[int, int, JobSpec]] = []
+        t_stop = np.full((B,), np.inf, np.float32)
+        ran: List[_CellLoop] = []
+        for i in live:
+            retires, admits, ts = cells[i].step(view.member(i))
+            all_retires.extend((i, s) for s in retires)
+            all_admits.extend((i, s, sp) for s, sp in admits)
+            if cells[i].active:
+                t_stop[i] = ts
+                ran.append(cells[i])
+        batched = retire_jobs(batched, all_retires)
+        batched = admit_jobs(batched, all_admits)
+        if not ran:
+            break
+        # finished / horizon-hit members are not live and freeze in
+        # place; everyone else advances to its own next event
+        with span("sched.batch_window", cat="sched", round=rounds,
+                  cells=len(ran)):
+            batched = eng.run_window(batched, t_stop)
+        rounds += 1
+        for c in ran:
+            c.windows += 1
+        log.debug(
+            "sched batch round %d: %d/%d cells live", rounds, len(ran), B)
+
+    wall = time.time() - t0
+    finals = (
+        [member_state(batched, i) for i in range(B)]
+        if collect_state else [None] * B
     )
+    # wall attribution: the rounds are shared work — split evenly so
+    # per-cell jobs/sec stays meaningful and sums to the aggregate
+    return [
+        c.finalize(wall / B, eng.capacity, f)
+        for c, f in zip(cells, finals)
+    ]
 
 
 # back-compat alias: the derivation now lives in repro.union.seeds,

@@ -185,7 +185,9 @@ def run_sched_campaign(
     (same job stream every seed) or a callable ``seed -> Trace`` (fresh
     arrival draws per seed). One engine per trace envelope is drawn from
     the process-wide cache and shared across the policy comparison, so
-    the deltas measure scheduling, not recompilation.
+    the deltas measure scheduling, not recompilation — and compatible
+    (seed × policy) cells lock-step through one batched engine via the
+    planner's ``WindowedBatchNode`` (bit-identical to per-cell runs).
     """
     from repro.union import experiment as EXP
 

@@ -43,7 +43,7 @@ import json
 import time
 import warnings
 from dataclasses import asdict, dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 
@@ -151,6 +151,7 @@ class TraceStudy:
     policies: List[str] = field(default_factory=lambda: ["easy"])
     seeds: Union[int, List[int]] = 1
     tau_us: float = 10_000.0  # bounded-slowdown threshold for summaries
+    batch: bool = True  # lock-step compatible cells through one engine
     trace: Optional[Any] = None  # repro.sched.Trace
     factory: Optional[Callable] = field(default=None, repr=False)
 
@@ -227,6 +228,8 @@ class TraceStudy:
                       "policies", "seeds", "tau_us")
             if getattr(self, k) is not None
         }
+        if not self.batch:
+            d["batch"] = False
         if self.factory is not None:
             # a record of what ran, not a reconstructible spec — loading
             # it back raises with the path (factory must be a callable)
@@ -568,11 +571,32 @@ def _exec_batched(node, exp: Experiment) -> List[CellResult]:
     return out
 
 
-def _exec_windowed(node, exp: Experiment) -> List[CellResult]:
+def _trace_cell_result(cell, trace, res, study, probes, topo) -> CellResult:
+    """Wrap one SchedResult as a CellResult (shared by both trace paths)."""
+    from repro.union.report import sched_summary
+
+    rep = sched_summary(res, tau_us=study.tau_us)
+    if probes is not None and res.final_state is not None:
+        from repro.obs import probe_timelines
+
+        # trace cells recycle job slots, so probe app-axis rows are
+        # *slots*, not jobs — label them as such.
+        rep["probes"] = probe_timelines(
+            res.final_state.probes, list(topo.link_levels()),
+            [f"slot{j}" for j in range(res.slots)],
+        )
+    return CellResult(
+        kind="trace", name=trace.name, seed=cell.seed,
+        placement=trace.placement, routing=trace.routing,
+        policy=cell.policy, fabric=trace.topo,
+        report=rep,
+    )
+
+
+def _exec_windowed(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
     """The slot-recycling scheduler loop per (trace seed × policy) cell;
     engines come from the shared process-wide cache."""
     from repro.sched.scheduler import _run_trace_impl, build_sched_engine
-    from repro.union.report import sched_summary
 
     study = node.study
     probes = exp.probe_config()
@@ -595,24 +619,38 @@ def _exec_windowed(node, exp: Experiment) -> List[CellResult]:
                 collect_state=probes is not None,
             )
             sp.set(windows=res.windows, jobs=len(res.records))
-        rep = sched_summary(res, tau_us=study.tau_us)
-        if probes is not None and res.final_state is not None:
-            from repro.obs import probe_timelines
-
-            # trace cells recycle job slots, so probe app-axis rows are
-            # *slots*, not jobs — label them as such.
-            topo = engine[1]
-            rep["probes"] = probe_timelines(
-                res.final_state.probes, list(topo.link_levels()),
-                [f"slot{j}" for j in range(res.slots)],
-            )
-        out.append(CellResult(
-            kind="trace", name=trace.name, seed=cell.seed,
-            placement=trace.placement, routing=trace.routing,
-            policy=cell.policy, fabric=trace.topo,
-            report=rep,
-        ))
+        out.append((cell.index, _trace_cell_result(
+            cell, trace, res, study, probes, engine[1])))
     return out
+
+
+def _exec_windowed_batch(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
+    """Lock-step every (seed × policy) cell of the node through ONE
+    batched windowed engine — a single compiled executable, one device
+    fetch and one window dispatch per round, per-member ``t_stop``
+    advancing each cell to its own next event. Bit-identical to
+    :func:`_exec_windowed` cell by cell."""
+    from repro.sched.scheduler import build_sched_engine, run_trace_batch
+
+    study = node.study
+    probes = exp.probe_config()
+    first = node.traces[node.cells[0].seed]
+    with span("engine.cache_get", cat="engine", trace=first.name):
+        engine = build_sched_engine(
+            first, study.slots, probes=probes, capacity=node.capacity)
+    specs = [(node.traces[c.seed], c.policy, c.seed) for c in node.cells]
+    with span("sched.trace_batch", cat="sched", cells=len(specs)) as sp:
+        results = run_trace_batch(
+            specs, slots=study.slots, engine=engine,
+            collect_state=probes is not None, probes=probes,
+        )
+        sp.set(windows=max(r.windows for r in results),
+               jobs=sum(len(r.records) for r in results))
+    return [
+        (cell.index, _trace_cell_result(
+            cell, node.traces[cell.seed], res, study, probes, engine[1]))
+        for cell, res in zip(node.cells, results)
+    ]
 
 
 def run(experiment, plan=None) -> Results:
@@ -634,19 +672,31 @@ def run(experiment, plan=None) -> Results:
             plan = PLN.plan(experiment)
         stats0 = engine_cache_stats()
         t0 = time.time()
-        # scenario cells come back bucket-grouped; restore study order via
-        # the planner's cell ordinals, then append trace cells.
+        # cells come back bucket-grouped; restore study order via the
+        # planner's cell ordinals (scenario and trace ordinals are
+        # separate spaces: scenario cells first, then trace cells).
         indexed: List = []
-        trace_cells: List[CellResult] = []
+        trace_indexed: List = []
+        node_kinds: Dict[str, Dict[str, float]] = {}
         for node in plan.nodes:
+            nt0 = time.time()
             if node.kind == "batched":
                 indexed.extend(_exec_batched(node, plan.experiment))
             elif node.kind == "windowed":
-                trace_cells.extend(_exec_windowed(node, plan.experiment))
+                trace_indexed.extend(_exec_windowed(node, plan.experiment))
+            elif node.kind == "windowed_batch":
+                trace_indexed.extend(
+                    _exec_windowed_batch(node, plan.experiment))
             else:
                 raise ValueError(f"unknown plan node kind {node.kind!r}")
+            agg = node_kinds.setdefault(
+                node.kind, dict(nodes=0, cells=0, wall_s=0.0))
+            agg["nodes"] += 1
+            agg["cells"] += len(node.cells)
+            agg["wall_s"] += time.time() - nt0
         cells = (
-            [c for _, c in sorted(indexed, key=lambda p: p[0])] + trace_cells
+            [c for _, c in sorted(indexed, key=lambda p: p[0])]
+            + [c for _, c in sorted(trace_indexed, key=lambda p: p[0])]
         )
         stats1 = engine_cache_stats()
         res = Results(
@@ -664,6 +714,13 @@ def run(experiment, plan=None) -> Results:
         # this run's spans only (the tracer is process-wide)
         spans=(summarize(get_tracer().events[ev0:]) if tracing() else {}),
         engine_cache=engine_cache_stats(),
+        # wall time per execution style — makes batching wins visible in
+        # every artifact, not just the benchmarks
+        node_kinds={
+            k: dict(nodes=v["nodes"], cells=v["cells"],
+                    wall_s=round(v["wall_s"], 4))
+            for k, v in node_kinds.items()
+        },
         probes=(
             dict(samples=plan.experiment.probes,
                  every=plan.experiment.probe_every)

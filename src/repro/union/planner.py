@@ -70,6 +70,7 @@ class TraceCell:
 
     seed: int
     policy: str
+    index: int = 0  # study-wide cell ordinal (Results preserve this order)
 
 
 @dataclass
@@ -97,6 +98,27 @@ class WindowedNode:
 
 
 @dataclass
+class WindowedBatchNode:
+    """One batched windowed engine lock-stepping many trace cells.
+
+    Every cell's trace resolved to the same engine configuration (fabric
+    key, net, slots, routing mode, horizon) — the same compatibility rule
+    :func:`bucket_key` applies to scenario members — so one compiled
+    engine serves the whole (seed × policy) grid: each window round runs
+    every live cell to its own next event via a per-member ``t_stop``
+    vector. ``capacity`` is the union envelope over the cells' traces;
+    ``traces`` maps seed → materialized trace (fixed-stream studies share
+    one object across seeds).
+    """
+
+    study: Any  # repro.union.experiment.TraceStudy
+    cells: List[TraceCell]
+    capacity: EngineCapacity
+    traces: Dict[int, Any] = field(repr=False, default_factory=dict)
+    kind: str = "windowed_batch"
+
+
+@dataclass
 class Plan:
     """The lowered experiment: an ordered list of execution nodes."""
 
@@ -111,6 +133,10 @@ class Plan:
     def windowed_nodes(self) -> List[WindowedNode]:
         return [n for n in self.nodes if n.kind == "windowed"]
 
+    @property
+    def windowed_batch_nodes(self) -> List[WindowedBatchNode]:
+        return [n for n in self.nodes if n.kind == "windowed_batch"]
+
     def describe(self) -> str:
         """Human-readable lowering: nodes, envelopes, engine reuse."""
         lines = [f"plan for experiment {self.experiment.name!r}:"]
@@ -122,6 +148,15 @@ class Plan:
                 lines.append(
                     f"  node {i}: batched × {len(node.cells)} members "
                     f"({'+'.join(names)}) @ fabric {fabric} @ envelope "
+                    f"(Jmax={cap.Jmax}, Pmax={cap.Pmax}, OPmax={cap.OPmax})"
+                )
+            elif node.kind == "windowed_batch":
+                cap = node.capacity
+                seeds = sorted({c.seed for c in node.cells})
+                lines.append(
+                    f"  node {i}: batched scheduler × {len(node.cells)} "
+                    f"trace cells ({len(seeds)} seeds × policies "
+                    f"{sorted({c.policy for c in node.cells})}) @ envelope "
                     f"(Jmax={cap.Jmax}, Pmax={cap.Pmax}, OPmax={cap.OPmax})"
                 )
             else:
@@ -201,11 +236,63 @@ def _plan(exp) -> Plan:
                                  host=group[0].rs))
 
     if exp.trace is not None:
-        study = exp.trace
-        tseeds = study.seed_list(exp.base_seed)
-        nodes.append(WindowedNode(
-            study=study,
-            cells=[TraceCell(seed=s, policy=p)
-                   for s in tseeds for p in study.policies],
-        ))
+        nodes.extend(_plan_trace(exp))
     return Plan(experiment=exp, nodes=nodes)
+
+
+def _plan_trace(exp) -> List[Any]:
+    """Lower the experiment's TraceStudy into scheduler nodes.
+
+    Trace cells bucket by engine compatibility exactly like scenario
+    members do: cells whose traces resolve to the same (fabric key,
+    routing mode, net config, horizon, slots) share one compiled engine
+    and become a :class:`WindowedBatchNode` with the union capacity
+    envelope; singleton buckets — and studies opting out via
+    ``batch=False`` — fall back to the sequential :class:`WindowedNode`.
+    Either way the cells carry study-wide ordinals so Results keep the
+    (seed-major, policy-minor) order regardless of node grouping.
+    """
+    study = exp.trace
+    tseeds = study.seed_list(exp.base_seed)
+    cells = [
+        TraceCell(seed=s, policy=p, index=i)
+        for i, (s, p) in enumerate(
+            (s, p) for s in tseeds for p in study.policies)
+    ]
+    if not getattr(study, "batch", True) or len(cells) < 2:
+        return [WindowedNode(study=study, cells=cells)]
+
+    # resolution (job-source parsing, topology build) happens here at
+    # plan time; the executor resolves again per unique trace — cheap
+    # next to simulation, and it keeps the plan a pure description.
+    from repro.netsim.fabric import fabric_key
+    from repro.sched.scheduler import _resolve_trace
+
+    traces = {s: study.trace_for(s) for s in tseeds}
+    resolved: Dict[int, Tuple] = {}
+    buckets: Dict[Tuple, List[TraceCell]] = {}
+    for cell in cells:
+        tr = traces[cell.seed]
+        n_slots = study.slots or tr.slots
+        if id(tr) not in resolved:
+            resolved[id(tr)] = _resolve_trace(tr, n_slots)
+        topo, _, _, net = resolved[id(tr)]
+        key = (fabric_key(topo),
+               tr.routing.upper() in ("ADP", "ADAPTIVE"), net,
+               float(tr.horizon_ms), n_slots)
+        buckets.setdefault(key, []).append(cell)
+
+    nodes: List[Any] = []
+    for group in buckets.values():
+        if len(group) < 2:
+            nodes.append(WindowedNode(study=study, cells=group))
+            continue
+        cap = None
+        for cell in group:
+            cap_i = resolved[id(traces[cell.seed])][2]
+            cap = cap_i if cap is None else cap.union(cap_i)
+        nodes.append(WindowedBatchNode(
+            study=study, cells=group, capacity=cap,
+            traces={s: traces[s] for s in {c.seed for c in group}},
+        ))
+    return nodes

@@ -287,8 +287,17 @@ def format_results(results) -> str:
         f"{cache.get('hits', 0)} hits, {cache.get('misses', 0)} "
         f"compiles{ratio})"
     ]
+    telemetry = getattr(results, "telemetry", None) or {}
+    # execution-style accounting: how the planner split the cells and
+    # what each style cost (batched scheduler vs per-cell windowed loop)
+    node_kinds = telemetry.get("node_kinds") or {}
+    if node_kinds:
+        lines.append("  node kinds: " + " | ".join(
+            f"{kind}: {v['cells']} cells / {v['nodes']} node(s) "
+            f"in {v['wall_s']:.1f}s"
+            for kind, v in sorted(node_kinds.items())))
     # host-plane telemetry (repro.obs): where this run's wall-clock went
-    spans = (getattr(results, "telemetry", None) or {}).get("spans") or {}
+    spans = telemetry.get("spans") or {}
     for i, (name, total_ms) in enumerate(spans.get("top", [])):
         info = spans.get("by_name", {}).get(name, {})
         lines.append(

@@ -63,6 +63,21 @@ def golden_trace():
         name="golden-trace")
 
 
+def small_trace_factory(seed):
+    """Fresh 6-job draws per seed — exercises multi-trace batching where
+    every member's job stream (and capacity envelope) differs."""
+    catalog = [
+        CatalogApp(app="pp", ranks=2, est_runtime_us=1500.0, weight=2.0,
+                   source=PP.replace("1024", "2048")),
+        CatalogApp(app="ar", ranks=8, est_runtime_us=4000.0, weight=1.0,
+                   source=AR),
+    ]
+    return synthetic_trace(
+        6, arrival="poisson", mean_gap_us=400.0, seed=seed, catalog=catalog,
+        slots=3, tick_us=5.0, horizon_ms=60_000.0, pool_size=1024,
+        name=f"grid-{seed}")
+
+
 @pytest.fixture(scope="module")
 def golden():
     with open(GOLDEN) as f:
@@ -129,6 +144,43 @@ def test_trace_study_matches_golden(golden):
             assert row["finish_us"] == gj["finish_us"]
             assert row["msgs"] == gj["msgs"]
             assert row["avg_latency_us"] == gj["avg_latency_us"]
+
+
+def test_batched_trace_grid_matches_sequential():
+    """The acceptance grid: a (4 seeds × 3 policies) TraceStudy through
+    the lock-step WindowedBatchNode is bit-identical, cell by cell, to
+    the sequential per-cell path (``batch=False``) — including window
+    counts, per-job starts/finishes and message metrics."""
+    from repro.union import planner as PLN
+
+    def study(batch):
+        return union.Experiment(
+            name=f"grid-{batch}",
+            trace=union.TraceStudy(
+                factory=small_trace_factory, slots=3,
+                policies=["fcfs", "easy", "conservative"],
+                seeds=[0, 1, 2, 3], batch=batch))
+
+    plan_b = PLN.plan(study(True))
+    assert len(plan_b.windowed_batch_nodes) == 1
+    assert len(plan_b.windowed_batch_nodes[0].cells) == 12
+    assert "batched scheduler × 12 trace cells" in plan_b.describe()
+    plan_s = PLN.plan(study(False))
+    assert plan_s.windowed_batch_nodes == [] and len(
+        plan_s.windowed_nodes[0].cells) == 12
+
+    res_b = union.run(study(True))
+    res_s = union.run(study(False))
+    assert res_b.telemetry["node_kinds"].keys() == {"windowed_batch"}
+    assert res_s.telemetry["node_kinds"].keys() == {"windowed"}
+    assert len(res_b.cells) == len(res_s.cells) == 12
+    for cb, cs in zip(res_b.cells, res_s.cells):
+        assert (cb.seed, cb.policy, cb.name) == (cs.seed, cs.policy, cs.name)
+        rb = {k: v for k, v in cb.report.items()
+              if k not in ("wall_s", "jobs_per_sec")}
+        rs = {k: v for k, v in cs.report.items()
+              if k not in ("wall_s", "jobs_per_sec")}
+        assert rb == rs, f"cell {cb.seed}/{cb.policy} diverged"
 
 
 # ---------------------------------------------------------------------------

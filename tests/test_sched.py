@@ -250,6 +250,97 @@ def test_batched_run_window_freezes_members_independently(topo):
         assert _state_equal(singles[i], member_state(batched, i))
 
 
+def _per_member_engine(topo):
+    sk_pp = translate_source(PP, "pp_pm", 2)
+    sk_ar = translate_source(AR, "ar_pm", 8)
+    pl = place_jobs(topo, [2, 8], "RN", seed=9)
+    jobs = [JobSpec("pp", sk_pp, pl[0], start_us=0.0),
+            JobSpec("ar", sk_ar, pl[1], start_us=400.0)]
+    return build_engine(topo, jobs,
+                        net=NetConfig(pool_size=512, tick_us=2.0),
+                        pool_size=512)
+
+
+def _check_per_member_stops(eng, stops_a, stops_b):
+    """ARBITRARY per-member stop sequences through one batched state are
+    bit-identical to each member running its own B=1 chained windows."""
+    from repro.netsim.engine import member_state, stack_members
+
+    R = max(len(stops_a), len(stops_b)) + 1  # final window: unbounded
+    seqs = [
+        [np.float32(s) for s in stops]
+        + [np.float32(np.inf)] * (R - len(stops))
+        for stops in (stops_a, stops_b)
+    ]
+    singles = [eng.init_state(seed=s) for s in (3, 4)]
+    batched = stack_members(list(singles))
+    for r in range(R):
+        singles = [
+            eng.run_window(s, seqs[i][r]) for i, s in enumerate(singles)
+        ]
+        batched = eng.run_window(
+            batched, np.array([seqs[0][r], seqs[1][r]], np.float32))
+    for i in (0, 1):
+        assert _state_equal(singles[i], member_state(batched, i))
+
+
+def test_per_member_t_stop_chained_windows(topo):
+    """Per-member ``t_stop`` vectors pin the lock-step batched scheduler:
+    each member of one batched state follows its OWN stop sequence
+    bit-identically to its B=1 chained windows — and arrival-aligned
+    sequences reproduce one uninterrupted run (the scalar chained-window
+    invariant of ``test_chained_windows_bitexact_vs_single_run``, now
+    per member)."""
+    from repro.netsim.engine import member_state, stack_members
+
+    eng = _per_member_engine(topo)
+    # representative mid-window / boundary / empty stop mixes (the
+    # hypothesis variant below widens this when available)
+    for stops_a, stops_b in [
+        ([400.0], []),                      # arrival vs never pausing
+        ([123.0, 800.0], [456.0]),          # mid-PDES-skip interrupts
+        ([50.0, 60.0, 70.0], [2_999.0]),    # dense early vs one late stop
+    ]:
+        _check_per_member_stops(eng, stops_a, stops_b)
+
+    # arrival-aligned per-member stops ≡ one long run per member: member 0
+    # pauses at the ar job's arrival then drains in completion-bounded
+    # windows, member 1 never pauses — both must land on the
+    # uninterrupted ``run`` bit-exactly.
+    refs = [jax.block_until_ready(eng.run(eng.init_state(seed=s)))
+            for s in (3, 4)]
+    batched = stack_members([eng.init_state(seed=s) for s in (3, 4)])
+    batched = eng.run_window(
+        batched, np.array([400.0, np.inf], np.float32))
+    while True:
+        prev = (np.asarray(batched.t).copy(), np.asarray(batched.rng).copy())
+        batched = eng.run_window(
+            batched, np.array([np.inf, np.inf], np.float32))
+        if (np.array_equal(np.asarray(batched.t), prev[0])
+                and np.array_equal(np.asarray(batched.rng), prev[1])):
+            break
+    for i in (0, 1):
+        assert _state_equal(refs[i], member_state(batched, i))
+
+
+def test_per_member_t_stop_property(topo):
+    """Hypothesis sweep over arbitrary per-member stop sequences."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    eng = _per_member_engine(topo)
+    stops_st = st.lists(
+        st.floats(min_value=1.0, max_value=3_000.0), min_size=0, max_size=4,
+    ).map(sorted)
+
+    @settings(max_examples=20, deadline=None)
+    @given(stops_st, stops_st)
+    def prop(stops_a, stops_b):
+        _check_per_member_stops(eng, stops_a, stops_b)
+
+    prop()
+
+
 def test_slot_recycling_reuses_envelope(topo):
     """Three sequential tenants stream through a Jmax=1 envelope."""
     from repro.netsim.engine import admit_job, retire_job, slot_done
@@ -417,6 +508,42 @@ def test_fcfs_vs_easy_through_engine(topo):
     assert e["small"].wait_us < 100.0
     assert f["small"].wait_us > 2000.0
     assert out["easy"].makespan_us < out["fcfs"].makespan_us
+
+
+def test_conservative_matches_simulate_queue_ordering(topo):
+    """The analytic ``simulate_queue`` and the full engine-backed
+    scheduler agree on start ORDERING under ``conservative`` (start
+    times differ: estimates vs simulated runtimes) — the FCFS/EASY
+    cross-checks' missing third policy, on a contended 3-app trace."""
+    tr = Trace(
+        name="contend-cons", topo="1d", scale="small", placement="RN",
+        routing="MIN", tick_us=5.0, horizon_ms=400.0, pool_size=2048,
+        slots=3,
+        jobs=[
+            TraceJob(name="big", app="big", ranks=300, arrival_us=0.0,
+                     est_runtime_us=3200.0, source=COMPUTE_BIG),
+            TraceJob(name="wide", app="wide", ranks=400, arrival_us=100.0,
+                     est_runtime_us=1200.0, source=COMPUTE_MED),
+            TraceJob(name="small", app="small", ranks=50, arrival_us=200.0,
+                     est_runtime_us=2700.0, source=COMPUTE_SMALL),
+        ],
+    )
+    res = run_trace(tr, policy="conservative", seed=0)
+    assert all(r.completed for r in res.records)
+    sched_order = [r.jid for r in sorted(
+        res.records, key=lambda r: (r.start_us, r.jid))]
+
+    jobs = [_qj(i, j.ranks, j.arrival_us, j.est_runtime_us)
+            for i, j in enumerate(tr.jobs)]
+    sim = simulate_queue(jobs, n_nodes=topo.n_nodes, n_slots=3,
+                         policy="conservative")
+    sim_order = sorted(
+        sim["spans"], key=lambda jid: (sim["spans"][jid]["start_us"], jid))
+    assert sched_order == sim_order
+    # the contention is real: "small" (50 ranks) may only start within
+    # "wide"'s reservation — under conservative it must not jump ahead
+    # of the blocked wide job's reserved start in either model
+    assert sched_order.index(2) > sched_order.index(0)
 
 
 @pytest.mark.slow
