@@ -1,0 +1,146 @@
+"""Bench regression gate: newest ``BENCH_union.json`` entry vs its
+predecessor, per bench profile.
+
+The bench ledger is append-only — every ``bench_union.py`` run appends a
+record with its provenance (git commit, jax version, backend). This
+checker turns the ledger into a gate: for each bench name, take the
+newest entry and the most recent *comparable* earlier entry (same shape
+keys: members/jobs/slots/seeds/policies), and fail when a warm
+throughput metric regressed by more than the threshold (default 20%).
+
+Wall-clock benches compare inverted (lower is better); provenance of
+both entries is printed on every failure so a regression is attributable
+to a commit/backend pair at a glance.
+
+  PYTHONPATH=src python -m benchmarks.check_bench [--threshold 0.2]
+                                                  [--path BENCH_union.json]
+
+Exit status: 1 when any comparison regresses, 0 otherwise (including
+"nothing to compare yet" — a fresh ledger must not fail CI).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_union import load_bench  # noqa: E402
+
+# metric selectors per bench profile: (key predicate, higher_is_better)
+_HIGHER = True
+_LOWER = False
+PROFILE_METRICS = {
+    "union_ensemble_throughput": [
+        ("vmapped_warm_members_per_sec", _HIGHER),
+        ("looped_warm_members_per_sec", _HIGHER),
+    ],
+    "union_trace_batched": [
+        ("batched_jobs_per_sec", _HIGHER),
+        ("sequential_jobs_per_sec", _HIGHER),
+    ],
+    "union_experiment_facade": [
+        ("warm_facade_wall_s", _LOWER),
+    ],
+    # fabric profile keys are dynamic (<fabric>_warm_members_per_sec)
+}
+
+# entries only compare against predecessors with the same workload
+# shape — a --quick smoke must never gate against a full-profile run
+SHAPE_KEYS = ("members", "jobs", "slots", "seeds", "policies",
+              "grid_cells", "total_jobs")
+
+
+def _shape(entry) -> tuple:
+    return tuple(
+        (k, tuple(v) if isinstance(v, list) else v)
+        for k in SHAPE_KEYS
+        if (v := entry.get(k)) is not None
+    )
+
+
+def _metrics_for(entry):
+    """The (key, higher_is_better) metric list for one ledger entry."""
+    fixed = PROFILE_METRICS.get(entry["bench"])
+    if fixed is not None:
+        return [(k, hib) for k, hib in fixed if k in entry]
+    # dynamic profiles (union_fabric_profile): every warm-throughput key
+    return [(k, _HIGHER) for k in sorted(entry)
+            if k.endswith("_warm_members_per_sec")]
+
+
+def _provenance_line(entry) -> str:
+    p = entry.get("provenance", {})
+    return (f"commit={p.get('git_commit')} jax={p.get('jax_version')} "
+            f"backend={p.get('backend')}x{p.get('device_count')}")
+
+
+def compare(entries, threshold: float, out=print):
+    """Compare the newest entry of each bench vs its predecessor.
+
+    Returns the list of regression description strings (empty = pass).
+    """
+    by_bench = {}
+    for e in entries:
+        by_bench.setdefault(e["bench"], []).append(e)
+
+    regressions = []
+    for bench, history in by_bench.items():
+        new = history[-1]
+        prev = next(
+            (e for e in reversed(history[:-1]) if _shape(e) == _shape(new)),
+            None)
+        if prev is None:
+            out(f"[{bench}] no comparable predecessor "
+                f"(shape {dict(_shape(new)) or '{}'}) — skipped")
+            continue
+        for key, higher_better in _metrics_for(new):
+            if key not in prev:
+                continue
+            old_v, new_v = float(prev[key]), float(new[key])
+            if old_v <= 0:
+                continue
+            if higher_better:
+                regressed = new_v < old_v * (1.0 - threshold)
+                arrow = f"{old_v:.3g} -> {new_v:.3g}"
+            else:
+                regressed = new_v > old_v * (1.0 + threshold)
+                arrow = f"{old_v:.3g}s -> {new_v:.3g}s"
+            status = "REGRESSION" if regressed else "ok"
+            out(f"[{bench}] {key}: {arrow} ({status})")
+            if regressed:
+                regressions.append(f"{bench}.{key}: {arrow}")
+                out(f"  old: {_provenance_line(prev)}")
+                out(f"  new: {_provenance_line(new)}")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when the newest BENCH_union.json entry regresses "
+        "its predecessor's warm throughput")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="allowed relative regression (default 0.2 = 20%%)")
+    ap.add_argument("--path", default=None,
+                    help="ledger path (default: benchmarks/../"
+                    "BENCH_union.json)")
+    args = ap.parse_args(argv)
+
+    entries = load_bench(args.path, backfill=True)
+    if not entries:
+        print("no bench ledger yet — nothing to check")
+        return 0
+    regressions = compare(entries, args.threshold)
+    if regressions:
+        print(f"\n{len(regressions)} bench regression(s) beyond "
+              f"{args.threshold:.0%}:")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print("bench check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,9 @@ from repro.core.skeleton import OP, SkeletonProgram
 from repro.kernels import ops as KOPS
 from repro.netsim.config import NetConfig
 from repro.netsim.fabric import Fabric, fabric_key, routing_tables
+from repro.obs.hist import (
+    HistConfig, HistState, init_hist, update_hist,
+)
 from repro.obs.probes import (
     ProbeConfig, ProbeState, init_probes, sample_probes,
 )
@@ -146,6 +149,9 @@ class SimState(NamedTuple):
     # like ``ur``) unless the engine was built with a ProbeConfig — the
     # unprobed state layout is unchanged, so goldens stay bit-identical.
     probes: Optional[ProbeState] = None
+    # full-fidelity per-(app, link-level) latency histograms (repro.obs):
+    # None unless built with a HistConfig, same discipline as ``probes``.
+    hist: Optional[HistState] = None
 
 
 @dataclass
@@ -352,6 +358,7 @@ def build_engine(
     capacity: Optional[EngineCapacity] = None,
     use_pallas: Optional[bool] = None,
     probes: Optional[ProbeConfig] = None,
+    hist: Optional[HistConfig] = None,
 ):
     """Returns an :class:`Engine` — unpacks as ``(init_state, run, tick)``;
     ``run``: state -> final state (jit); ``engine.run_window`` additionally
@@ -433,6 +440,18 @@ def build_engine(
              * np.asarray(link_ok))[:, None] * _lm
         ).sum(axis=0)  # (n_levels,)
         probe_n_levels = _lm.shape[1]
+
+    # histogram constants: link -> fabric-level index, baked at build time
+    # (a message's level is the max level any of its route links sits on;
+    # intra-node messages with no route links land on level 0). The table
+    # carries a dummy 0 row at index L so padded route entries are inert.
+    if hist is not None:
+        _hl = np.zeros((L + 1,), np.int32)
+        _levels = topo.link_levels()
+        for _li, _mask in enumerate(_levels.values()):
+            _hl[:L][np.asarray(_mask, bool)] = _li
+        hist_link_level = jnp.asarray(_hl)
+        hist_n_levels = max(len(_levels), 1)
 
     # static candidate-index patterns for the stacked injection pass:
     # candidates are job-major, rank-major, emission-minor — the same order
@@ -813,6 +832,22 @@ def build_engine(
         lat_min = _flat_min(metrics.lat_min, app_of, jnp.where(delivered, lat, jnp.inf))
         lat_max = _flat_max(metrics.lat_max, app_of, jnp.where(delivered, lat, -jnp.inf))
 
+        # full-fidelity (app, link-level) histograms (compiled in only
+        # when requested; ``delivered`` is already live_m-gated above)
+        hist_st = state.hist
+        if hist is not None:
+            msg_lvl = jnp.max(
+                jnp.where(
+                    pool.routes >= 0,
+                    hist_link_level[jnp.clip(pool.routes, 0, L)], 0,
+                ),
+                axis=-1,
+            )  # (B, M)
+            hist_st = update_hist(
+                hist_st, hist,
+                lat=lat, delivered=delivered, app=app_of, level=msg_lvl,
+            )
+
         # --- 4. delivery notifications -> VMs (UR id J is dropped) ---
         notify = delivered & (pool.job < J)
         sd = _flat_add(
@@ -952,6 +987,7 @@ def build_engine(
             metrics=metrics,
             rng=jnp.where(live_m, rng2 + jnp.uint32(1), rng),
             jobs=jt, ur_nodes=state.ur_nodes, probes=probes_st,
+            hist=hist_st,
         )
 
     # ------------------------------------------------------------------
@@ -1047,6 +1083,10 @@ def build_engine(
                 init_probes(probes, probe_n_levels, n_apps)
                 if probes is not None else None
             ),
+            hist=(
+                init_hist(hist, n_apps, hist_n_levels)
+                if hist is not None else None
+            ),
         )
 
     def all_done(state: SimState):
@@ -1139,6 +1179,7 @@ def engine_cache_key(
     link_down: Optional[np.ndarray] = None,
     use_pallas: Optional[bool] = None,
     probes: Optional[ProbeConfig] = None,
+    hist: Optional[HistConfig] = None,
 ) -> Tuple:
     """Everything baked into a compiled engine besides the job tables.
 
@@ -1146,10 +1187,10 @@ def engine_cache_key(
     family name plus defining parameters — so two fabrics with identical
     capacity envelopes never share a compiled engine. The UR source
     contributes only its *shape* (rank count and traffic parameters) —
-    its placement is overridable per member at init time. ``probes`` is
-    part of the key: a probed engine is a separate compiled entry, so
-    requesting probes never perturbs the unprobed engines other callers
-    hold.
+    its placement is overridable per member at init time. ``probes`` and
+    ``hist`` are part of the key: an observed engine is a separate
+    compiled entry, so requesting probes or histograms never perturbs
+    the plain engines other callers hold.
     """
     net = net or NetConfig()
     ur_key = None if ur is None else (
@@ -1163,7 +1204,7 @@ def engine_cache_key(
     return (
         fabric_key(topo), routing.upper() in ("ADP", "ADAPTIVE"), ur_key,
         net, int(pool_size or net.pool_size), float(horizon_us), capacity,
-        down_key, use_pallas, probes,
+        down_key, use_pallas, probes, hist,
     )
 
 
@@ -1179,6 +1220,7 @@ def get_engine(
     link_down: Optional[np.ndarray] = None,
     use_pallas: Optional[bool] = None,
     probes: Optional[ProbeConfig] = None,
+    hist: Optional[HistConfig] = None,
 ) -> Engine:
     """A compiled engine from the process-wide cache (compile on miss).
 
@@ -1191,7 +1233,7 @@ def get_engine(
     key = engine_cache_key(
         topo, routing=routing, ur=ur, net=net, pool_size=pool_size,
         horizon_us=horizon_us, capacity=capacity, link_down=link_down,
-        use_pallas=use_pallas, probes=probes,
+        use_pallas=use_pallas, probes=probes, hist=hist,
     )
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
@@ -1202,7 +1244,7 @@ def get_engine(
     eng = build_engine(
         topo, [], routing=routing, ur=ur, net=net, pool_size=pool_size,
         horizon_us=horizon_us, link_down=link_down, capacity=capacity,
-        use_pallas=use_pallas, probes=probes,
+        use_pallas=use_pallas, probes=probes, hist=hist,
     )
     _ENGINE_CACHE[key] = eng
     return eng

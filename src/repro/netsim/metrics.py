@@ -156,7 +156,7 @@ def check_dropped(state, strict: bool = False) -> int:
 
 def run_report(state, app_names, topo, net, sim_wall_s: float = 0.0,
                strict: bool = False) -> Dict[str, Any]:
-    return dict(
+    rep = dict(
         virtual_time_ms=float(state.t) / 1000.0,
         dropped=check_dropped(state, strict=strict),
         peak_inject_bytes_per_tick=float(state.metrics.peak_inject),
@@ -168,3 +168,12 @@ def run_report(state, app_names, topo, net, sim_wall_s: float = 0.0,
         link_utilization=link_level_utilization(state, topo),
         sim_wall_s=sim_wall_s,
     )
+    # full-fidelity (app, link-level) latency histograms ride along when
+    # the state came from a histogrammed engine (repro.obs.hist)
+    if getattr(state, "hist", None) is not None:
+        from repro.obs.hist import hist_summary
+
+        rep["latency_hist"] = hist_summary(
+            state.hist, app_names, list(topo.link_levels())
+        )
+    return rep

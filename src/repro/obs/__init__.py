@@ -7,13 +7,22 @@ scheduler loops — exported as Chrome trace-event JSON (Perfetto) or a
 structured JSONL run log, plus the leveled run logger ``log`` that
 replaces stray prints across the CLI/scheduler/launch layers.
 
-**Sim plane** (:mod:`repro.obs.probes`): fixed-size ring buffers inside
-``SimState`` sampling per-level link utilization, per-app in-flight
-latency, pool occupancy, and queue depth every K live ticks — compiled
-in only when a :class:`ProbeConfig` is requested, so the unprobed engine
-stays bit-identical to its goldens.
+**Sim plane** (:mod:`repro.obs.probes` + :mod:`repro.obs.hist` +
+:mod:`repro.obs.timeline`): fixed-size ring buffers inside ``SimState``
+sampling per-level link utilization, per-app in-flight latency, pool
+occupancy, and queue depth every K live ticks; full-fidelity
+per-(app, link-level) latency histograms with exact streaming moments;
+and sim-time job lifecycle timelines recorded by the scheduler loop
+(arrival → queue → backfill → run → drain) exported as a second Chrome
+trace over *virtual* time. All compiled/recorded only when requested
+(:class:`ProbeConfig` / :class:`HistConfig` select separate engine-cache
+entries), so the plain engine stays bit-identical to its goldens.
 
-See ``docs/obs.md`` for the span taxonomy and probe buffer layout.
+**Process plane** (:mod:`repro.obs.metrics`): a process-wide metrics
+registry (counters / gauges / histograms) with OpenMetrics text export —
+the scrape surface for long campaigns and a future persistent server.
+
+See ``docs/obs.md`` for the span taxonomy and buffer/accumulator layouts.
 """
 from repro.obs.spans import (  # noqa: F401
     Tracer, get_tracer, enable, disable, tracing,
@@ -27,6 +36,17 @@ from repro.obs.probes import (  # noqa: F401
     ProbeConfig, ProbeState, init_probes, sample_probes,
     ring_order, probe_timelines,
 )
+from repro.obs.hist import (  # noqa: F401
+    HistConfig, HistState, bucket_of, init_hist, update_hist, merge_hist,
+    hist_summary,
+)
+from repro.obs.timeline import (  # noqa: F401
+    TimelineRecorder, sim_chrome_trace, write_sim_trace,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, Progress,
+    get_registry, write_openmetrics,
+)
 
 __all__ = [
     "Tracer", "get_tracer", "enable", "disable", "tracing",
@@ -35,4 +55,9 @@ __all__ = [
     "chrome_events", "write_chrome_trace", "write_jsonl",
     "ProbeConfig", "ProbeState", "init_probes", "sample_probes",
     "ring_order", "probe_timelines",
+    "HistConfig", "HistState", "bucket_of", "init_hist", "update_hist",
+    "merge_hist", "hist_summary",
+    "TimelineRecorder", "sim_chrome_trace", "write_sim_trace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Progress",
+    "get_registry", "write_openmetrics",
 ]

@@ -1,0 +1,206 @@
+"""Full-fidelity in-engine latency histograms, per (app, link-level).
+
+The coarse per-app histogram in ``Metrics.lat_hist`` serves the paper's
+Fig. 7 quartiles; the ring-buffer probes (:mod:`repro.obs.probes`) keep
+only the last K samples. Neither preserves the *tail* — and the paper's
+headline interference metric for HPC apps is message-latency
+**variation**, which lives in the tail. This module keeps every drained
+message: log-bucketed counts split by the fabric level the message
+crossed (dragonfly local/global, fat-tree up/down, torus per-dim), plus
+exact streaming moments (sum / sum-of-squares / max) per app, so p50 /
+p95 / p99 and the variation coefficient come from the full population.
+
+Like :class:`~repro.obs.probes.ProbeConfig`, :class:`HistConfig` is a
+**static build-time choice** and part of the engine cache key: a
+histogrammed engine is its own compiled entry and the unhistogrammed
+tick contains no histogram code at all — goldens stay bit-identical.
+Within a histogrammed engine, :class:`HistState` is just more
+``SimState`` pytree leaves (leading ``B`` dim when batched), updated
+with the same flat-index batched scatter the metrics plane uses.
+
+Accumulators form a commutative monoid: counts are exact integer adds,
+so ``merge_hist(h1, h2)`` of two half-runs equals one full run
+(property-tested in ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class HistConfig:
+    """Static histogram plan — hashable, part of the engine cache key.
+
+    ``bins``: log-spaced bucket count K; bucket ``i`` spans
+    ``[lo_us * ratio**i, lo_us * ratio**(i+1))`` with the first/last
+    buckets absorbing underflow/overflow (every drained message lands in
+    exactly one bucket — conservation is tested).
+    """
+
+    bins: int = 64
+    lo_us: float = 0.5
+    ratio: float = 1.25
+
+    def __post_init__(self):
+        if self.bins < 2:
+            raise ValueError(f"hist: bins must be >= 2, got {self.bins}")
+        if not self.lo_us > 0.0:
+            raise ValueError(f"hist: lo_us must be > 0, got {self.lo_us}")
+        if not self.ratio > 1.0:
+            raise ValueError(f"hist: ratio must be > 1, got {self.ratio}")
+
+
+class HistState(NamedTuple):
+    """Per-member accumulators (leading ``B`` dim when batched).
+
+    ``edges`` is a constant leaf baked at init so a detached
+    ``HistState`` is self-describing (no config needed to unwrap).
+    """
+
+    counts: jnp.ndarray  # (n_apps, n_levels, K) int32 — drained msgs
+    sum: jnp.ndarray     # (n_apps,) f32 — exact latency sum (us)
+    sumsq: jnp.ndarray   # (n_apps,) f32 — exact sum of squares
+    max: jnp.ndarray     # (n_apps,) f32 — exact max latency (us)
+    edges: jnp.ndarray   # (K+1,) f32 — bucket edges (us), constant
+
+
+def init_hist(cfg: HistConfig, n_apps: int, n_levels: int) -> HistState:
+    """One member's empty accumulators."""
+    K = cfg.bins
+    edges = cfg.lo_us * (cfg.ratio ** np.arange(K + 1, dtype=np.float64))
+    return HistState(
+        counts=jnp.zeros((n_apps, max(n_levels, 1), K), jnp.int32),
+        sum=jnp.zeros((n_apps,), jnp.float32),
+        sumsq=jnp.zeros((n_apps,), jnp.float32),
+        max=jnp.zeros((n_apps,), jnp.float32),
+        edges=jnp.asarray(edges, jnp.float32),
+    )
+
+
+def bucket_of(lat, cfg: HistConfig):
+    """Log-bucket index for latency ``lat`` (us) — jnp or numpy alike."""
+    mod = jnp if isinstance(lat, jnp.ndarray) else np
+    return mod.clip(
+        mod.floor(
+            mod.log(mod.maximum(lat / cfg.lo_us, 1e-9)) / math.log(cfg.ratio)
+        ),
+        0, cfg.bins - 1,
+    ).astype(mod.int32)
+
+
+def update_hist(
+    hs: HistState,
+    cfg: HistConfig,
+    *,
+    lat: jnp.ndarray,        # (B, M) f32 — latency of each pool slot (us)
+    delivered: jnp.ndarray,  # (B, M) bool — drained this tick (live-gated)
+    app: jnp.ndarray,        # (B, M) int32 app ids (UR == n_apps-1)
+    level: jnp.ndarray,      # (B, M) int32 fabric-level of each message
+) -> HistState:
+    """One drain tick's update (runs inside the jitted engine tick).
+
+    ``delivered`` is already gated by the member freeze mask upstream, so
+    frozen members never write — the same discipline as the metrics
+    plane. One flat scatter over ``(B * n_apps * n_levels * K,)``
+    per leaf; undelivered slots route to a dummy dropped index.
+    """
+    B, A, NL, K = hs.counts.shape
+    b = bucket_of(lat, cfg)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]  # (B, 1)
+    cidx = jnp.where(
+        delivered, ((rows * A + app) * NL + level) * K + b, B * A * NL * K
+    )
+    counts = hs.counts.reshape(-1).at[cidx.reshape(-1)].add(
+        jnp.ones(cidx.size, jnp.int32), mode="drop"
+    ).reshape(hs.counts.shape)
+
+    aidx = jnp.where(delivered, rows * A + app, B * A)
+    lat0 = jnp.where(delivered, lat, 0.0)
+    lsum = hs.sum.reshape(-1).at[aidx.reshape(-1)].add(
+        lat0.reshape(-1), mode="drop"
+    ).reshape(hs.sum.shape)
+    lsumsq = hs.sumsq.reshape(-1).at[aidx.reshape(-1)].add(
+        (lat0 * lat0).reshape(-1), mode="drop"
+    ).reshape(hs.sumsq.shape)
+    lmax = hs.max.reshape(-1).at[aidx.reshape(-1)].max(
+        lat0.reshape(-1), mode="drop"
+    ).reshape(hs.max.shape)
+    return hs._replace(counts=counts, sum=lsum, sumsq=lsumsq, max=lmax)
+
+
+def merge_hist(a: HistState, b: HistState) -> HistState:
+    """Combine two accumulator states (same shape/edges): counts and
+    moments add, maxima take the max. Counts merge **exactly** (integer
+    adds commute), so two half-runs merge to the full run."""
+    return HistState(
+        counts=a.counts + b.counts,
+        sum=a.sum + b.sum,
+        sumsq=a.sumsq + b.sumsq,
+        max=jnp.maximum(a.max, b.max),
+        edges=a.edges,
+    )
+
+
+def hist_summary(
+    hs: HistState,
+    app_names: Sequence[Optional[str]],
+    level_names: Optional[Sequence[str]] = None,
+) -> Dict[str, Any]:
+    """Unwrap one member's accumulators into a JSON-ready report.
+
+    Per app: full-population count / mean / p50 / p95 / p99 / max and the
+    latency-variation coefficient (std / mean — the paper's HPC
+    interference metric), plus per-fabric-level message counts.
+    ``app_names`` follows the padded app axis (``None`` rows skipped);
+    quantiles use the geometric bucket midpoints, matching
+    ``netsim.metrics.latency_summary``.
+    """
+    counts = np.asarray(hs.counts)  # (A, NL, K)
+    lsum = np.asarray(hs.sum, np.float64)
+    lsumsq = np.asarray(hs.sumsq, np.float64)
+    lmax = np.asarray(hs.max, np.float64)
+    edges = np.asarray(hs.edges, np.float64)
+    mids = np.sqrt(edges[:-1] * edges[1:])
+    NL = counts.shape[1]
+    if level_names is None or len(level_names) != NL:
+        level_names = [f"level{i}" for i in range(NL)]
+    out: Dict[str, Any] = dict(
+        bins=int(counts.shape[2]),
+        lo_us=float(edges[0]),
+        ratio=float(edges[1] / edges[0]),
+        apps={},
+    )
+    for ai, name in enumerate(app_names):
+        if name is None or ai >= counts.shape[0]:
+            continue
+        hist = counts[ai].sum(axis=0)  # (K,) marginal over levels
+        cnt = int(hist.sum())
+        if cnt == 0:
+            out["apps"][str(name)] = dict(count=0)
+            continue
+        cum = np.cumsum(hist)
+
+        def q(p):
+            j = int(np.searchsorted(cum, p * cnt))
+            return float(mids[min(j, len(mids) - 1)])
+
+        mean = lsum[ai] / cnt
+        var = max(lsumsq[ai] / cnt - mean * mean, 0.0)
+        out["apps"][str(name)] = dict(
+            count=cnt,
+            mean_us=float(mean),
+            p50_us=q(0.50), p95_us=q(0.95), p99_us=q(0.99),
+            max_us=float(lmax[ai]),
+            variation=float(math.sqrt(var) / mean) if mean > 0 else 0.0,
+            levels={
+                str(ln): int(counts[ai, li].sum())
+                for li, ln in enumerate(level_names)
+            },
+        )
+    return out

@@ -45,7 +45,7 @@ from repro.netsim.engine import (
 from repro.netsim.fabric import fabric_key
 from repro.netsim.placement import place_jobs
 from repro.netsim.topology import get_topology
-from repro.obs import log, span
+from repro.obs import TimelineRecorder, log, span
 from repro.sched.queue import PendingQueue, QueuedJob
 from repro.sched.trace import Trace, TraceJob
 from repro.union import manager as MGR
@@ -115,6 +115,8 @@ class SchedResult:
     n_nodes: int
     capacity: EngineCapacity
     final_state: Any = field(default=None, repr=False)
+    # sim-time lifecycle timeline (repro.obs.timeline), when recorded
+    timeline: Optional[Dict[str, Any]] = None
 
     @property
     def jobs_per_sec(self) -> float:
@@ -163,6 +165,7 @@ def build_sched_engine(
     engine_cache: Optional[Dict] = None,
     probes=None,
     capacity: Optional[EngineCapacity] = None,
+    hist=None,
 ):
     """Compile the scheduler's engine for a trace: one envelope sized
     ``Jmax=slots`` serves every window. Returns ``(engine, topo,
@@ -189,6 +192,7 @@ def build_sched_engine(
     eng = get_engine(
         topo, routing=trace.routing, net=net, pool_size=net.pool_size,
         horizon_us=trace.horizon_ms * 1000.0, capacity=cap, probes=probes,
+        hist=hist,
     )
     return eng, topo, resolved, net
 
@@ -233,9 +237,15 @@ class _CellLoop:
     lock-step :func:`run_trace_batch` steps every cell of a batch against
     one shared batched state. One decision path is what keeps the batched
     campaign bit-identical to the sequential one.
+
+    ``timeline`` attaches a :class:`repro.obs.TimelineRecorder` that
+    writes down every transition in sim time (queue depth, backfill
+    decisions, slot drains) — purely observational, and sim-time only,
+    so recorded runs stay bit-identical and batched ≡ sequential.
     """
 
-    def __init__(self, trace, policy, slots, seed, topo, resolved, net):
+    def __init__(self, trace, policy, slots, seed, topo, resolved, net,
+                 timeline=None):
         self.trace = trace
         self.policy = policy
         self.slots = slots
@@ -249,6 +259,7 @@ class _CellLoop:
         self.running: Dict[int, JobRecord] = {}
         self.draining: Dict[int, JobRecord] = {}
         self.records: List[JobRecord] = []
+        self.tl = timeline  # Optional[TimelineRecorder]
         self.lat0: Dict[int, Tuple[float, int]] = {}  # slot -> (sum, cnt)
         self.arrivals = [
             QueuedJob(jid=i, name=r.tj.name, n_ranks=r.n_ranks,
@@ -321,6 +332,8 @@ class _CellLoop:
                 heapq.heappush(self.free_slots, slot)
                 self.records.append(rec)
                 del self.draining[slot]
+                if self.tl is not None:
+                    self.tl.retire(rec.jid, t_now)
 
         # 3. admissions: the queue policy decides who starts now
         free_nodes = int(self.topo.n_nodes - self.occupied.sum())
@@ -334,6 +347,9 @@ class _CellLoop:
                          for _ in self.draining]
         starts, _resv = queue.select(
             t_now, free_nodes, len(self.free_slots), running_ests)
+        # a start is a *backfill* when an earlier-arrived job is still
+        # waiting in the queue (jids follow arrival order)
+        min_pending = min((j.jid for j in queue.jobs), default=None)
         for qjob in starts:
             r: _Resolved = qjob.payload
             slot = heapq.heappop(self.free_slots)
@@ -358,6 +374,13 @@ class _CellLoop:
                 (slot, JobSpec(qjob.name, r.skeleton, nodes,
                                start_us=start)))
             self.running[slot] = rec
+            if self.tl is not None:
+                self.tl.start(
+                    qjob.jid,
+                    min_pending is not None and qjob.jid > min_pending,
+                )
+        if self.tl is not None:
+            self.tl.sample_queue(t_now, len(queue.jobs))
 
         if (not (self.running or self.draining or queue)
                 and self.ai >= len(arrivals)):
@@ -402,6 +425,10 @@ class _CellLoop:
             utilization=util, windows=self.windows, wall_s=wall_s,
             horizon_hit=self.horizon_hit, n_nodes=self.topo.n_nodes,
             capacity=capacity, final_state=final_state,
+            timeline=(
+                self.tl.to_dict(records, self.slots)
+                if self.tl is not None else None
+            ),
         )
 
 
@@ -412,6 +439,7 @@ def _run_trace_impl(
     seed: int = 0,
     engine=None,
     collect_state: bool = False,
+    timeline: bool = False,
 ) -> SchedResult:
     """Stream a trace through the online scheduler.
 
@@ -430,7 +458,10 @@ def _run_trace_impl(
     eng, topo, resolved, net = engine
 
     state = eng.init_state(seed=engine_seed(seed))
-    cell = _CellLoop(trace, policy, slots, seed, topo, resolved, net)
+    cell = _CellLoop(
+        trace, policy, slots, seed, topo, resolved, net,
+        timeline=TimelineRecorder() if timeline else None,
+    )
     while cell.active:
         view = window_host_view(state)
         retires, admits, t_stop = cell.step(view)
@@ -462,6 +493,8 @@ def run_trace_batch(
     engine=None,
     collect_state: bool = False,
     probes=None,
+    hist=None,
+    timeline: bool = False,
 ) -> List[SchedResult]:
     """Lock-step many trace cells through ONE batched windowed engine.
 
@@ -507,7 +540,8 @@ def run_trace_batch(
         for trace, _, _ in specs:
             cap = cap.union(resolved_by[id(trace)][2])
         engine = build_sched_engine(
-            first, slots_by[id(first)], probes=probes, capacity=cap)
+            first, slots_by[id(first)], probes=probes, capacity=cap,
+            hist=hist)
     eng, topo, _, net = engine
 
     # bucket-compatibility checks: one compiled engine must serve every
@@ -535,7 +569,8 @@ def run_trace_batch(
 
     cells = [
         _CellLoop(trace, policy, slots_by[id(trace)], seed, topo,
-                  resolved_by[id(trace)][1], net)
+                  resolved_by[id(trace)][1], net,
+                  timeline=TimelineRecorder() if timeline else None)
         for trace, policy, seed in specs
     ]
     batched = stack_members(

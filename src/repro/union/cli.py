@@ -147,6 +147,10 @@ def _run_experiment(args, exp: EXP.Experiment,
     if args.probes:
         exp.probes = args.probes
         exp.probe_every = args.probe_every
+    if args.hist:
+        exp.hist = args.hist
+    if args.timeline:
+        exp.timeline = True
     if args.plan:
         print(PLN.plan(exp).describe())
         return
@@ -160,6 +164,19 @@ def _run_experiment(args, exp: EXP.Experiment,
         base, _ = os.path.splitext(args.profile)
         obs.write_jsonl(base + ".jsonl")
         print(f"wrote trace {args.profile} (+ {base}.jsonl)")
+    if args.timeline:
+        named = [(c.key, c.report["timeline"]) for c in res.cells
+                 if "timeline" in c.report]
+        if named:
+            obs.write_sim_trace(args.timeline, named)
+            print(f"wrote sim-time trace {args.timeline} "
+                  f"({len(named)} cell(s))")
+        else:
+            log.warning("--timeline: no trace cells in this run; nothing"
+                        " to export")
+    if args.metrics:
+        obs.write_openmetrics(args.metrics)
+        print(f"wrote metrics {args.metrics}")
 
 
 def _attach_interference(args, exp: EXP.Experiment, res: EXP.Results) -> None:
@@ -283,6 +300,20 @@ def main(argv=None) -> None:
                     " engine variant — its own compile cache entry)")
     ap.add_argument("--probe-every", type=int, default=8, metavar="K",
                     help="probe sampling period in engine ticks")
+    ap.add_argument("--hist", type=int, default=0, metavar="BINS",
+                    help="enable full-fidelity per-(app, link-level)"
+                    " latency histograms with BINS log buckets (p50/p95/"
+                    "p99/max + variation per app; a histogrammed engine"
+                    " variant — its own compile cache entry)")
+    ap.add_argument("--timeline", metavar="SIM.json", default=None,
+                    help="record sim-time job lifecycle timelines for"
+                    " trace cells (arrival/queue/backfill/run/drain) and"
+                    " write them here as a Chrome trace over *virtual*"
+                    " time (one track per engine slot)")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="write the process-wide metrics registry"
+                    " (cells completed, window rounds, engine-cache"
+                    " traffic, throughput) as OpenMetrics text")
     ap.add_argument("-v", "--verbose", action="count", default=0,
                     help="diagnostic logging (-v info, -vv debug; default"
                     " warnings only)")

@@ -40,6 +40,7 @@ migration table.
 from __future__ import annotations
 
 import json
+import logging
 import time
 import warnings
 from dataclasses import asdict, dataclass, field
@@ -53,7 +54,16 @@ from repro.netsim.engine import (
     member_state,
     stack_members,
 )
-from repro.obs import ProbeConfig, get_tracer, span, summarize, tracing
+from repro.obs import (
+    Progress,
+    ProbeConfig,
+    get_registry,
+    get_tracer,
+    log as obs_log,
+    span,
+    summarize,
+    tracing,
+)
 from repro.union import manager as MGR
 from repro.union.scenario import Scenario, load_scenario
 from repro.union.seeds import engine_seed
@@ -69,7 +79,12 @@ from repro.union.validate import (
 # name/fabric/placement/routing, reports include link_utilization
 # v3: results carry a `telemetry` block (spans summary + engine-cache
 # counters); probed runs add per-cell `report["probes"]` timelines
-SCHEMA_VERSION = 3
+# v4: telemetry engine-cache stats are per-run deltas (plus absolute
+# `size`), not process-cumulative; histogrammed runs add per-cell
+# `report["latency_hist"]` (full-fidelity p50/p95/p99/variation) and a
+# telemetry `hist` config block; timeline runs add per-trace-cell
+# `report["timeline"]` sim-time job lifecycles
+SCHEMA_VERSION = 4
 
 
 def _resolve_spec_path(spec: str, base_dir: Optional[str]) -> str:
@@ -279,11 +294,26 @@ class Experiment:
     # engine, bit-identical to the goldens.
     probes: int = 0
     probe_every: int = 8
+    # full-fidelity latency histograms (repro.obs.hist): hist > 0 runs
+    # every cell on the histogrammed engine variant with that many
+    # log-spaced buckets per (app, link-level). 0 (default) = off.
+    hist: int = 0
+    # sim-time job lifecycle timelines (repro.obs.timeline): trace cells
+    # record arrival -> queue -> backfill -> run -> drain transitions
+    # into report["timeline"] (exported via the CLI's --timeline).
+    timeline: bool = False
 
     def probe_config(self) -> Optional[ProbeConfig]:
         if not self.probes:
             return None
         return ProbeConfig(samples=self.probes, every=self.probe_every)
+
+    def hist_config(self):
+        if not self.hist:
+            return None
+        from repro.obs import HistConfig
+
+        return HistConfig(bins=self.hist)
 
     def validate(self) -> None:
         if not self.scenarios and self.trace is None:
@@ -297,6 +327,8 @@ class Experiment:
             raise ValueError("probes must be >= 0 (ring-buffer samples)")
         if self.probe_every < 1:
             raise ValueError("probe_every must be >= 1 (ticks)")
+        if self.hist and self.hist < 2:
+            raise ValueError("hist must be 0 (off) or >= 2 (buckets)")
         for sc in self.scenarios:
             sc.validate()
         self.grid.validate()
@@ -329,6 +361,10 @@ class Experiment:
             d["probes"] = self.probes
             if self.probe_every != 8:
                 d["probe_every"] = self.probe_every
+        if self.hist:
+            d["hist"] = self.hist
+        if self.timeline:
+            d["timeline"] = True
         return d
 
     @classmethod
@@ -402,6 +438,16 @@ class CellResult:
     fabric: str = "1d"  # the network fabric this cell ran on
     report: Dict[str, Any] = field(default_factory=dict)
 
+    @property
+    def key(self) -> str:
+        """Stable human-readable cell key (sim-trace process names,
+        grouping): grid coordinates, no report contents."""
+        if self.kind == "trace":
+            return (f"{self.name}/{self.fabric}/{self.policy}"
+                    f"/s{self.seed}")
+        return (f"{self.name}/{self.fabric}/{self.placement}"
+                f"/{self.routing}/m{self.member}")
+
     def records(self) -> List[Dict[str, Any]]:
         """Tidy rows: one per app (scenario cells) or one per cell
         (trace cells), with the study-grid coordinates repeated."""
@@ -444,9 +490,11 @@ class Results:
     engine_cache: Dict[str, int] = field(default_factory=dict)
     summary: Dict[str, Any] = field(default_factory=dict)
     # v3: host-plane telemetry (repro.obs) — spans summary for this run
-    # (empty unless tracing was enabled), process-wide engine-cache
-    # counters, and the probe configuration that produced any per-cell
-    # `report["probes"]` timelines.
+    # (empty unless tracing was enabled), engine-cache counters, and the
+    # probe configuration that produced any per-cell `report["probes"]`
+    # timelines. v4: engine-cache counters are THIS run's deltas (plus
+    # the absolute cache `size`), and histogrammed/timelined runs add
+    # `hist` / `timeline` blocks.
     telemetry: Dict[str, Any] = field(default_factory=dict)
     schema_version: int = SCHEMA_VERSION
 
@@ -514,7 +562,7 @@ def _exec_batched(node, exp: Experiment) -> List[CellResult]:
             host.topo, routing=host.scenario.routing, ur=host.ur,
             net=host.net, pool_size=host.pool_size,
             horizon_us=host.horizon_us, capacity=node.capacity,
-            probes=exp.probe_config(),
+            probes=exp.probe_config(), hist=exp.hist_config(),
         )
         cold = engine_cache_stats()["misses"] > stats0["misses"]
         sp.set(hit=not cold)
@@ -571,7 +619,8 @@ def _exec_batched(node, exp: Experiment) -> List[CellResult]:
     return out
 
 
-def _trace_cell_result(cell, trace, res, study, probes, topo) -> CellResult:
+def _trace_cell_result(cell, trace, res, study, probes, topo,
+                       hist=None) -> CellResult:
     """Wrap one SchedResult as a CellResult (shared by both trace paths)."""
     from repro.union.report import sched_summary
 
@@ -585,6 +634,17 @@ def _trace_cell_result(cell, trace, res, study, probes, topo) -> CellResult:
             res.final_state.probes, list(topo.link_levels()),
             [f"slot{j}" for j in range(res.slots)],
         )
+    if hist is not None and res.final_state is not None:
+        from repro.obs import hist_summary
+
+        # same slot-axis labeling: histogram app rows are engine slots
+        rep["latency_hist"] = hist_summary(
+            res.final_state.hist,
+            [f"slot{j}" for j in range(res.slots)],
+            list(topo.link_levels()),
+        )
+    if res.timeline is not None:
+        rep["timeline"] = res.timeline
     return CellResult(
         kind="trace", name=trace.name, seed=cell.seed,
         placement=trace.placement, routing=trace.routing,
@@ -600,6 +660,7 @@ def _exec_windowed(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
 
     study = node.study
     probes = exp.probe_config()
+    hist = exp.hist_config()
     out = []
     engine = None
     trace = None
@@ -609,18 +670,19 @@ def _exec_windowed(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
             trace = study.trace_for(cell.seed)
             with span("engine.cache_get", cat="engine", trace=trace.name):
                 engine = build_sched_engine(trace, study.slots,
-                                            probes=probes)
+                                            probes=probes, hist=hist)
             last_seed = cell.seed
         with span("sched.trace", cat="sched", trace=trace.name,
                   policy=cell.policy, seed=cell.seed) as sp:
             res = _run_trace_impl(
                 trace, policy=cell.policy, slots=study.slots,
                 seed=cell.seed, engine=engine,
-                collect_state=probes is not None,
+                collect_state=probes is not None or hist is not None,
+                timeline=exp.timeline,
             )
             sp.set(windows=res.windows, jobs=len(res.records))
         out.append((cell.index, _trace_cell_result(
-            cell, trace, res, study, probes, engine[1])))
+            cell, trace, res, study, probes, engine[1], hist=hist)))
     return out
 
 
@@ -634,21 +696,25 @@ def _exec_windowed_batch(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
 
     study = node.study
     probes = exp.probe_config()
+    hist = exp.hist_config()
     first = node.traces[node.cells[0].seed]
     with span("engine.cache_get", cat="engine", trace=first.name):
         engine = build_sched_engine(
-            first, study.slots, probes=probes, capacity=node.capacity)
+            first, study.slots, probes=probes, capacity=node.capacity,
+            hist=hist)
     specs = [(node.traces[c.seed], c.policy, c.seed) for c in node.cells]
     with span("sched.trace_batch", cat="sched", cells=len(specs)) as sp:
         results = run_trace_batch(
             specs, slots=study.slots, engine=engine,
-            collect_state=probes is not None, probes=probes,
+            collect_state=probes is not None or hist is not None,
+            probes=probes, timeline=exp.timeline,
         )
         sp.set(windows=max(r.windows for r in results),
                jobs=sum(len(r.records) for r in results))
     return [
         (cell.index, _trace_cell_result(
-            cell, node.traces[cell.seed], res, study, probes, engine[1]))
+            cell, node.traces[cell.seed], res, study, probes, engine[1],
+            hist=hist))
         for cell, res in zip(node.cells, results)
     ]
 
@@ -678,6 +744,13 @@ def run(experiment, plan=None) -> Results:
         indexed: List = []
         trace_indexed: List = []
         node_kinds: Dict[str, Dict[str, float]] = {}
+        reg = get_registry()
+        node_wall = reg.histogram(
+            "union_node_wall_seconds",
+            "wall time per executed plan node")
+        progress = Progress(
+            plan.total_cells,
+            enabled=obs_log.isEnabledFor(logging.INFO))
         for node in plan.nodes:
             nt0 = time.time()
             if node.kind == "batched":
@@ -694,6 +767,9 @@ def run(experiment, plan=None) -> Results:
             agg["nodes"] += 1
             agg["cells"] += len(node.cells)
             agg["wall_s"] += time.time() - nt0
+            node_wall.observe(time.time() - nt0)
+            progress.advance(len(node.cells))
+        progress.close()
         cells = (
             [c for _, c in sorted(indexed, key=lambda p: p[0])]
             + [c for _, c in sorted(trace_indexed, key=lambda p: p[0])]
@@ -710,10 +786,35 @@ def run(experiment, plan=None) -> Results:
             ),
         )
         res.summary = results_summary(res)
+
+        # process-plane metrics: this run's contribution to the registry
+        reg.counter("union_experiments",
+                    "experiment facade runs").inc()
+        reg.counter("union_cells_completed",
+                    "experiment cells executed").inc(len(cells))
+        reg.counter("union_engine_cache_hits",
+                    "engine-cache hits").inc(res.engine_cache["hits"])
+        reg.counter("union_engine_cache_builds",
+                    "engine compiles").inc(res.engine_cache["builds"])
+        trace_cells = [c for c in cells if "windows" in c.report]
+        reg.counter("union_window_rounds",
+                    "scheduler window rounds executed").inc(
+            sum(int(c.report.get("windows", 0)) for c in trace_cells))
+        reg.gauge("union_last_run_wall_seconds",
+                  "wall time of the most recent run()").set(res.wall_s)
+        t_wall = sum(float(c.report.get("wall_s", 0.0)) for c in trace_cells)
+        if t_wall > 0:
+            reg.gauge("union_trace_jobs_per_sec",
+                      "rolling trace throughput of the last run").set(
+                sum(int(c.report.get("jobs", 0)) for c in trace_cells)
+                / t_wall)
     res.telemetry = dict(
         # this run's spans only (the tracer is process-wide)
         spans=(summarize(get_tracer().events[ev0:]) if tracing() else {}),
-        engine_cache=engine_cache_stats(),
+        # v4: THIS run's cache traffic (deltas), plus the absolute cache
+        # size — process-cumulative counters made run artifacts depend on
+        # what ran before them in the same process.
+        engine_cache=dict(res.engine_cache, size=stats1["size"]),
         # wall time per execution style — makes batching wins visible in
         # every artifact, not just the benchmarks
         node_kinds={
@@ -726,6 +827,11 @@ def run(experiment, plan=None) -> Results:
                  every=plan.experiment.probe_every)
             if plan.experiment.probes else {}
         ),
+        hist=(
+            asdict(plan.experiment.hist_config())
+            if plan.experiment.hist else {}
+        ),
+        timeline=bool(plan.experiment.timeline),
     )
     return res
 

@@ -145,7 +145,7 @@ def resolve(scenario: Scenario, seed: int = 0) -> ResolvedScenario:
 
 
 def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None,
-          probes=None):
+          probes=None, hist=None):
     """The engine for a resolved scenario: an
     :class:`~repro.netsim.engine.Engine` (unpacks as ``init, run, tick``;
     carries ``run_window`` for windowed/scheduled runs).
@@ -160,12 +160,14 @@ def build(rs: ResolvedScenario, capacity: Optional[EngineCapacity] = None,
     ragged-campaign path in :mod:`repro.union.ensemble`. ``probes`` (a
     :class:`repro.obs.ProbeConfig`) selects the probed variant of the
     engine — a separate cache entry; the unprobed one is untouched.
+    ``hist`` (a :class:`repro.obs.HistConfig`) likewise selects the
+    variant with full-fidelity latency histograms compiled in.
     """
     cap = rs.capacity if capacity is None else capacity.union(rs.capacity)
     eng = get_engine(
         rs.topo, routing=rs.scenario.routing, ur=rs.ur, net=rs.net,
         pool_size=rs.pool_size, horizon_us=rs.horizon_us, capacity=cap,
-        probes=probes,
+        probes=probes, hist=hist,
     )
     return bind_jobs(eng, rs)
 

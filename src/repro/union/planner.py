@@ -137,9 +137,27 @@ class Plan:
     def windowed_batch_nodes(self) -> List[WindowedBatchNode]:
         return [n for n in self.nodes if n.kind == "windowed_batch"]
 
+    @property
+    def total_cells(self) -> int:
+        """Study-wide cell count (the executor's progress denominator)."""
+        return sum(len(n.cells) for n in self.nodes)
+
     def describe(self) -> str:
         """Human-readable lowering: nodes, envelopes, engine reuse."""
         lines = [f"plan for experiment {self.experiment.name!r}:"]
+        obs_bits = []
+        if getattr(self.experiment, "probes", 0):
+            obs_bits.append(f"probes={self.experiment.probes}")
+        if getattr(self.experiment, "hist", 0):
+            obs_bits.append(f"hist={self.experiment.hist} bins")
+        if getattr(self.experiment, "timeline", False):
+            obs_bits.append("timeline")
+        if obs_bits:
+            # instrumented engines are distinct cache entries — worth
+            # seeing at plan time since it changes what compiles
+            lines.append(
+                "  observability: " + ", ".join(obs_bits)
+                + " (instrumented engine variants compile separately)")
         for i, node in enumerate(self.nodes):
             if node.kind == "batched":
                 cap = node.capacity

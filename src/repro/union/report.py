@@ -67,6 +67,19 @@ def reports_summary(reports: List[Dict], members: Optional[int] = None,
             max_comm_ms=_spread([c["max_ms"] for c in ct]),
             avg_comm_ms=_spread([c["avg_ms"] for c in ct]),
         )
+        # full-fidelity tails, when members ran histogrammed
+        # (Experiment.hist > 0): per-member p99 and variation spreads
+        hr = [
+            r["latency_hist"]["apps"][app] for r in reports
+            if r.get("latency_hist", {}).get("apps", {}).get(app, {}).get(
+                "count")
+        ]
+        if hr:
+            per_app[app]["hist"] = dict(
+                count=int(sum(h["count"] for h in hr)),
+                p99_us=_spread([h["p99_us"] for h in hr]),
+                variation=_spread([h["variation"] for h in hr]),
+            )
     # per-fabric-level link utilization (mean-of-means / max-of-max over
     # members) — which level saturates first differs per fabric
     link_util: Dict[str, Any] = {}
@@ -206,6 +219,14 @@ def format_sched_summary(s: Dict[str, Any]) -> str:
         f"{s['bounded_slowdown']['mean']:.2f} max "
         f"{s['bounded_slowdown']['max']:.2f}",
     ]
+    # histogrammed trace runs attach per-slot tail summaries
+    hist_apps = s.get("latency_hist", {}).get("apps", {})
+    for slot, h in hist_apps.items():
+        if h.get("count"):
+            lines.append(
+                f"  {slot}: hist n={h['count']} p50 {h['p50_us']:.1f}us "
+                f"p99 {h['p99_us']:.1f}us max {h['max_us']:.1f}us "
+                f"variation {h['variation']:.3f}")
     return "\n".join(lines)
 
 
@@ -338,4 +359,12 @@ def format_summary(summary: Dict[str, Any]) -> str:
             f"max comm {s['max_comm_ms']['mean']:8.1f}ms "
             f"(±{s['max_comm_ms']['std']:.1f})"
         )
+        h = s.get("hist")
+        if h:
+            lines.append(
+                f"  {'':>12}  tail (hist, n={h['count']}): "
+                f"p99 {h['p99_us']['mean']:9.1f}us "
+                f"(±{h['p99_us']['std']:.1f}) | "
+                f"variation {h['variation']['mean']:.3f}"
+            )
     return "\n".join(lines)

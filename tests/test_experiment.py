@@ -183,6 +183,35 @@ def test_batched_trace_grid_matches_sequential():
         assert rb == rs, f"cell {cb.seed}/{cb.policy} diverged"
 
 
+def test_batched_trace_observability_matches_sequential():
+    """The PR 7 equality contract extended to instrumented runs: probe
+    rings, latency histograms, and sim-time timelines are all functions
+    of virtual time, so a WindowedBatchNode cell reports them
+    bit-identically to the same cell run sequentially."""
+
+    def study(batch):
+        return union.Experiment(
+            name=f"obsgrid-{batch}",
+            trace=union.TraceStudy(
+                factory=small_trace_factory, slots=3,
+                policies=["fcfs", "easy"], seeds=[0, 1], batch=batch),
+            probes=8, probe_every=4, hist=24, timeline=True)
+
+    res_b = union.run(study(True))
+    res_s = union.run(study(False))
+    assert len(res_b.cells) == len(res_s.cells) == 4
+    for cb, cs in zip(res_b.cells, res_s.cells):
+        assert (cb.seed, cb.policy) == (cs.seed, cs.policy)
+        for key in ("probes", "latency_hist", "timeline"):
+            assert key in cb.report, f"{key} missing from batched report"
+        assert cb.report["timeline"]["jobs"], "timeline recorded no jobs"
+        rb = {k: v for k, v in cb.report.items()
+              if k not in ("wall_s", "jobs_per_sec")}
+        rs = {k: v for k, v in cs.report.items()
+              if k not in ("wall_s", "jobs_per_sec")}
+        assert rb == rs, f"cell {cb.seed}/{cb.policy} diverged"
+
+
 # ---------------------------------------------------------------------------
 # deprecation shims: old doors still work, warn, and match the facade
 # ---------------------------------------------------------------------------
@@ -258,9 +287,11 @@ def test_engine_cache_shared_across_scenario_and_trace_paths():
     # scenario node AND trace node both hit the engine compiled by res1
     assert res2.engine_cache == {"hits": 2, "misses": 0, "builds": 0}
     assert len(res2.cells) == 3
-    # the artifact carries the process-wide counters too (provenance)
+    # v4: the artifact's telemetry carries THIS run's deltas (no compile
+    # happened during res2) plus the absolute cache size
     tel = res2.telemetry["engine_cache"]
-    assert tel["hits"] >= 2 and tel["builds"] >= 1
+    assert tel["hits"] == 2 and tel["misses"] == 0 and tel["builds"] == 0
+    assert tel["size"] >= 1
     assert set(tel) >= {"hits", "misses", "builds", "size"}
 
 
