@@ -26,10 +26,19 @@ planning + summary must cost <= 2% warm).
 tick wall per fabric — the cross-fabric cost profile of the pluggable
 topology layer.
 
+``--serve`` measures the simulation-as-a-service stack (docs/serve.md):
+one in-process Union server with a fresh content-hash store takes the
+same experiment at three temperatures — cold first submit (compile +
+simulate + store-miss), warm re-submit with new seeds (engine cached,
+store-miss), and a verbatim re-submit (pure store replay, 0 cells
+simulated) — each measured as client-side submit-to-done wall over real
+HTTP.
+
   PYTHONPATH=src python -m benchmarks.bench_union [--members 8] [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --trace [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --experiment [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --fabric [--quick]
+  PYTHONPATH=src python -m benchmarks.bench_union --serve [--quick]
 """
 from __future__ import annotations
 
@@ -360,6 +369,73 @@ def bench_fabric(quick: bool):
     _append_entry(entry)
 
 
+def bench_serve(quick: bool):
+    """Serve-stack temperatures: submit-to-done wall through one
+    in-process Union server (real HTTP, fresh temp store). Cold pays
+    compile + simulation; warm re-submits with fresh seeds so the engine
+    cache is hot but every cell is a store miss; store-hit re-submits
+    the warm spec verbatim — 0 cells simulated, pure replay. The
+    cold/warm gap is the engine cache's contribution, warm/hit the
+    store's."""
+    import shutil
+    import tempfile
+    import threading
+
+    from repro import union
+    from repro.union.client import ServeClient
+    from repro.union.serve import make_server
+
+    members = 2 if quick else 4
+    sc = bench_scenario(quick)
+    store_dir = tempfile.mkdtemp(prefix="bench_union_serve_")
+    srv = make_server(store=store_dir)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    client = ServeClient(f"http://127.0.0.1:{srv.port}", timeout=120)
+    print(f"scenario={sc.name} members={members} (serve profile, "
+          f"port {srv.port}, store {store_dir})")
+
+    def submit(base_seed):
+        exp = union.Experiment(name=f"{sc.name}-serve", scenarios=[sc],
+                               members=members, base_seed=base_seed)
+        t0 = time.time()
+        job = client.submit(exp)
+        st = client.wait(job, timeout=3600, poll_s=0.05)
+        wall = time.time() - t0
+        assert st["status"] == "done", st
+        return wall, st
+
+    try:
+        cold_wall, st_cold = submit(0)
+        warm_wall, st_warm = submit(100)
+        hit_wall, st_hit = submit(100)
+    finally:
+        srv.close()
+        shutil.rmtree(store_dir, ignore_errors=True)
+    assert st_cold["store"]["misses"] == members, st_cold
+    assert st_warm["store"]["misses"] == members, st_warm
+    assert st_hit["store"]["hits"] == members, st_hit
+    assert st_hit["store"]["misses"] == 0, st_hit
+    for label, wall in (("cold submit", cold_wall),
+                        ("warm submit", warm_wall),
+                        ("store-hit submit", hit_wall)):
+        print(f"  {label:>17}: {wall:7.2f}s")
+    print(f"warm speedup over cold: {cold_wall / max(warm_wall, 1e-9):.2f}x"
+          f" | store-hit over warm: "
+          f"{warm_wall / max(hit_wall, 1e-9):.2f}x")
+    entry = dict(
+        bench="union_serve",
+        members=members,
+        provenance=provenance(),
+        scenario=sc.to_dict(),
+        cold_submit_wall_s=cold_wall,
+        warm_submit_wall_s=warm_wall,
+        store_hit_wall_s=hit_wall,
+        warm_speedup_over_cold=cold_wall / max(warm_wall, 1e-9),
+        hit_speedup_over_warm=warm_wall / max(hit_wall, 1e-9),
+    )
+    _append_entry(entry)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--members", type=int, default=None,
@@ -375,6 +451,9 @@ def main():
     ap.add_argument("--fabric", action="store_true",
                     help="fabric sweep profile: the same mix on every"
                     " registered fabric, cold + warm wall per fabric")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve profile: cold vs engine-warm vs store-hit"
+                    " submit-to-done wall through the Union server")
     args = ap.parse_args()
     if args.trace:
         bench_trace(args.quick)
@@ -384,6 +463,9 @@ def main():
         return
     if args.fabric:
         bench_fabric(args.quick)
+        return
+    if args.serve:
+        bench_serve(args.quick)
         return
     members = args.members if args.members is not None else (
         2 if args.quick else 8)

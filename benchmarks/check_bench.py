@@ -43,6 +43,10 @@ PROFILE_METRICS = {
     "union_experiment_facade": [
         ("warm_facade_wall_s", _LOWER),
     ],
+    "union_serve": [
+        ("warm_submit_wall_s", _LOWER),
+        ("store_hit_wall_s", _LOWER),
+    ],
     # fabric profile keys are dynamic (<fabric>_warm_members_per_sec)
 }
 

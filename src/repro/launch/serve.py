@@ -1,4 +1,10 @@
-"""Serving driver: batched greedy decoding with continuous batching slots.
+"""LM serving driver: batched greedy decoding with continuous batching slots.
+
+This is the **language-model token-decoding** server of the model stack —
+not the Union simulation service. The persistent simulation-as-a-service
+server (REST experiment submission over the warm engine cache and the
+content-hash experiment store) is :mod:`repro.union.serve`
+(``python -m repro.union.serve``; see ``docs/serve.md``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch mistral_nemo_12b --smoke \
       --requests 8 --prompt-len 16 --gen-len 24

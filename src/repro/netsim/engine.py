@@ -47,6 +47,8 @@ clamps the PDES time skip exactly like a pending job's ``start`` does).
 from __future__ import annotations
 
 import math
+import os
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
@@ -1163,8 +1165,61 @@ def build_engine(
 # that asks for the same envelope + config shares one jit cache entry.
 # ---------------------------------------------------------------------------
 
-_ENGINE_CACHE: Dict[Tuple, Engine] = {}
-_ENGINE_CACHE_STATS = {"hits": 0, "misses": 0, "builds": 0}
+_ENGINE_CACHE: "OrderedDict[Tuple, Engine]" = OrderedDict()
+_ENGINE_CACHE_STATS = {"hits": 0, "misses": 0, "builds": 0, "evictions": 0}
+# LRU bound on the cache: ``None`` (default) is unbounded — the historical
+# batch-CLI behavior — while long-lived processes (the repro.union.serve
+# server) cap it so memory stays bounded over arbitrarily many distinct
+# engine configs. Rebuild after eviction is bit-identical: the key holds
+# every compile-relevant input (pinned by tests/test_store.py).
+_ENGINE_CACHE_MAX: Optional[int] = (
+    int(os.environ["REPRO_ENGINE_CACHE_MAX"])
+    if os.environ.get("REPRO_ENGINE_CACHE_MAX") else None
+)
+
+
+def _cache_gauges() -> None:
+    """Mirror cache size/evictions into the process metrics registry
+    (lazy import: obs must stay importable without netsim and vice
+    versa)."""
+    from repro.obs.metrics import get_registry
+
+    reg = get_registry()
+    reg.gauge("engine_cache_size",
+              "compiled engines held by the process-wide cache").set(
+        len(_ENGINE_CACHE))
+    limit = reg.gauge("engine_cache_limit",
+                      "LRU cap on the engine cache (0 = unbounded)")
+    limit.set(0 if _ENGINE_CACHE_MAX is None else _ENGINE_CACHE_MAX)
+
+
+def _evict_to_limit() -> None:
+    from repro.obs.metrics import get_registry
+
+    ev = get_registry().counter(
+        "engine_cache_evictions",
+        "engines dropped by the LRU cap (rebuilt on next request)")
+    while (_ENGINE_CACHE_MAX is not None
+           and len(_ENGINE_CACHE) > _ENGINE_CACHE_MAX):
+        _ENGINE_CACHE.popitem(last=False)
+        _ENGINE_CACHE_STATS["evictions"] += 1
+        ev.inc()
+
+
+def set_engine_cache_limit(limit: Optional[int]) -> Optional[int]:
+    """Cap the process-wide engine cache at ``limit`` entries (LRU
+    eviction; ``None`` removes the cap). Returns the previous limit.
+    Evicted engines rebuild bit-identically on their next request — the
+    cache key carries every compile-relevant input — so a cap trades
+    recompilation time for bounded memory in long-running servers."""
+    global _ENGINE_CACHE_MAX
+    if limit is not None and limit < 1:
+        raise ValueError("engine cache limit must be >= 1 (or None)")
+    prev = _ENGINE_CACHE_MAX
+    _ENGINE_CACHE_MAX = limit
+    _evict_to_limit()
+    _cache_gauges()
+    return prev
 
 
 def engine_cache_key(
@@ -1238,6 +1293,7 @@ def get_engine(
     eng = _ENGINE_CACHE.get(key)
     if eng is not None:
         _ENGINE_CACHE_STATS["hits"] += 1
+        _ENGINE_CACHE.move_to_end(key)  # LRU: a hit is a use
         return eng
     _ENGINE_CACHE_STATS["misses"] += 1
     _ENGINE_CACHE_STATS["builds"] += 1
@@ -1247,19 +1303,25 @@ def get_engine(
         use_pallas=use_pallas, probes=probes, hist=hist,
     )
     _ENGINE_CACHE[key] = eng
+    _evict_to_limit()
+    _cache_gauges()
     return eng
 
 
 def engine_cache_stats() -> Dict[str, int]:
-    """Hit/miss counters plus current size of the process-wide cache."""
-    return dict(_ENGINE_CACHE_STATS, size=len(_ENGINE_CACHE))
+    """Hit/miss/eviction counters plus current size (and LRU limit, -1 =
+    unbounded) of the process-wide cache."""
+    return dict(
+        _ENGINE_CACHE_STATS, size=len(_ENGINE_CACHE),
+        limit=-1 if _ENGINE_CACHE_MAX is None else _ENGINE_CACHE_MAX,
+    )
 
 
 def clear_engine_cache() -> None:
     """Drop every cached engine (and its jit executables) and zero the
     counters — test isolation and long-lived-process memory control."""
     _ENGINE_CACHE.clear()
-    _ENGINE_CACHE_STATS.update(hits=0, misses=0, builds=0)
+    _ENGINE_CACHE_STATS.update(hits=0, misses=0, builds=0, evictions=0)
 
 
 # ---------------------------------------------------------------------------

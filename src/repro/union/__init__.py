@@ -31,7 +31,12 @@ Modules:
 * :mod:`repro.union.ensemble` — the historical campaign entry points,
   now deprecation shims over the facade;
 * :mod:`repro.union.report` — the summary/format pipeline over Results,
-  plus the paper's interference summaries.
+  plus the paper's interference summaries;
+* :mod:`repro.union.store` — the content-hash experiment store: every
+  distinct cell simulated once, ever (``run(..., store=DIR)``);
+* :mod:`repro.union.serve` + :mod:`repro.union.client` — the persistent
+  Union server (REST job submission over the warm engine cache + store)
+  and its stdlib client.
 
 CLI::
 
@@ -39,6 +44,7 @@ CLI::
     python -m repro.union --scenario workload1 --members 8
     python -m repro.union --trace poisson --sched fcfs easy
     python -m repro.union --list
+    python -m repro.union.serve --port 8642 --store results/store
 """
 from repro.union.scenario import (  # noqa: F401
     MIXES,
@@ -60,11 +66,13 @@ from repro.union.experiment import (  # noqa: F401
     CellResult,
     Experiment,
     Results,
+    RunCancelled,
     StudyGrid,
     TraceStudy,
     load_experiment,
     run,
 )
+from repro.union.store import ExperimentStore  # noqa: F401
 from repro.union.report import (  # noqa: F401
     campaign_summary,
     format_results,

@@ -154,7 +154,11 @@ def _run_experiment(args, exp: EXP.Experiment,
     if args.plan:
         print(PLN.plan(exp).describe())
         return
-    res = union.run(exp)
+    res = union.run(exp, store=args.store)
+    if args.store:
+        st = res.telemetry.get("store", {})
+        print(f"store {args.store}: {st.get('hits', 0)} cell(s) reused, "
+              f"{st.get('misses', 0)} simulated")
     _attach_interference(args, exp, res)
     print(REP.format_results(res))
     _print_interference(res)
@@ -288,6 +292,12 @@ def main(argv=None) -> None:
     ap.add_argument("--horizon-ms", type=float, default=None)
     ap.add_argument("--tick-us", type=float, default=None)
     ap.add_argument("--out", default="results/union")
+    ap.add_argument("--store", metavar="DIR", default=None,
+                    help="content-hash experiment store: cells already in"
+                    " DIR are returned without simulation, fresh cells"
+                    " are persisted — re-running a grid re-executes only"
+                    " changed cells (the same store a repro.union.serve"
+                    " server uses; see docs/serve.md)")
     ap.add_argument("--profile", metavar="TRACE.json", default=None,
                     help="enable the host-plane span tracer (repro.obs)"
                     " and write a Chrome trace-event JSON here (open in"

@@ -525,10 +525,12 @@ class Results:
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Results":
         version = d.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version == 3:
+            d = _upgrade_v3(d)
+        elif version != SCHEMA_VERSION:
             raise ValueError(
                 f"results artifact has schema_version={version!r}; this "
-                f"build reads version {SCHEMA_VERSION}")
+                f"build reads version {SCHEMA_VERSION} (and upgrades 3)")
         return cls(
             experiment=d["experiment"],
             cells=[CellResult(**c) for c in d["cells"]],
@@ -546,6 +548,37 @@ class Results:
     def load(cls, path: str) -> "Results":
         with open(path) as f:
             return cls.from_dict(json.load(f))
+
+
+def _upgrade_v3(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Upgrade a schema-v3 artifact dict to v4 in place of a reject.
+
+    v3 -> v4 changed telemetry only: ``hist``/``timeline`` blocks were
+    added, and ``engine_cache`` counters became per-run deltas. The old
+    cumulative counters cannot be re-derived from the artifact, so they
+    are kept as-is and the upgrade is recorded in
+    ``telemetry["upgraded_from"]`` — old ledgers and store entries stay
+    loadable across the bump instead of raising.
+    """
+    d = dict(d, schema_version=SCHEMA_VERSION)
+    tele = dict(d.get("telemetry") or {})
+    tele.setdefault("hist", {})
+    tele.setdefault("timeline", False)
+    tele["upgraded_from"] = 3
+    d["telemetry"] = tele
+    return d
+
+
+class RunCancelled(RuntimeError):
+    """Raised by :func:`run` when its ``cancel`` callback fired between
+    plan nodes. Cells completed before the cancellation point were
+    already persisted to the store (when one is attached), so a
+    re-submission resumes from them."""
+
+    def __init__(self, done: int, total: int):
+        super().__init__(f"run cancelled after {done}/{total} cells")
+        self.done = done
+        self.total = total
 
 
 # ---------------------------------------------------------------------------
@@ -719,7 +752,52 @@ def _exec_windowed_batch(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
     ]
 
 
-def run(experiment, plan=None) -> Results:
+def _node_fingerprints(node, exp, store) -> Dict[int, str]:
+    """Per-cell content fingerprints for one plan node (index -> hash)."""
+    from repro.union import store as STO
+
+    if node.kind == "batched":
+        return {c.index: STO.scenario_fingerprint(exp, c)
+                for c in node.cells}
+    study = node.study
+    if node.kind == "windowed_batch":
+        traces = node.traces
+    else:
+        # materialize once per seed for hashing; the executor re-derives
+        # the same trace deterministically (synthetic draws are seeded)
+        traces = {}
+        for c in node.cells:
+            if c.seed not in traces:
+                traces[c.seed] = study.trace_for(c.seed)
+    return {
+        c.index: STO.trace_fingerprint(exp, study, traces[c.seed], c)
+        for c in node.cells
+    }
+
+
+def _consult_store(store, node, exp):
+    """Split one plan node against the store: ``(exec_node, hits, fps)``
+    where ``exec_node`` carries only the miss cells (the node itself is
+    never mutated — plans are reusable), ``hits`` is the recovered
+    ``(index, CellResult)`` list, and ``fps`` maps every cell index to
+    its fingerprint (for persisting the misses afterwards)."""
+    from dataclasses import replace as dc_replace
+
+    fps = _node_fingerprints(node, exp, store)
+    hits: List[Tuple[int, CellResult]] = []
+    miss_cells = []
+    for cell in node.cells:
+        cached = store.get(fps[cell.index])
+        if cached is not None:
+            hits.append((cell.index, cached))
+        else:
+            miss_cells.append(cell)
+    if len(miss_cells) == len(node.cells):
+        return node, hits, fps
+    return dc_replace(node, cells=miss_cells), hits, fps
+
+
+def run(experiment, plan=None, store=None, cancel=None) -> Results:
     """The facade: lower ``experiment`` through the planner and execute.
 
     Accepts an :class:`Experiment` (or a prebuilt
@@ -727,10 +805,24 @@ def run(experiment, plan=None) -> Results:
     :class:`Results`. Every engine is drawn from the process-wide cache,
     so repeated studies — and mixed scenario+trace studies sharing an
     envelope — pay each compile once per process.
+
+    ``store`` (an :class:`~repro.union.store.ExperimentStore` or a
+    directory path) deduplicates across *processes and time*: each cell
+    is keyed by a content fingerprint of its resolved spec, and cells
+    already in the store are returned verbatim with zero simulation —
+    re-submitting an identical experiment executes nothing, a
+    one-cell change executes one cell. ``cancel`` is a zero-arg callable
+    polled between plan nodes; when it returns true the run raises
+    :class:`RunCancelled` (cells finished so far are already persisted
+    to the store).
     """
     from repro.union import planner as PLN
     from repro.union.report import results_summary
 
+    if isinstance(store, str):
+        from repro.union.store import ExperimentStore
+
+        store = ExperimentStore(store)
     ev0 = get_tracer().n_events
     with span("union.run", cat="run",
               experiment=getattr(experiment, "name", None)):
@@ -744,6 +836,8 @@ def run(experiment, plan=None) -> Results:
         indexed: List = []
         trace_indexed: List = []
         node_kinds: Dict[str, Dict[str, float]] = {}
+        store_hits = 0
+        store_misses = 0
         reg = get_registry()
         node_wall = reg.histogram(
             "union_node_wall_seconds",
@@ -752,23 +846,51 @@ def run(experiment, plan=None) -> Results:
             plan.total_cells,
             enabled=obs_log.isEnabledFor(logging.INFO))
         for node in plan.nodes:
+            done = len(indexed) + len(trace_indexed)
+            if cancel is not None and cancel():
+                raise RunCancelled(done, plan.total_cells)
+            exec_node = node
+            fps: Dict[int, str] = {}
+            if store is not None:
+                with span("store.consult", cat="store",
+                          cells=len(node.cells)) as sp:
+                    exec_node, hits, fps = _consult_store(
+                        store, node, plan.experiment)
+                    sp.set(hits=len(hits))
+                store_hits += len(hits)
+                if node.kind == "batched":
+                    indexed.extend(hits)
+                else:
+                    trace_indexed.extend(hits)
+                progress.advance(len(hits))
             nt0 = time.time()
-            if node.kind == "batched":
-                indexed.extend(_exec_batched(node, plan.experiment))
-            elif node.kind == "windowed":
-                trace_indexed.extend(_exec_windowed(node, plan.experiment))
-            elif node.kind == "windowed_batch":
-                trace_indexed.extend(
-                    _exec_windowed_batch(node, plan.experiment))
-            else:
-                raise ValueError(f"unknown plan node kind {node.kind!r}")
+            produced: List[Tuple[int, CellResult]] = []
+            if exec_node.cells:
+                if node.kind == "batched":
+                    produced = _exec_batched(exec_node, plan.experiment)
+                    indexed.extend(produced)
+                elif node.kind == "windowed":
+                    produced = _exec_windowed(exec_node, plan.experiment)
+                    trace_indexed.extend(produced)
+                elif node.kind == "windowed_batch":
+                    produced = _exec_windowed_batch(
+                        exec_node, plan.experiment)
+                    trace_indexed.extend(produced)
+                else:
+                    raise ValueError(
+                        f"unknown plan node kind {node.kind!r}")
+            if store is not None and produced:
+                store_misses += len(produced)
+                with span("store.put", cat="store", cells=len(produced)):
+                    for idx, cell in produced:
+                        store.put(fps[idx], cell)
             agg = node_kinds.setdefault(
                 node.kind, dict(nodes=0, cells=0, wall_s=0.0))
             agg["nodes"] += 1
             agg["cells"] += len(node.cells)
             agg["wall_s"] += time.time() - nt0
             node_wall.observe(time.time() - nt0)
-            progress.advance(len(node.cells))
+            progress.advance(len(produced))
         progress.close()
         cells = (
             [c for _, c in sorted(indexed, key=lambda p: p[0])]
@@ -796,6 +918,13 @@ def run(experiment, plan=None) -> Results:
                     "engine-cache hits").inc(res.engine_cache["hits"])
         reg.counter("union_engine_cache_builds",
                     "engine compiles").inc(res.engine_cache["builds"])
+        if store is not None:
+            reg.counter("union_store_hits",
+                        "cells recovered from the experiment store"
+                        ).inc(store_hits)
+            reg.counter("union_store_misses",
+                        "cells simulated and persisted to the store"
+                        ).inc(store_misses)
         trace_cells = [c for c in cells if "windows" in c.report]
         reg.counter("union_window_rounds",
                     "scheduler window rounds executed").inc(
@@ -832,6 +961,12 @@ def run(experiment, plan=None) -> Results:
             if plan.experiment.hist else {}
         ),
         timeline=bool(plan.experiment.timeline),
+        # content-hash store traffic for THIS run: hits came back with
+        # zero simulation, misses were simulated then persisted
+        store=(
+            dict(hits=store_hits, misses=store_misses, dir=store.root)
+            if store is not None else {}
+        ),
     )
     return res
 

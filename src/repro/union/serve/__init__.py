@@ -1,0 +1,41 @@
+"""repro.union.serve — simulation-as-a-service: the persistent Union server.
+
+One hot process, many clients: a stdlib-only REST service
+(``http.server.ThreadingHTTPServer``, no new dependencies) in front of
+the Experiment facade. Submitted experiments queue through a single
+background worker that calls :func:`repro.union.run` against the
+long-lived **process-wide engine cache** — so every experiment after the
+first with a given engine envelope is warm — and the content-hash
+**experiment store** (:mod:`repro.union.store`) — so identical cells are
+never simulated twice, across submissions *and* server restarts.
+
+Control surface (see ``docs/serve.md``)::
+
+    POST /experiments                # Experiment JSON -> 202 {"id": ...}
+    GET  /experiments                # all jobs, newest first
+    GET  /experiments/<id>           # queued|running|done|error|cancelled
+                                     #  + cells completed / total
+    GET  /experiments/<id>/results   # the Results artifact (done jobs)
+    POST /experiments/<id>/cancel    # cooperative cancel between plan nodes
+    GET  /metrics                    # OpenMetrics text (repro.obs.metrics)
+    GET  /healthz                    # engine cache, store, queue stats
+
+Run it::
+
+    python -m repro.union.serve --port 8642 --store results/store
+
+and talk to it with :mod:`repro.union.client` (``ServeClient`` /
+``submit_and_wait``).
+
+Not to be confused with :mod:`repro.launch.serve`, which is the **LM
+token-decoding** serving driver (continuous-batching inference slots for
+the model stack) — this module serves *network-simulation experiments*.
+"""
+from repro.union.serve.server import (  # noqa: F401
+    Job,
+    JobManager,
+    UnionServer,
+    make_server,
+)
+
+__all__ = ["Job", "JobManager", "UnionServer", "make_server"]

@@ -1,0 +1,264 @@
+"""The content-hash experiment store, the schema-v3 artifact upgrade,
+and the LRU-bounded engine cache — the persistence/boundedness layer
+under the Union server (docs/serve.md)."""
+import copy
+import json
+import os
+
+import pytest
+
+import jax
+
+from repro import union
+from repro.netsim.engine import engine_cache_stats, set_engine_cache_limit
+from repro.union import manager as MGR
+from repro.union import planner as PLN
+from repro.union import store as STO
+from repro.union.scenario import Scenario, ScenarioJob
+from repro.union.seeds import engine_seed
+
+V3_FIXTURE = os.path.join(os.path.dirname(__file__),
+                          "data_results_v3.json")
+
+PP = (
+    "For 4 repetitions {\n"
+    " task 0 sends a 1024 byte message to task 1 then\n"
+    " task 1 sends a 1024 byte message to task 0 }"
+)
+
+
+def tiny_scenario():
+    return Scenario(
+        name="tiny",
+        jobs=[
+            ScenarioJob(app="pp0", source=PP, ranks=2),
+            ScenarioJob(app="pp1", source=PP, ranks=2, start_us=200.0),
+        ],
+        placement="RN", tick_us=2.0, horizon_ms=50.0, pool_size=256,
+    )
+
+
+def tiny_experiment(**kw):
+    kw.setdefault("members", 2)
+    return union.Experiment(
+        name="store-t", scenarios=[tiny_scenario()], **kw)
+
+
+def scenario_cells(exp):
+    plan = PLN.plan(exp)
+    return [c for n in plan.nodes if n.kind == "batched" for c in n.cells]
+
+
+# ---------------------------------------------------------------------------
+# fingerprints: stable, and sensitive to exactly the result-relevant axes
+# ---------------------------------------------------------------------------
+
+def test_scenario_fingerprint_stable_and_sensitive():
+    exp = tiny_experiment()
+    cells = scenario_cells(exp)
+    fp0 = STO.scenario_fingerprint(exp, cells[0])
+    # stable across re-planning of an identical spec
+    assert fp0 == STO.scenario_fingerprint(
+        tiny_experiment(), scenario_cells(tiny_experiment())[0])
+    # member cells differ (seed + member ordinal)
+    assert fp0 != STO.scenario_fingerprint(exp, cells[1])
+    # any result-relevant experiment axis splits the hash
+    for changed in (
+        tiny_experiment(seeds=[7, 8]),
+        tiny_experiment(probes=4),
+        tiny_experiment(hist=8),
+        tiny_experiment(strict=True),
+        tiny_experiment(arrival_jitter_us=5.0),
+    ):
+        assert STO.scenario_fingerprint(
+            changed, scenario_cells(changed)[0]) != fp0, changed
+    # ...but pure execution strategy does not (bit-identical, pinned)
+    seq = tiny_experiment(vmapped=False)
+    assert STO.scenario_fingerprint(seq, scenario_cells(seq)[0]) == fp0
+
+
+def test_store_roundtrip_and_corruption(tmp_path):
+    store = STO.ExperimentStore(str(tmp_path))
+    cell = union.CellResult(
+        kind="scenario", name="x", seed=3, placement="RN", routing="ADP",
+        report={"virtual_time_ms": 1.0, "latency": {"a": {"count": 2}}})
+    fp = "ab" + "0" * 62
+    assert store.get(fp) is None
+    path = store.put(fp, cell)
+    got = store.get(fp)
+    assert got is not None and got.to_dict() == cell.to_dict()
+    assert store.stats()["entries"] == 1
+    # corrupt entries read as misses, never as errors
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert store.get(fp) is None
+    # version-mismatched entries read as misses too
+    store.put(fp, cell)
+    with open(path) as f:
+        entry = json.load(f)
+    entry["store_version"] = STO.STORE_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(entry, f)
+    assert store.get(fp) is None
+
+
+# ---------------------------------------------------------------------------
+# the facade with a store: zero re-simulation, single-cell invalidation
+# ---------------------------------------------------------------------------
+
+def test_rerun_identical_experiment_executes_zero_cells(tmp_path):
+    store = str(tmp_path / "store")
+    r1 = union.run(tiny_experiment(), store=store)
+    assert r1.telemetry["store"]["hits"] == 0
+    assert r1.telemetry["store"]["misses"] == 2
+    r2 = union.run(tiny_experiment(), store=store)
+    assert r2.telemetry["store"]["hits"] == 2
+    assert r2.telemetry["store"]["misses"] == 0
+    # bit-identical cells, straight from the store
+    assert [c.to_dict() for c in r1.cells] == [c.to_dict() for c in r2.cells]
+
+
+def test_changed_grid_cell_reexecutes_only_that_cell(tmp_path):
+    store = str(tmp_path / "store")
+    union.run(tiny_experiment(seeds=[0, 1]), store=store)
+    res = union.run(tiny_experiment(seeds=[0, 2]), store=store)
+    assert res.telemetry["store"] == dict(
+        hits=1, misses=1, dir=os.path.abspath(store))
+    # and the union of both grids is now fully cached
+    res3 = union.run(tiny_experiment(seeds=[0, 2]), store=store)
+    assert res3.telemetry["store"]["misses"] == 0
+
+
+def test_trace_cells_hit_the_store(tmp_path):
+    from repro.sched.trace import CatalogApp, synthetic_trace
+
+    catalog = [CatalogApp(app="pp", ranks=2, est_runtime_us=1500.0,
+                          weight=1.0, source=PP)]
+    trace = synthetic_trace(
+        4, arrival="poisson", mean_gap_us=400.0, seed=0, catalog=catalog,
+        slots=2, tick_us=2.0, horizon_ms=50.0, pool_size=256,
+        name="store-trace")
+    store = str(tmp_path / "store")
+
+    def exp():
+        return union.Experiment(
+            name="store-tr",
+            trace=union.TraceStudy(trace=trace, policies=["fcfs", "easy"]))
+
+    r1 = union.run(exp(), store=store)
+    assert r1.telemetry["store"]["misses"] == 2
+    r2 = union.run(exp(), store=store)
+    assert r2.telemetry["store"] == dict(
+        hits=2, misses=0, dir=os.path.abspath(store))
+    assert [c.to_dict() for c in r1.cells] == [c.to_dict() for c in r2.cells]
+    # a different policy axis re-executes only the new cell
+    r3 = union.run(union.Experiment(
+        name="store-tr",
+        trace=union.TraceStudy(trace=trace,
+                               policies=["fcfs", "conservative"])),
+        store=store)
+    assert r3.telemetry["store"]["hits"] == 1
+    assert r3.telemetry["store"]["misses"] == 1
+
+
+def test_run_cancelled_between_nodes(tmp_path):
+    calls = []
+
+    def cancel():
+        calls.append(True)
+        return len(calls) > 1  # let node 1 run, stop before node 2
+
+    exp = tiny_experiment(grid=union.StudyGrid(routing=["MIN", "ADP"]))
+    assert len(PLN.plan(exp).nodes) == 2
+    store = str(tmp_path / "store")
+    with pytest.raises(union.RunCancelled) as ei:
+        union.run(exp, store=store, cancel=cancel)
+    assert ei.value.done == 2 and ei.value.total == 4
+    # the first node's cells were persisted before the cancellation, so
+    # a re-submission resumes: only the second node simulates
+    res = union.run(exp, store=store)
+    assert res.telemetry["store"]["hits"] == 2
+    assert res.telemetry["store"]["misses"] == 2
+
+
+# ---------------------------------------------------------------------------
+# schema-v3 artifacts load (upgraded), instead of raising
+# ---------------------------------------------------------------------------
+
+def test_v3_artifact_upgrades_to_v4(tmp_path):
+    res = union.Results.load(V3_FIXTURE)
+    assert res.schema_version == union.experiment.SCHEMA_VERSION == 4
+    assert res.telemetry["upgraded_from"] == 3
+    # v4-only telemetry keys exist with inert defaults
+    assert res.telemetry["hist"] == {} and res.telemetry["timeline"] is False
+    # v3 payload preserved
+    assert res.telemetry["engine_cache"]["size"] == 2
+    assert len(res.cells) == 2 and res.cells[0].name == "tiny"
+    assert res.cells[1].report["latency"]["pp0"]["avg_us"] == 3.3
+    # round trip: the upgraded artifact saves and loads as v4
+    out = str(tmp_path / "up.json")
+    res.save(out)
+    again = union.Results.load(out)
+    assert again.schema_version == 4
+    assert [c.to_dict() for c in again.cells] == [
+        c.to_dict() for c in res.cells]
+
+
+def test_unknown_schema_versions_still_raise():
+    with open(V3_FIXTURE) as f:
+        d = json.load(f)
+    for bad in (1, 2, 5, None):
+        dd = copy.deepcopy(d)
+        dd["schema_version"] = bad
+        with pytest.raises(ValueError, match="schema_version"):
+            union.Results.from_dict(dd)
+
+
+# ---------------------------------------------------------------------------
+# LRU-bounded engine cache: eviction counts, and rebuild is bit-identical
+# ---------------------------------------------------------------------------
+
+def _direct_report(routing):
+    sc = tiny_scenario()
+    sc.routing = routing
+    rs = MGR.resolve(sc, seed=0)
+    init, run, _ = MGR.build(rs)
+    final = jax.block_until_ready(run(init(seed=engine_seed(0))))
+    return MGR.member_report(final, rs, 0.0, seed=0)
+
+
+def test_lru_eviction_preserves_bit_identity_on_rebuild():
+    prev = set_engine_cache_limit(None)
+    try:
+        rep_adp = _direct_report("ADP")
+        stats0 = engine_cache_stats()
+        set_engine_cache_limit(1)
+        assert engine_cache_stats()["size"] <= 1
+        # a different routing mode is a different engine: building it
+        # under the cap evicts the ADP engine
+        _direct_report("MIN")
+        stats1 = engine_cache_stats()
+        assert stats1["size"] == 1
+        assert stats1["evictions"] > stats0["evictions"]
+        # the evicted engine rebuilds (a fresh compile) bit-identically
+        before = engine_cache_stats()["builds"]
+        rep_again = _direct_report("ADP")
+        assert engine_cache_stats()["builds"] == before + 1
+        assert rep_again == rep_adp
+    finally:
+        set_engine_cache_limit(prev)
+
+
+def test_cache_limit_validates_and_reports():
+    prev = set_engine_cache_limit(None)
+    try:
+        with pytest.raises(ValueError):
+            set_engine_cache_limit(0)
+        assert engine_cache_stats()["limit"] == -1
+        set_engine_cache_limit(4)
+        assert engine_cache_stats()["limit"] == 4
+        from repro.obs import get_registry
+
+        assert get_registry().gauge("engine_cache_limit").value() == 4
+    finally:
+        set_engine_cache_limit(prev)
