@@ -26,6 +26,13 @@ planning + summary must cost <= 2% warm).
 tick wall per fabric — the cross-fabric cost profile of the pluggable
 topology layer.
 
+``--failures`` measures the failure-campaign promise (docs/faults.md):
+the same ensemble healthy and on a degraded fabric (20% of fabric
+links at half bandwidth) through ONE shared engine — the degraded
+campaign's first run must cost zero engine builds (fault masks are
+runtime data), and the warm walls give the degraded fabric's
+steady-state simulation premium.
+
 ``--serve`` measures the simulation-as-a-service stack (docs/serve.md):
 one in-process Union server with a fresh content-hash store takes the
 same experiment at three temperatures — cold first submit (compile +
@@ -38,6 +45,7 @@ HTTP.
   PYTHONPATH=src python -m benchmarks.bench_union --trace [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --experiment [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --fabric [--quick]
+  PYTHONPATH=src python -m benchmarks.bench_union --failures [--quick]
   PYTHONPATH=src python -m benchmarks.bench_union --serve [--quick]
 """
 from __future__ import annotations
@@ -369,6 +377,74 @@ def bench_fabric(quick: bool):
     _append_entry(entry)
 
 
+_BENCH_FAILURE = "degrade:0.2:0.5"
+
+
+def bench_failures(quick: bool):
+    """Failure-campaign cost profile: the same ensemble healthy and on a
+    degraded fabric (20% of fabric links at half bandwidth), sharing ONE
+    compiled engine (fault masks are runtime data — the engine cache key
+    has no failure term, pinned by the recorded build counters). The
+    healthy campaign's cold run pays the one compile; the degraded
+    campaign's FIRST run must already be warm
+    (``degraded_engine_builds == 0``), and the warm walls of both
+    coordinates give the steady-state price of simulating on a degraded
+    fabric. A degrade factor (not a kill) keeps the bench deterministic:
+    every job still completes, unlike permanent dead links, where even
+    adaptive routing can stall when its one-shot detour draw crosses a
+    dead link too — so ``all_done`` is asserted for the healthy
+    coordinate and recorded (not asserted) for the degraded one."""
+    from repro import union
+
+    members = 2 if quick else 4
+    sc = bench_scenario(quick)
+    print(f"scenario={sc.name} members={members} (failure campaign "
+          f"profile, healthy vs {_BENCH_FAILURE})")
+
+    def campaign(failures, base_seed):
+        t0 = time.time()
+        res = union.run(union.Experiment(
+            name=f"{sc.name}-failures", scenarios=[sc], members=members,
+            base_seed=base_seed,
+            grid=union.StudyGrid(failures=failures)))
+        wall = time.time() - t0
+        all_done = True
+        for key, s in res.summary["scenario_studies"].items():
+            assert s["dropped_total"] == 0, key
+            if failures == ["healthy"]:
+                assert s["all_done"], key
+            all_done = all_done and bool(s["all_done"])
+        return wall, res, all_done
+
+    cold_wall, _, _ = campaign(["healthy"], 0)
+    healthy_warm, _, _ = campaign(["healthy"], 100)
+    deg_first_wall, res_first, _ = campaign([_BENCH_FAILURE], 200)
+    deg_builds = res_first.engine_cache["builds"]
+    assert deg_builds == 0, (
+        "the degraded campaign must reuse the healthy campaign's engine")
+    deg_warm, _, deg_done = campaign([_BENCH_FAILURE], 300)
+    ratio = deg_warm / max(healthy_warm, 1e-9)
+    print(f"  healthy: cold {cold_wall:6.1f}s | warm {healthy_warm:6.2f}s")
+    print(f"  {_BENCH_FAILURE}: first {deg_first_wall:6.2f}s "
+          f"(0 engine builds) | warm {deg_warm:6.2f}s "
+          f"({ratio:.2f}x healthy, all_done={deg_done})")
+    entry = dict(
+        bench="union_failures_profile",
+        members=members,
+        provenance=provenance(),
+        scenario=sc.to_dict(),
+        failure=_BENCH_FAILURE,
+        degraded_all_done=deg_done,
+        healthy_cold_wall_s=cold_wall,
+        healthy_warm_wall_s=healthy_warm,
+        degraded_first_wall_s=deg_first_wall,
+        degraded_warm_wall_s=deg_warm,
+        degraded_engine_builds=deg_builds,
+        degraded_over_healthy_warm=ratio,
+    )
+    _append_entry(entry)
+
+
 def bench_serve(quick: bool):
     """Serve-stack temperatures: submit-to-done wall through one
     in-process Union server (real HTTP, fresh temp store). Cold pays
@@ -454,7 +530,13 @@ def main():
     ap.add_argument("--serve", action="store_true",
                     help="serve profile: cold vs engine-warm vs store-hit"
                     " submit-to-done wall through the Union server")
+    ap.add_argument("--failures", action="store_true",
+                    help="failure campaign profile: healthy vs 2%%"
+                    " dead-link warm wall through one shared engine")
     args = ap.parse_args()
+    if args.failures:
+        bench_failures(args.quick)
+        return
     if args.trace:
         bench_trace(args.quick)
         return

@@ -47,6 +47,10 @@ PROFILE_METRICS = {
         ("warm_submit_wall_s", _LOWER),
         ("store_hit_wall_s", _LOWER),
     ],
+    "union_failures_profile": [
+        ("healthy_warm_wall_s", _LOWER),
+        ("degraded_warm_wall_s", _LOWER),
+    ],
     # fabric profile keys are dynamic (<fabric>_warm_members_per_sec)
 }
 

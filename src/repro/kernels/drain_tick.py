@@ -66,8 +66,10 @@ def _make_kernel(n_apps: int, n_routers: int, Lp: int):
 
         @pl.when((phase == 1) & (mb == 0))
         def _share():
+            # bw_ref holds this member's (1, Lp) effective-bandwidth row
+            # (runtime fault factors applied by the engine tick).
             share_ref[...] = (
-                bw_ref[...] / jnp.maximum(nl_ref[...], 1.0) * 1e-6
+                bw_ref[0] / jnp.maximum(nl_ref[...], 1.0) * 1e-6
             )
 
         @pl.when(phase == 1)
@@ -106,11 +108,13 @@ def drain_tick_pallas(routes, bytes_rem, active, job, min_arrive, t, dt,
                       bw_eff, link_dst_router, n_apps, n_routers,
                       *, interpret: bool = True):
     """routes (B,M,K) int32, bytes_rem/min_arrive (B,M) f32, active (B,M)
-    bool, job (B,M) int32, t (B,) f32, dt scalar, bw_eff/link_dst_router
-    (L+1,) -> (new_rem, rate, delivered, link_bytes_delta (B, L+1),
-    router_win_delta (B, n_apps, R))."""
+    bool, job (B,M) int32, t (B,) f32, dt scalar, bw_eff (B, L+1) f32
+    per-member effective bandwidth (runtime fault factors),
+    link_dst_router (L+1,) -> (new_rem, rate, delivered,
+    link_bytes_delta (B, L+1), router_win_delta (B, n_apps, R))."""
     B, M, K = routes.shape
-    Lp = bw_eff.shape[0]
+    Lp = bw_eff.shape[-1]
+    assert bw_eff.shape == (B, Lp), "bw_eff must carry the member dim"
     assert M % BLOCK_M == 0, f"pool size {M} must be a multiple of {BLOCK_M}"
     nb = M // BLOCK_M
     act8 = active.astype(jnp.int8)
@@ -135,7 +139,7 @@ def drain_tick_pallas(routes, bytes_rem, active, job, min_arrive, t, dt,
             msg_spec,  # min_arrive
             pl.BlockSpec((1,), lambda b, p, m: (b,)),  # t
             pl.BlockSpec((1,), lambda b, p, m: (0,)),  # dt
-            pl.BlockSpec((Lp,), lambda b, p, m: (0,)),  # bw_eff resident
+            pl.BlockSpec((1, Lp), lambda b, p, m: (b, 0)),  # bw_eff rows
             pl.BlockSpec((Lp,), lambda b, p, m: (0,)),  # link_dst_router
         ],
         out_specs=(

@@ -44,9 +44,11 @@ def drain_tick(routes, bytes_rem, active, job, min_arrive, t, dt, bw_eff,
                use_pallas: bool = False, interpret: bool = True):
     """Fused drain tick (engine steps 2-3) over an explicit member batch.
 
-    See `ref.drain_tick_ref` for shapes/semantics. The jnp path is the
-    engine's default off-TPU: its scatters fold the member index into one
-    flat index, which is what fixes the vmapped-campaign regression.
+    See `ref.drain_tick_ref` for shapes/semantics — ``bw_eff`` is
+    ``(L+1,)`` or per-member ``(B, L+1)`` (runtime fault factors). The
+    jnp path is the engine's default off-TPU: its scatters fold the
+    member index into one flat index, which is what fixes the
+    vmapped-campaign regression.
     """
     if not use_pallas:
         return ref.drain_tick_ref(
@@ -54,6 +56,8 @@ def drain_tick(routes, bytes_rem, active, job, min_arrive, t, dt, bw_eff,
             link_dst_router, n_apps, n_routers,
         )
     B, M, K = routes.shape
+    if bw_eff.ndim == 1:
+        bw_eff = jnp.broadcast_to(bw_eff, (B, bw_eff.shape[0]))
     pad = (-M) % DRAIN_BLOCK_M
     if pad:
         routes = jnp.pad(routes, ((0, 0), (0, pad), (0, 0)), constant_values=-1)

@@ -38,14 +38,17 @@ def drain_tick_ref(routes, bytes_rem, active, job, min_arrive, t, dt,
     routes: (B, M, K) int32 link ids (-1 pad); bytes_rem: (B, M) f32;
     active: (B, M) bool; job: (B, M) int32 app ids (< n_apps);
     min_arrive: (B, M) f32; t: (B,) f32; dt: scalar f32;
-    bw_eff: (L+1,) f32 per-link bandwidth (0 for failed links, dummy last);
+    bw_eff: (L+1,) or (B, L+1) f32 effective per-link bandwidth (0 for
+    failed links, dummy last) — per-**member** rows let one compiled
+    engine drain an ensemble of different failure patterns
+    (repro.netsim.faults); a 1-D vector broadcasts to every member;
     link_dst_router: (L+1,) int32 destination router per link (dummy last).
 
     Returns (new_rem (B,M), rate (B,M), delivered (B,M) bool,
              link_bytes_delta (B, L+1), router_win_delta (B, n_apps, R)).
     """
     B, M, K = routes.shape
-    Lp = bw_eff.shape[0]
+    Lp = bw_eff.shape[-1]
     valid = (routes >= 0) & active[:, :, None]
     lidx = jnp.where(valid, routes, Lp - 1)
     boff = (jnp.arange(B, dtype=jnp.int32) * Lp)[:, None, None]
@@ -55,7 +58,8 @@ def drain_tick_ref(routes, bytes_rem, active, job, min_arrive, t, dt,
         jnp.zeros((B * Lp,), jnp.float32)
         .at[flat].add(valid.reshape(-1).astype(jnp.float32))
     )
-    share = bw_eff[None, :] / jnp.maximum(n_l.reshape(B, Lp), 1.0) * 1e-6
+    bw2 = jnp.broadcast_to(bw_eff, (B, Lp))
+    share = bw2 / jnp.maximum(n_l.reshape(B, Lp), 1.0) * 1e-6
     per_link = jnp.where(valid, share.reshape(-1)[flat].reshape(B, M, K), jnp.inf)
     rate = jnp.min(per_link, axis=2)
     rate = jnp.where(active & jnp.isfinite(rate), rate, 0.0)

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import math
 import os
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
@@ -61,6 +62,7 @@ from repro.core.skeleton import OP, SkeletonProgram
 from repro.kernels import ops as KOPS
 from repro.netsim.config import NetConfig
 from repro.netsim.fabric import Fabric, fabric_key, routing_tables
+from repro.netsim.faults import FaultState
 from repro.obs.hist import (
     HistConfig, HistState, init_hist, update_hist,
 )
@@ -154,6 +156,13 @@ class SimState(NamedTuple):
     # full-fidelity per-(app, link-level) latency histograms (repro.obs):
     # None unless built with a HistConfig, same discipline as ``probes``.
     hist: Optional[HistState] = None
+    # runtime fault mask (repro.netsim.faults): per-link bandwidth factors
+    # and per-router health factors, ``(L,)``/``(R,)`` per member. Always
+    # populated by ``init_state`` — which links are dead (and how degraded)
+    # is runtime data like the job tables, so one compiled engine serves
+    # every failure pattern. Healthy factors are exact 1.0 multiplies /
+    # +0.0 demand adds, keeping healthy runs bit-identical to the goldens.
+    faults: Optional[FaultState] = None
 
 
 @dataclass
@@ -372,11 +381,15 @@ def build_engine(
     ``tick`` accept a member state or a stacked batch of members (leading
     ``B`` dim) — the whole campaign is one call either way.
 
-    Fault/straggler injection (DESIGN.md §4): ``link_down`` links carry no
-    traffic (adaptive routing steers around them via the demand estimate;
-    minimal routing stalls on them — the realistic asymmetry);
-    ``rank_slowdown`` multiplies each rank's COMPUTE durations (straggler
-    model — collectives make the whole job wait).
+    Fault/straggler injection (DESIGN.md §4, docs/faults.md): failed or
+    degraded links/routers are **runtime data** — pass
+    ``init_state(faults=...)`` a :class:`repro.netsim.faults.FaultState`.
+    Dead links carry no traffic (adaptive routing steers around them via
+    the demand estimate; minimal routing stalls on them — the realistic
+    asymmetry). The ``link_down`` kwarg is a deprecated bit-compatible
+    shim that seeds the default fault mask. ``rank_slowdown`` multiplies
+    each rank's COMPUTE durations (straggler model — collectives make the
+    whole job wait).
 
     Staggered arrivals: each job's ranks idle until ``max(job_start_us[ji],
     jobs[ji].start_us)`` of virtual time — dynamic co-scheduling, where a
@@ -421,16 +434,31 @@ def build_engine(
         [jnp.asarray(topo.link_dst_router, jnp.int32),
          jnp.zeros((1,), jnp.int32)]
     )  # dummy row
-    link_ok = jnp.asarray(
-        ~link_down if link_down is not None else np.ones(L, bool)
-    )
-    bw_eff = jnp.concatenate(
-        [jnp.where(link_ok, jnp.asarray(topo.link_bw, jnp.float32), 0.0),
-         jnp.ones((1,), jnp.float32)]
-    )
+    # fault gather tables: each tick recomputes the effective per-link
+    # bandwidth factor from the state's runtime fault leaves —
+    #   eff[l] = link_bw_factor[l] * router_factor[src[l]] * router_factor[dst[l]]
+    # — so link *and* router health are runtime data (repro.netsim.faults).
+    link_srcr_l = jnp.asarray(topo.link_src_router, jnp.int32)  # (L,)
+    link_dstr_l = jnp.asarray(topo.link_dst_router, jnp.int32)  # (L,)
+    bw_base = jnp.asarray(topo.link_bw, jnp.float32)  # (L,) healthy bw
+    if link_down is not None:
+        warnings.warn(
+            "build_engine(link_down=...) is deprecated: failure patterns "
+            "are runtime data now — pass init_state(faults=...) a "
+            "repro.netsim.faults.FaultState (or use the StudyGrid.failures "
+            "axis). The kwarg is a bit-compatible shim seeding the default "
+            "fault mask.",
+            DeprecationWarning, stacklevel=2,
+        )
+    default_link_factor = np.where(
+        np.asarray(link_down, bool), 0.0, 1.0
+    ).astype(np.float32) if link_down is not None else np.ones(L, np.float32)
 
     # probe constants (sim-plane observability): link -> level one-hot and
-    # each level's aggregate healthy capacity, baked at build time.
+    # each level's aggregate healthy capacity, baked at build time. The
+    # denominators deliberately stay *healthy* capacity under runtime
+    # faults — a failure shows up as a per-level utilization shift, not a
+    # silently renormalized ratio.
     if probes is not None:
         _lm = np.stack(
             [np.asarray(m, np.float32) for m in topo.link_levels().values()],
@@ -439,7 +467,7 @@ def build_engine(
         probe_level_mask = jnp.asarray(_lm)
         probe_level_bw = jnp.asarray(
             (np.asarray(topo.link_bw, np.float32)
-             * np.asarray(link_ok))[:, None] * _lm
+             * default_link_factor)[:, None] * _lm
         ).sum(axis=0)  # (n_levels,)
         probe_n_levels = _lm.shape[1]
 
@@ -709,6 +737,21 @@ def build_engine(
         if stop_m is not None:
             live_m = live_m & ~stop_m
 
+        # --- 0. runtime fault mask -> effective per-link bandwidth ---
+        # (B, L): the member's link factors times both endpoint routers'
+        # health factors. Healthy members multiply by exact 1.0, so their
+        # trajectories stay bit-identical to a fault-free engine.
+        flt = state.faults
+        rf = flt.router_factor  # (B, R)
+        eff_f = (
+            flt.link_bw_factor
+            * rf[:, link_srcr_l] * rf[:, link_dstr_l]
+        )  # (B, L)
+        bw_run = jnp.concatenate(
+            [bw_base[None, :] * eff_f,
+             jnp.ones((B, 1), jnp.float32)], axis=1,
+        )  # (B, L+1) with the dummy row
+
         # --- 1. VM entry + emission + injection (one stacked pass) ---
         vms, dst, sizes = vm_emit(jt, state.vms, t, live_m)
         fired = jnp.any(dst >= 0, axis=(2, 3))  # (B, J)
@@ -765,7 +808,11 @@ def build_engine(
                 * valid,
             )
             # failed links: infinite demand steers adaptive routes around
-            demand = demand.at[:, :L].add(jnp.where(link_ok, 0.0, 1e18))
+            # them (MIN ignores demand and honestly stalls); +0.0 when
+            # healthy, so the add is a bit-exact no-op.
+            demand = demand.at[:, :L].add(
+                jnp.where(eff_f > 0.0, 0.0, 1e18)
+            )
 
             pool, metrics = inject(
                 pool, metrics, t,
@@ -804,7 +851,7 @@ def build_engine(
         # delivery, plus per-link byte counters (kernels/drain_tick.py) ---
         new_rem, _rate, delivered, lb_delta, rw_delta = KOPS.drain_tick(
             pool.routes, pool.bytes_rem, pool.active, pool.job,
-            pool.min_arrive, t, jnp.float32(dt), bw_eff, link_dstr,
+            pool.min_arrive, t, jnp.float32(dt), bw_run, link_dstr,
             n_apps=n_apps, n_routers=R, use_pallas=use_pallas,
             interpret=kernel_interpret,
         )
@@ -989,7 +1036,7 @@ def build_engine(
             metrics=metrics,
             rng=jnp.where(live_m, rng2 + jnp.uint32(1), rng),
             jobs=jt, ur_nodes=state.ur_nodes, probes=probes_st,
-            hist=hist_st,
+            hist=hist_st, faults=state.faults,
         )
 
     # ------------------------------------------------------------------
@@ -999,6 +1046,7 @@ def build_engine(
         start_us: Optional[Sequence[float]] = None,
         jobs_override: Optional[Sequence[JobSpec]] = None,
         rank_slowdown_override: Optional[Sequence[np.ndarray]] = None,
+        faults: Optional[FaultState] = None,
     ) -> SimState:
         """Build one member's initial state; every vmap-able knob lives here.
 
@@ -1007,9 +1055,13 @@ def build_engine(
         placements; ``start_us`` overrides per-job arrival offsets;
         ``seed`` sets the engine RNG (routing tiebreaks + UR
         destinations); ``jobs_override`` swaps in a different job set that
-        fits the engine's capacity envelope (ragged campaigns). Stack
-        member states along a new leading axis and pass the batch straight
-        to ``run`` — one call simulates the whole ensemble.
+        fits the engine's capacity envelope (ragged campaigns);
+        ``faults`` sets the member's runtime fault mask (a
+        :class:`repro.netsim.faults.FaultState`; default healthy, or the
+        deprecated build-time ``link_down`` shim). Stack member states
+        along a new leading axis and pass the batch straight to ``run`` —
+        one call simulates the whole ensemble, members with *different
+        failure patterns* included.
         """
         js = list(jobs_override) if jobs_override is not None else list(jobs)
         slow = rank_slowdown_override
@@ -1077,6 +1129,24 @@ def build_engine(
             win_idx=jnp.int32(0),
             peak_inject=jnp.float32(0.0),
         )
+        if faults is None:
+            flt = FaultState(
+                link_bw_factor=jnp.asarray(default_link_factor),
+                router_factor=jnp.ones((R,), jnp.float32),
+            )
+        else:
+            flt = FaultState(
+                link_bw_factor=jnp.asarray(
+                    faults.link_bw_factor, jnp.float32),
+                router_factor=jnp.asarray(
+                    faults.router_factor, jnp.float32),
+            )
+            if flt.link_bw_factor.shape != (L,) \
+                    or flt.router_factor.shape != (R,):
+                raise ValueError(
+                    f"faults shapes {flt.link_bw_factor.shape}/"
+                    f"{flt.router_factor.shape} do not match fabric "
+                    f"(L={L}, R={R})")
         return SimState(
             t=jnp.float32(0.0), vms=vms, ur=ur_state, pool=pool,
             metrics=metrics, rng=jnp.uint32(seed),
@@ -1089,6 +1159,7 @@ def build_engine(
                 init_hist(hist, n_apps, hist_n_levels)
                 if hist is not None else None
             ),
+            faults=flt,
         )
 
     def all_done(state: SimState):
@@ -1231,7 +1302,6 @@ def engine_cache_key(
     pool_size: Optional[int] = None,
     horizon_us: float = 500_000.0,
     capacity: EngineCapacity,
-    link_down: Optional[np.ndarray] = None,
     use_pallas: Optional[bool] = None,
     probes: Optional[ProbeConfig] = None,
     hist: Optional[HistConfig] = None,
@@ -1245,21 +1315,21 @@ def engine_cache_key(
     its placement is overridable per member at init time. ``probes`` and
     ``hist`` are part of the key: an observed engine is a separate
     compiled entry, so requesting probes or histograms never perturbs
-    the plain engines other callers hold.
+    the plain engines other callers hold. Failure patterns are
+    deliberately **absent**: the fault mask is runtime data
+    (``init_state(faults=...)``), so a whole failure campaign shares one
+    compiled engine (pinned by the cache-counter test in
+    tests/test_faults.py).
     """
     net = net or NetConfig()
     ur_key = None if ur is None else (
         int(ur.rank2node.shape[0]), float(ur.size_bytes),
         float(ur.interval_us), float(ur.start_us),
     )
-    down_key = (
-        None if link_down is None
-        else tuple(np.flatnonzero(np.asarray(link_down)).tolist())
-    )
     return (
         fabric_key(topo), routing.upper() in ("ADP", "ADAPTIVE"), ur_key,
         net, int(pool_size or net.pool_size), float(horizon_us), capacity,
-        down_key, use_pallas, probes, hist,
+        use_pallas, probes, hist,
     )
 
 
@@ -1272,7 +1342,6 @@ def get_engine(
     pool_size: Optional[int] = None,
     horizon_us: float = 500_000.0,
     capacity: EngineCapacity,
-    link_down: Optional[np.ndarray] = None,
     use_pallas: Optional[bool] = None,
     probes: Optional[ProbeConfig] = None,
     hist: Optional[HistConfig] = None,
@@ -1282,12 +1351,14 @@ def get_engine(
     Cached engines are built with an **empty default job set** — callers
     must pass their jobs at init time (``init_state(jobs_override=...)``),
     and when a UR source exists, its per-member placement via the final
-    ``placements`` entry. :func:`build_engine` remains the uncached
-    primitive for callers baking job-set defaults or fault injections.
+    ``placements`` entry. Fault injection is runtime data too
+    (``init_state(faults=...)``): a failure campaign never forces a
+    rebuild. :func:`build_engine` remains the uncached primitive for
+    callers baking job-set defaults.
     """
     key = engine_cache_key(
         topo, routing=routing, ur=ur, net=net, pool_size=pool_size,
-        horizon_us=horizon_us, capacity=capacity, link_down=link_down,
+        horizon_us=horizon_us, capacity=capacity,
         use_pallas=use_pallas, probes=probes, hist=hist,
     )
     eng = _ENGINE_CACHE.get(key)
@@ -1299,7 +1370,7 @@ def get_engine(
     _ENGINE_CACHE_STATS["builds"] += 1
     eng = build_engine(
         topo, [], routing=routing, ur=ur, net=net, pool_size=pool_size,
-        horizon_us=horizon_us, link_down=link_down, capacity=capacity,
+        horizon_us=horizon_us, capacity=capacity,
         use_pallas=use_pallas, probes=probes, hist=hist,
     )
     _ENGINE_CACHE[key] = eng

@@ -242,10 +242,15 @@ class _CellLoop:
     writes down every transition in sim time (queue depth, backfill
     decisions, slot drains) — purely observational, and sim-time only,
     so recorded runs stay bit-identical and batched ≡ sequential.
+
+    ``failure`` (a :class:`repro.netsim.faults.FailureSpec`) attaches a
+    fault schedule: :meth:`step` caps ``t_stop`` at the next pending
+    fault event so windows land exactly on event times, and the drivers
+    apply :meth:`pop_due_faults` to the engine state between windows.
     """
 
     def __init__(self, trace, policy, slots, seed, topo, resolved, net,
-                 timeline=None):
+                 timeline=None, failure=None):
         self.trace = trace
         self.policy = policy
         self.slots = slots
@@ -271,8 +276,28 @@ class _CellLoop:
         self.windows = 0
         self.t_now = 0.0
         self.horizon_hit = False
-        self.guard = 20 * len(self.arrivals) + 1000
+        # entry 0 of the fault timeline is the t=0 mask, applied by the
+        # driver at init_state time; the cursor walks the timed events.
+        self.fault_tl = (
+            failure.timeline(topo, seed) if failure is not None else [])
+        self.fault_cur = 1 if self.fault_tl else 0
+        self.guard = 20 * len(self.arrivals) + 1000 + len(self.fault_tl)
         self.active = bool(self.arrivals)
+
+    def initial_faults(self):
+        """The t=0 fault mask for ``init_state(faults=...)`` (or None)."""
+        return self.fault_tl[0][1] if self.fault_tl else None
+
+    def pop_due_faults(self):
+        """The latest fault snapshot now due, advancing the cursor past
+        every due entry (snapshots are cumulative — only the last one
+        matters). None when no event is due."""
+        fs = None
+        while (self.fault_cur < len(self.fault_tl)
+               and self.fault_tl[self.fault_cur][0] <= self.t_now):
+            fs = self.fault_tl[self.fault_cur][1]
+            self.fault_cur += 1
+        return fs
 
     def step(
         self, view: WindowView
@@ -387,11 +412,14 @@ class _CellLoop:
             self.active = False
             return retires, admits, np.inf
 
-        # 4. the next window's cap: the next arrival or unbounded
+        # 4. the next window's cap: the next arrival, the next fault
+        # event (windows must land exactly on event times), or unbounded
         t_stop = (
             arrivals[self.ai].arrival_us
             if self.ai < len(arrivals) else np.inf
         )
+        if self.fault_cur < len(self.fault_tl):
+            t_stop = min(t_stop, self.fault_tl[self.fault_cur][0])
         return retires, admits, t_stop
 
     def finalize(
@@ -440,6 +468,7 @@ def _run_trace_impl(
     engine=None,
     collect_state: bool = False,
     timeline: bool = False,
+    failure=None,
 ) -> SchedResult:
     """Stream a trace through the online scheduler.
 
@@ -450,18 +479,25 @@ def _run_trace_impl(
     recompilation. One :func:`~repro.netsim.engine.window_host_view`
     fetch per window feeds the whole host round (the historical per-slot
     ``slot_done``/``slot_in_flight`` reads were each a device fetch).
+    ``failure`` (a :class:`repro.netsim.faults.FailureSpec`) runs the
+    trace on a degraded fabric: the t=0 mask seeds the engine state and
+    timed events are applied between windows.
     """
+    from repro.netsim.faults import with_faults
+
     slots = slots or trace.slots
     t0 = time.time()
     if engine is None:
         engine = build_sched_engine(trace, slots)
     eng, topo, resolved, net = engine
 
-    state = eng.init_state(seed=engine_seed(seed))
     cell = _CellLoop(
         trace, policy, slots, seed, topo, resolved, net,
         timeline=TimelineRecorder() if timeline else None,
+        failure=failure,
     )
+    state = eng.init_state(seed=engine_seed(seed),
+                           faults=cell.initial_faults())
     while cell.active:
         view = window_host_view(state)
         retires, admits, t_stop = cell.step(view)
@@ -471,6 +507,9 @@ def _run_trace_impl(
             state = admit_job(state, slot, spec, checked=False)
         if not cell.active:
             break
+        fs = cell.pop_due_faults()
+        if fs is not None:
+            state = with_faults(state, fs)
         with span("sched.window", cat="sched", window=cell.windows,
                   t_now_us=cell.t_now, queued=len(cell.queue.jobs),
                   running=len(cell.running)):
@@ -498,7 +537,11 @@ def run_trace_batch(
 ) -> List[SchedResult]:
     """Lock-step many trace cells through ONE batched windowed engine.
 
-    ``specs`` is ``[(trace, policy, seed), ...]`` — every cell of a
+    ``specs`` is ``[(trace, policy, seed), ...]`` — optionally
+    ``(trace, policy, seed, failure)`` with a
+    :class:`repro.netsim.faults.FailureSpec` per cell (fault masks are
+    runtime data, so a mixed healthy/degraded batch still shares the one
+    engine) — every cell of a
     (seed × policy) grid whose traces resolve to the same fabric, net
     config, horizon and slot count (the planner's ``WindowedBatchNode``
     buckets guarantee this; mismatches raise). Each round the driver
@@ -523,13 +566,19 @@ def run_trace_batch(
     ``engine=None`` one is built over the union of the specs' envelopes.
     ``collect_state`` returns each member's final state on its result.
     """
+    from repro.netsim.faults import set_member_faults
+
     t0 = time.time()
-    specs = list(specs)
+    # normalize 3-tuples to 4-tuples (failure=None keeps old callers)
+    specs = [
+        (sp[0], sp[1], sp[2], sp[3] if len(sp) > 3 else None)
+        for sp in specs
+    ]
     if not specs:
         return []
     resolved_by: Dict[int, Tuple] = {}
     slots_by: Dict[int, int] = {}
-    for trace, _, _ in specs:
+    for trace, _, _, _ in specs:
         if id(trace) not in resolved_by:
             n_slots = slots or trace.slots
             resolved_by[id(trace)] = _resolve_trace(trace, n_slots)
@@ -537,7 +586,7 @@ def run_trace_batch(
     first = specs[0][0]
     if engine is None:
         cap = resolved_by[id(first)][2]
-        for trace, _, _ in specs:
+        for trace, _, _, _ in specs:
             cap = cap.union(resolved_by[id(trace)][2])
         engine = build_sched_engine(
             first, slots_by[id(first)], probes=probes, capacity=cap,
@@ -549,7 +598,7 @@ def run_trace_batch(
     key0 = (fabric_key(topo), net, slots_by[id(first)],
             first.routing.upper() in ("ADP", "ADAPTIVE"),
             float(first.horizon_ms))
-    for trace, _, _ in specs:
+    for trace, _, _, _ in specs:
         topo_i, _, cap_i, net_i = resolved_by[id(trace)]
         key_i = (fabric_key(topo_i), net_i, slots_by[id(trace)],
                  trace.routing.upper() in ("ADP", "ADAPTIVE"),
@@ -570,11 +619,14 @@ def run_trace_batch(
     cells = [
         _CellLoop(trace, policy, slots_by[id(trace)], seed, topo,
                   resolved_by[id(trace)][1], net,
-                  timeline=TimelineRecorder() if timeline else None)
-        for trace, policy, seed in specs
+                  timeline=TimelineRecorder() if timeline else None,
+                  failure=fl)
+        for trace, policy, seed, fl in specs
     ]
-    batched = stack_members(
-        [eng.init_state(seed=engine_seed(seed)) for _, _, seed in specs])
+    batched = stack_members([
+        eng.init_state(seed=engine_seed(seed), faults=c.initial_faults())
+        for (_, _, seed, _), c in zip(specs, cells)
+    ])
     B = len(cells)
     rounds = 0
     while True:
@@ -595,6 +647,11 @@ def run_trace_batch(
                 ran.append(cells[i])
         batched = retire_jobs(batched, all_retires)
         batched = admit_jobs(batched, all_admits)
+        for i in live:
+            if cells[i].active:
+                fs = cells[i].pop_due_faults()
+                if fs is not None:
+                    batched = set_member_faults(batched, i, fs)
         if not ran:
             break
         # finished / horizon-hit members are not live and freeze in

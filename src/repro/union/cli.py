@@ -151,6 +151,23 @@ def _run_experiment(args, exp: EXP.Experiment,
         exp.hist = args.hist
     if args.timeline:
         exp.timeline = True
+    if getattr(args, "failures", None):
+        import json
+
+        from repro.netsim.faults import normalize_failures
+
+        # the failures axis crosses every mode's grid; runtime fault
+        # masks, so the axis costs zero extra engine compiles. A .json
+        # entry is a failure-spec file (name + timed events).
+        entries = []
+        for f in args.failures:
+            if isinstance(f, str) and f.endswith(".json"):
+                with open(f) as fh:
+                    entries.append(json.load(fh))
+            else:
+                entries.append(f)
+        exp.grid = dataclasses.replace(
+            exp.grid, failures=normalize_failures(entries))
     if args.plan:
         print(PLN.plan(exp).describe())
         return
@@ -159,6 +176,12 @@ def _run_experiment(args, exp: EXP.Experiment,
         st = res.telemetry.get("store", {})
         print(f"store {args.store}: {st.get('hits', 0)} cell(s) reused, "
               f"{st.get('misses', 0)} simulated")
+        if getattr(args, "store_max_bytes", None):
+            from repro.union.store import store_gc
+
+            g = store_gc(args.store, max_bytes=args.store_max_bytes)
+            print(f"store gc: removed {g['removed']} entr(ies), "
+                  f"{g['entries']} kept ({g['bytes']} bytes)")
     _attach_interference(args, exp, res)
     print(REP.format_results(res))
     _print_interference(res)
@@ -298,6 +321,21 @@ def main(argv=None) -> None:
                     " are persisted — re-running a grid re-executes only"
                     " changed cells (the same store a repro.union.serve"
                     " server uses; see docs/serve.md)")
+    ap.add_argument("--store-max-bytes", type=int, default=None,
+                    metavar="N",
+                    help="after the run, garbage-collect the --store"
+                    " down to N bytes (oldest-written entries evicted"
+                    " first; see repro.union.store.store_gc)")
+    ap.add_argument("--failures", nargs="+", default=None,
+                    metavar="SPEC",
+                    help="failures-axis grid entries (repro.netsim.faults):"
+                    " 'healthy', 'links:P' / 'routers:P' (random fraction"
+                    " dead), 'level:NAME[:P]' (a fabric level),"
+                    " 'block:P' (contiguous router block / correlated"
+                    " outage), 'degrade:P:F' (fraction P at bandwidth"
+                    " factor F), or a failure-spec JSON file with timed"
+                    " events. Fault masks are runtime data — the whole"
+                    " axis shares each variant's one compiled engine")
     ap.add_argument("--profile", metavar="TRACE.json", default=None,
                     help="enable the host-plane span tracer (repro.obs)"
                     " and write a Chrome trace-event JSON here (open in"

@@ -109,8 +109,8 @@ def _resolve_spec_path(spec: str, base_dir: Optional[str]) -> str:
 
 @dataclass
 class StudyGrid:
-    """Factors crossed with every scenario: fabric, placement and routing
-    axes.
+    """Factors crossed with every scenario: fabric, placement, routing
+    and failure axes.
 
     ``None`` leaves the scenario's own value; a list replaces it with one
     variant per entry (seeds are the extra axis, via ``members``/``seeds``;
@@ -119,11 +119,28 @@ class StudyGrid:
     each named fabric ("1d"/"2d" dragonflies, "fat_tree", "torus"), each
     variant on its own compiled engine (the cache keys on fabric
     identity), all in one Results artifact.
+
+    ``failures`` sweeps the network's *health*
+    (:mod:`repro.netsim.faults`): each entry is a failure spec —
+    ``"healthy"``, a shorthand string (``"links:0.02"``,
+    ``"level:global"``, ``"block:0.1"``), or a full
+    :class:`~repro.netsim.faults.FailureSpec` dict with timed events.
+    The fault mask is runtime data, so the whole axis shares each
+    variant's one compiled engine — a failure campaign costs zero extra
+    compiles. The axis applies to scenario ensembles *and* trace
+    studies.
     """
 
     placements: Optional[List[str]] = None
     routing: Optional[List[str]] = None
     fabrics: Optional[List[str]] = None
+    failures: Optional[List[Any]] = None
+
+    def __post_init__(self):
+        if self.failures is not None:
+            from repro.netsim.faults import normalize_failures
+
+            self.failures = normalize_failures(self.failures)
 
     def validate(self) -> None:
         from repro.netsim.fabric import fabric_names
@@ -139,11 +156,22 @@ class StudyGrid:
                 raise ValueError(
                     f"unknown fabric {f!r} in grid; valid fabrics: "
                     f"{sorted(fabric_names())}")
+        # failures were normalized (and so parse-validated) in
+        # __post_init__; level names are checked against the actual
+        # fabric when the pattern resolves at execution time.
 
     @property
     def is_default(self) -> bool:
         return (self.placements is None and self.routing is None
-                and self.fabrics is None)
+                and self.fabrics is None and self.failures is None)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {k: v for k, v in (
+            ("placements", self.placements), ("routing", self.routing),
+            ("fabrics", self.fabrics)) if v is not None}
+        if self.failures is not None:
+            d["failures"] = [f.to_dict() for f in self.failures]
+        return d
 
 
 @dataclass
@@ -349,8 +377,7 @@ class Experiment:
         if self.seeds is not None:
             d["seeds"] = list(self.seeds)
         if not self.grid.is_default:
-            d["grid"] = {k: v for k, v in asdict(self.grid).items()
-                         if v is not None}
+            d["grid"] = self.grid.to_dict()
         if self.arrival_jitter_us:
             d["arrival_jitter_us"] = self.arrival_jitter_us
         if not self.vmapped:
@@ -436,7 +463,14 @@ class CellResult:
     member: int = 0
     policy: Optional[str] = None  # trace cells: queue policy
     fabric: str = "1d"  # the network fabric this cell ran on
+    # the failures-axis coordinate (repro.netsim.faults spec name);
+    # "healthy" cells keep their historical keys/group keys unchanged.
+    failure: str = "healthy"
     report: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def _fail_seg(self) -> str:
+        return "" if self.failure == "healthy" else f"/{self.failure}"
 
     @property
     def key(self) -> str:
@@ -444,9 +478,9 @@ class CellResult:
         grouping): grid coordinates, no report contents."""
         if self.kind == "trace":
             return (f"{self.name}/{self.fabric}/{self.policy}"
-                    f"/s{self.seed}")
+                    f"{self._fail_seg}/s{self.seed}")
         return (f"{self.name}/{self.fabric}/{self.placement}"
-                f"/{self.routing}/m{self.member}")
+                f"/{self.routing}{self._fail_seg}/m{self.member}")
 
     def records(self) -> List[Dict[str, Any]]:
         """Tidy rows: one per app (scenario cells) or one per cell
@@ -454,7 +488,7 @@ class CellResult:
         base = dict(kind=self.kind, name=self.name, seed=self.seed,
                     placement=self.placement, routing=self.routing,
                     member=self.member, policy=self.policy,
-                    fabric=self.fabric)
+                    fabric=self.fabric, failure=self.failure)
         if self.kind == "trace":
             s = self.report
             return [dict(
@@ -585,6 +619,45 @@ class RunCancelled(RuntimeError):
 # the executor: Plan nodes -> cells
 # ---------------------------------------------------------------------------
 
+def _run_faulted(eng, inits, cells, host):
+    """Drive timed-failure scenario cells through ``eng.run_window``,
+    applying each cell's :class:`~repro.netsim.faults.FaultEvent`\\ s at
+    their sim-times. One stacked batch, per-member ``t_stop`` capped at
+    each member's own next event — members with no pending event run to
+    the horizon while batch-mates pause for mask surgery."""
+    import numpy as np
+
+    from repro.netsim.faults import set_member_faults
+
+    horizon = float(host.horizon_us)
+    tls = [c.failure.timeline(host.topo, c.seed) for c in cells]
+    state = stack_members(inits)
+    # timeline[0] is the t=0 mask, already applied by init_state.
+    cur = [1] * len(cells)
+    while True:
+        t, done, act = jax.device_get(
+            (state.t, state.vms.done, state.pool.active))
+        t = np.asarray(t)
+        fin = done.all(axis=(1, 2)) & ~act.any(axis=1)
+        live = (t < horizon) & ~fin
+        if not live.any():
+            break
+        t_stop = np.full(len(cells), np.inf, np.float32)
+        for i, tl in enumerate(tls):
+            if not live[i]:
+                continue
+            # apply every event now due; the timeline's strictly
+            # increasing times guarantee the next stop is > t[i], so
+            # every window round makes sim-time progress.
+            while cur[i] < len(tl) and tl[cur[i]][0] <= t[i]:
+                state = set_member_faults(state, i, tl[cur[i]][1])
+                cur[i] += 1
+            if cur[i] < len(tl):
+                t_stop[i] = tl[cur[i]][0]
+        state = jax.block_until_ready(eng.run_window(state, t_stop))
+    return [member_state(state, i) for i in range(len(cells))]
+
+
 def _exec_batched(node, exp: Experiment) -> List[CellResult]:
     """One engine from the shared cache, one batched call per node."""
     host = node.host
@@ -606,35 +679,59 @@ def _exec_batched(node, exp: Experiment) -> List[CellResult]:
                 placements=cell.rs.placements(cell.seed),
                 start_us=cell.start_us,
                 jobs_override=cell.rs.jobs,
+                faults=(cell.failure.initial_state(host.topo, cell.seed)
+                        if cell.failure is not None else None),
             )
             for cell in node.cells
         ]
     n = len(node.cells)
+    # cells with timed fault events need the windowed driver (mask
+    # surgery at event boundaries); everything else — healthy and
+    # static-pattern cells alike — keeps the plain single-dispatch run,
+    # which is the bit-identity path the goldens pin.
+    timed_ix = [i for i, c in enumerate(node.cells)
+                if c.failure is not None and c.failure.has_timed_events]
+    plain_ix = [i for i in range(n) if i not in set(timed_ix)]
     t0 = time.time()
+    states: List[Any] = [None] * n
     # cold = this node built its engine, so the run below pays the jit
     # compile; warm = the executable already existed in this process.
     with span("engine.run", cat="engine", members=n, cold=cold,
-              vmapped=exp.vmapped):
-        if exp.vmapped:
-            D = jax.local_device_count()
-            if D > 1 and n % D == 0:
-                # shard members across XLA devices (CPU host devices or
-                # accelerator cores): each device runs an (n/D)-batch.
-                chunk = n // D
-                sharded = stack_members([
-                    stack_members(inits[d * chunk:(d + 1) * chunk])
-                    for d in range(D)
-                ])
-                final = jax.block_until_ready(eng.prun(sharded))
-                states = [
-                    member_state(member_state(final, i // chunk), i % chunk)
-                    for i in range(n)
-                ]
+              vmapped=exp.vmapped, timed_faults=len(timed_ix)):
+        if plain_ix:
+            p_inits = [inits[i] for i in plain_ix]
+            np_ = len(p_inits)
+            if exp.vmapped:
+                D = jax.local_device_count()
+                if D > 1 and np_ % D == 0:
+                    # shard members across XLA devices (CPU host devices
+                    # or accelerator cores): each runs an (n/D)-batch.
+                    chunk = np_ // D
+                    sharded = stack_members([
+                        stack_members(p_inits[d * chunk:(d + 1) * chunk])
+                        for d in range(D)
+                    ])
+                    final = jax.block_until_ready(eng.prun(sharded))
+                    p_states = [
+                        member_state(member_state(final, i // chunk),
+                                     i % chunk)
+                        for i in range(np_)
+                    ]
+                else:
+                    final = jax.block_until_ready(
+                        eng.run(stack_members(p_inits)))
+                    p_states = [member_state(final, i) for i in range(np_)]
             else:
-                final = jax.block_until_ready(eng.run(stack_members(inits)))
-                states = [member_state(final, i) for i in range(n)]
-        else:
-            states = [jax.block_until_ready(eng.run(s)) for s in inits]
+                p_states = [jax.block_until_ready(eng.run(s))
+                            for s in p_inits]
+            for i, st in zip(plain_ix, p_states):
+                states[i] = st
+        if timed_ix:
+            f_states = _run_faulted(
+                eng, [inits[i] for i in timed_ix],
+                [node.cells[i] for i in timed_ix], host)
+            for i, st in zip(timed_ix, f_states):
+                states[i] = st
     wall = time.time() - t0
 
     out = []
@@ -647,7 +744,8 @@ def _exec_batched(node, exp: Experiment) -> List[CellResult]:
             kind="scenario", name=cell.scenario.name, seed=cell.seed,
             placement=cell.scenario.placement,
             routing=cell.scenario.routing, member=cell.member,
-            fabric=cell.scenario.topo, report=rep,
+            fabric=cell.scenario.topo, failure=cell.failure_name,
+            report=rep,
         )))
     return out
 
@@ -682,7 +780,7 @@ def _trace_cell_result(cell, trace, res, study, probes, topo,
         kind="trace", name=trace.name, seed=cell.seed,
         placement=trace.placement, routing=trace.routing,
         policy=cell.policy, fabric=trace.topo,
-        report=rep,
+        failure=cell.failure_name, report=rep,
     )
 
 
@@ -711,7 +809,7 @@ def _exec_windowed(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
                 trace, policy=cell.policy, slots=study.slots,
                 seed=cell.seed, engine=engine,
                 collect_state=probes is not None or hist is not None,
-                timeline=exp.timeline,
+                timeline=exp.timeline, failure=cell.failure,
             )
             sp.set(windows=res.windows, jobs=len(res.records))
         out.append((cell.index, _trace_cell_result(
@@ -735,7 +833,8 @@ def _exec_windowed_batch(node, exp: Experiment) -> List[Tuple[int, CellResult]]:
         engine = build_sched_engine(
             first, study.slots, probes=probes, capacity=node.capacity,
             hist=hist)
-    specs = [(node.traces[c.seed], c.policy, c.seed) for c in node.cells]
+    specs = [(node.traces[c.seed], c.policy, c.seed, c.failure)
+             for c in node.cells]
     with span("sched.trace_batch", cat="sched", cells=len(specs)) as sp:
         results = run_trace_batch(
             specs, slots=study.slots, engine=engine,

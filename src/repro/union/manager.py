@@ -181,7 +181,8 @@ def bind_jobs(eng: Engine, rs: ResolvedScenario) -> Engine:
         default_placements.append(np.asarray(rs.ur.rank2node))
 
     def init_state(seed: int = 1, placements=None, start_us=None,
-                   jobs_override=None, rank_slowdown_override=None):
+                   jobs_override=None, rank_slowdown_override=None,
+                   faults=None):
         if jobs_override is None:
             jobs_override = rs.jobs
             if placements is None:
@@ -190,6 +191,7 @@ def bind_jobs(eng: Engine, rs: ResolvedScenario) -> Engine:
             seed=seed, placements=placements, start_us=start_us,
             jobs_override=jobs_override,
             rank_slowdown_override=rank_slowdown_override,
+            faults=faults,
         )
 
     # share the host's pmapped run (built lazily on the cached engine, so

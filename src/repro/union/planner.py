@@ -54,7 +54,9 @@ def bucket_key(rs: MGR.ResolvedScenario) -> Tuple:
 @dataclass
 class ScenarioCell:
     """One ensemble member of one grid variant: a (scenario, seed) pair
-    plus its actual arrival schedule (scenario ``start_us`` + jitter)."""
+    plus its actual arrival schedule (scenario ``start_us`` + jitter) and
+    its failures-axis coordinate (a runtime fault mask — cells differing
+    only in ``failure`` share one compiled engine)."""
 
     scenario: Scenario
     seed: int
@@ -62,15 +64,27 @@ class ScenarioCell:
     index: int = 0  # study-wide cell ordinal (Results preserve this order)
     rs: MGR.ResolvedScenario = field(repr=False, default=None)
     start_us: np.ndarray = field(repr=False, default=None)
+    failure: Any = None  # repro.netsim.faults.FailureSpec (None = healthy)
+
+    @property
+    def failure_name(self) -> str:
+        return self.failure.name if self.failure is not None else "healthy"
 
 
 @dataclass
 class TraceCell:
-    """One online-scheduler run: a trace seed under one queue policy."""
+    """One online-scheduler run: a trace seed under one queue policy
+    (plus the failures-axis coordinate, applied as runtime fault events
+    at window boundaries)."""
 
     seed: int
     policy: str
     index: int = 0  # study-wide cell ordinal (Results preserve this order)
+    failure: Any = None  # repro.netsim.faults.FailureSpec (None = healthy)
+
+    @property
+    def failure_name(self) -> str:
+        return self.failure.name if self.failure is not None else "healthy"
 
 
 @dataclass
@@ -158,6 +172,11 @@ class Plan:
             lines.append(
                 "  observability: " + ", ".join(obs_bits)
                 + " (instrumented engine variants compile separately)")
+        fails = getattr(self.experiment.grid, "failures", None)
+        if fails:
+            lines.append(
+                "  failures axis: " + ", ".join(f.name for f in fails)
+                + " (runtime fault masks — zero extra engine compiles)")
         for i, node in enumerate(self.nodes):
             if node.kind == "batched":
                 cap = node.capacity
@@ -226,20 +245,26 @@ def _plan(exp) -> Plan:
                     )
 
     seeds = _member_seeds(exp, len(variants))
+    # the failures axis reuses each variant's member seeds: a degraded
+    # cell and its healthy baseline share seed/placements, so deltas
+    # attribute to the failure alone. Fault masks are runtime data — the
+    # axis multiplies cells, never engine buckets.
+    fails = exp.grid.failures or [None]
     cells: List[ScenarioCell] = []
     for v, sc in enumerate(variants):
         rs = MGR.resolve(sc, seed=seeds[v][0] if seeds[v] else 0)
         base_start = np.asarray(rs.start_us, np.float32)
-        for m, seed in enumerate(seeds[v]):
-            start = base_start
-            if exp.arrival_jitter_us > 0:
-                jit_rng = np.random.default_rng(seed)
-                start = base_start + jit_rng.uniform(
-                    0.0, exp.arrival_jitter_us, size=base_start.shape
-                ).astype(np.float32)
-            cells.append(ScenarioCell(
-                scenario=sc, seed=seed, member=m, index=len(cells),
-                rs=rs, start_us=start))
+        for fl in fails:
+            for m, seed in enumerate(seeds[v]):
+                start = base_start
+                if exp.arrival_jitter_us > 0:
+                    jit_rng = np.random.default_rng(seed)
+                    start = base_start + jit_rng.uniform(
+                        0.0, exp.arrival_jitter_us, size=base_start.shape
+                    ).astype(np.float32)
+                cells.append(ScenarioCell(
+                    scenario=sc, seed=seed, member=m, index=len(cells),
+                    rs=rs, start_us=start, failure=fl))
 
     buckets: Dict[Tuple, List[ScenarioCell]] = {}
     for cell in cells:
@@ -272,10 +297,12 @@ def _plan_trace(exp) -> List[Any]:
     """
     study = exp.trace
     tseeds = study.seed_list(exp.base_seed)
+    fails = exp.grid.failures or [None]
     cells = [
-        TraceCell(seed=s, policy=p, index=i)
-        for i, (s, p) in enumerate(
-            (s, p) for s in tseeds for p in study.policies)
+        TraceCell(seed=s, policy=p, failure=fl, index=i)
+        for i, (s, p, fl) in enumerate(
+            (s, p, fl) for s in tseeds for p in study.policies
+            for fl in fails)
     ]
     if not getattr(study, "batch", True) or len(cells) < 2:
         return [WindowedNode(study=study, cells=cells)]

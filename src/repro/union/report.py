@@ -257,12 +257,23 @@ def sched_campaign_summary(
 
 def _scenario_groups(cells) -> Dict[str, List]:
     """Group scenario cells by their study-grid coordinates
-    (``name/fabric/placement/routing``)."""
+    (``name/fabric/placement/routing``, plus a trailing ``/failure``
+    segment for non-healthy failures-axis cells — healthy keys keep
+    their historical shape)."""
     groups: Dict[str, List] = {}
     for c in cells:
         key = f"{c.name}/{c.fabric}/{c.placement}/{c.routing}"
+        if c.failure != "healthy":
+            key += f"/{c.failure}"
         groups.setdefault(key, []).append(c)
     return groups
+
+
+def _trace_label(c) -> str:
+    """Trace study group label: the queue policy, qualified by the
+    failures-axis coordinate when degraded."""
+    return (c.policy if c.failure == "healthy"
+            else f"{c.policy}/{c.failure}")
 
 
 def results_summary(results) -> Dict[str, Any]:
@@ -279,10 +290,10 @@ def results_summary(results) -> Dict[str, Any]:
     trace_cells = results.trace_cells
     policies: List[str] = []
     for c in trace_cells:
-        if c.policy not in policies:
-            policies.append(c.policy)
+        if _trace_label(c) not in policies:
+            policies.append(_trace_label(c))
     trace_studies = sched_campaign_summary({
-        pol: [c.report for c in trace_cells if c.policy == pol]
+        pol: [c.report for c in trace_cells if _trace_label(c) == pol]
         for pol in policies
     }) if trace_cells else {}
     return dict(

@@ -19,6 +19,15 @@ def engine_seed(seed: int) -> int:
     return (seed * 2654435761 + 1) % (2**32)
 
 
+def fault_seed(seed: int) -> int:
+    """Cell seed -> failure-pattern draw stream (``netsim.faults``).
+
+    Decorrelated from both :func:`engine_seed` and :func:`place_seed` so
+    a failure pattern never aliases a placement or RNG draw.
+    """
+    return (seed * 2246822519 + 3266489917) % (2**32)
+
+
 def place_seed(seed: int, jid: int) -> int:
     """Per-(run, job) placement stream — decorrelated, deterministic.
 

@@ -75,6 +75,19 @@ def _obs_key(exp) -> Dict[str, Any]:
     )
 
 
+def _failure_key(cell) -> Optional[Dict[str, Any]]:
+    """The failures-axis coordinate, resolved to its full event schedule.
+
+    ``None`` for healthy cells — the key is *omitted* from the payload so
+    every pre-failures-axis store entry keeps its fingerprint (healthy
+    runs are bit-identical to them).
+    """
+    fl = getattr(cell, "failure", None)
+    if fl is None or fl.is_healthy:
+        return None
+    return fl.to_dict()
+
+
 def scenario_fingerprint(exp, cell) -> str:
     """Fingerprint of one ensemble-member cell (planner ScenarioCell).
 
@@ -83,8 +96,10 @@ def scenario_fingerprint(exp, cell) -> str:
     captured without hashing the experiment envelope. Execution strategy
     (``vmapped``, engine envelope) is deliberately excluded: batched,
     sharded and sequential runs are bit-identical (golden-pinned).
+    A non-healthy failures-axis coordinate adds its full event schedule
+    (healthy cells hash exactly as before the axis existed).
     """
-    return _digest(dict(
+    payload = dict(
         kind="scenario",
         scenario=cell.scenario.to_dict(),
         seed=int(cell.seed),
@@ -93,7 +108,11 @@ def scenario_fingerprint(exp, cell) -> str:
         strict=bool(exp.strict),
         obs=_obs_key(exp),
         versions=code_versions(),
-    ))
+    )
+    fk = _failure_key(cell)
+    if fk is not None:
+        payload["failure"] = fk
+    return _digest(payload)
 
 
 def trace_fingerprint(exp, study, trace, cell) -> str:
@@ -102,9 +121,10 @@ def trace_fingerprint(exp, study, trace, cell) -> str:
     Hashes the **materialized** trace (synthetic studies redraw arrivals
     per seed, so the draw itself is captured), not the study spec —
     ``batch`` is excluded because lock-stepped and sequential drivers are
-    bit-identical (golden-pinned).
+    bit-identical (golden-pinned). Non-healthy failures-axis cells add
+    their event schedule, exactly like scenario cells.
     """
-    return _digest(dict(
+    payload = dict(
         kind="trace",
         trace=trace.to_dict(),
         policy=cell.policy,
@@ -113,7 +133,11 @@ def trace_fingerprint(exp, study, trace, cell) -> str:
         tau_us=float(study.tau_us),
         obs=_obs_key(exp),
         versions=code_versions(),
-    ))
+    )
+    fk = _failure_key(cell)
+    if fk is not None:
+        payload["failure"] = fk
+    return _digest(payload)
 
 
 class ExperimentStore:
@@ -184,3 +208,74 @@ class ExperimentStore:
                     except OSError:
                         pass
         return dict(entries=entries, bytes=size, dir=self.root)
+
+    def gc(self, max_bytes: Optional[int] = None,
+           max_age_s: Optional[float] = None) -> Dict[str, Any]:
+        """See :func:`store_gc`."""
+        return store_gc(self, max_bytes=max_bytes, max_age_s=max_age_s)
+
+
+def store_gc(store, max_bytes: Optional[int] = None,
+             max_age_s: Optional[float] = None) -> Dict[str, Any]:
+    """Prune a store to a size cap and/or an age cap.
+
+    ``store`` is an :class:`ExperimentStore` or a root directory path.
+    Entries older than ``max_age_s`` (by mtime — the write time; reads
+    leave entries untouched) are removed first; then, while the store
+    still exceeds ``max_bytes``, the oldest-written entries go — for a
+    content-hash store of immutable cells, write age is the eviction
+    order that keeps the freshest results. Stale ``.tmp`` files from
+    crashed writers are always swept. Returns
+    ``{"removed", "freed_bytes", "entries", "bytes"}``.
+    """
+    import time as _time
+
+    if isinstance(store, str):
+        store = ExperimentStore(store)
+    now = _time.time()
+    entries = []  # (mtime, size, path)
+    removed = 0
+    freed = 0
+    for dirpath, _, files in os.walk(store.cells_dir):
+        for name in files:
+            path = os.path.join(dirpath, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue
+            if name.endswith(".tmp"):
+                # leftover from a crashed writer: always swept
+                try:
+                    os.unlink(path)
+                    removed += 1
+                    freed += st.st_size
+                except OSError:
+                    pass
+                continue
+            if not name.endswith(".json"):
+                continue
+            if max_age_s is not None and now - st.st_mtime > max_age_s:
+                try:
+                    os.unlink(path)
+                    removed += 1
+                    freed += st.st_size
+                except OSError:
+                    pass
+                continue
+            entries.append((st.st_mtime, st.st_size, path))
+    total = sum(sz for _, sz, _ in entries)
+    if max_bytes is not None and total > max_bytes:
+        entries.sort()  # oldest-written first
+        for _, sz, path in entries:
+            if total <= max_bytes:
+                break
+            try:
+                os.unlink(path)
+            except OSError:
+                continue
+            total -= sz
+            removed += 1
+            freed += sz
+    after = store.stats()
+    return dict(removed=removed, freed_bytes=freed,
+                entries=after["entries"], bytes=after["bytes"])

@@ -74,6 +74,42 @@ def test_drain_reference_invariants():
     np.testing.assert_allclose(float(rw.sum()), float(lb[0, :3].sum()), rtol=1e-6)
 
 
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_drain_per_member_bandwidth(use_pallas):
+    """Per-member effective bandwidth (the runtime fault masks): a
+    (B, L+1) bw matrix — each member's own degraded fabric — matches
+    running each member alone with its 1-D bw row, on both the reference
+    and the Pallas path; and a (B, L+1) matrix of identical rows matches
+    the broadcast 1-D call bit-for-bit."""
+    B, M, K, L, A, R = 3, 256, 10, 64, 2, 16
+    routes, rem, act, job, mina, t, bw, ldr = _inputs(B, M, K, L, A, R, 11)
+    key = jax.random.PRNGKey(99)
+    factors = jnp.where(
+        jax.random.bernoulli(key, 0.15, (B, L)), 0.0,
+        jax.random.uniform(jax.random.fold_in(key, 1), (B, L)) * 0.9 + 0.1)
+    bw_m = jnp.concatenate(
+        [bw[None, :L] * factors, jnp.ones((B, 1))], axis=1)  # (B, L+1)
+
+    full = ops.drain_tick(routes, rem, act, job, mina, t, 2.0, bw_m, ldr,
+                          n_apps=A, n_routers=R, use_pallas=use_pallas)
+    for b in range(B):
+        solo = ops.drain_tick(
+            routes[b:b + 1], rem[b:b + 1], act[b:b + 1], job[b:b + 1],
+            mina[b:b + 1], t[b:b + 1], 2.0, bw_m[b], ldr,
+            n_apps=A, n_routers=R, use_pallas=use_pallas)
+        for x, y in zip(full, solo):
+            np.testing.assert_array_equal(np.asarray(x[b]), np.asarray(y[0]))
+
+    # identical rows == the healthy 1-D broadcast, bitwise
+    tiled = jnp.broadcast_to(bw, (B, L + 1))
+    a = ops.drain_tick(routes, rem, act, job, mina, t, 2.0, tiled, ldr,
+                       n_apps=A, n_routers=R, use_pallas=use_pallas)
+    c = ops.drain_tick(routes, rem, act, job, mina, t, 2.0, bw, ldr,
+                       n_apps=A, n_routers=R, use_pallas=use_pallas)
+    for x, y in zip(a, c):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_drain_member_batch_is_independent():
     """Member b of a batched call equals its own B=1 call (the flat-scatter
     batching must not couple members)."""

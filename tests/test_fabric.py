@@ -175,6 +175,49 @@ if HAVE_HYPOTHESIS:
             jnp.asarray([rand], jnp.int32), demand, adaptive)
         _assert_route_valid(t, src, dst, np.asarray(routes)[0])
 
+    def _route_links(t, route):
+        """The fabric links (terminal links excluded) a route traverses."""
+        return [int(x) for x in route
+                if 2 * t.n_nodes <= int(x) < t.n_links]
+
+    @pytest.mark.parametrize("name", ALL_FABRICS)
+    @given(data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_routes_avoid_dead_links_property(name, data):
+        """Under a random dead-link mask (surfaced to the router exactly
+        as the engine does it — infinite demand on dead links), every
+        adaptive route is still valid, and it only crosses a dead link
+        when the outage is unavoidable: the minimal route for the same
+        pair must then be dead too (repro.netsim.faults contract)."""
+        t = _SMALL[name]
+        T, fn = t.routing_tables()
+        src = data.draw(st.integers(0, t.n_nodes - 1), label="src")
+        dst = data.draw(st.integers(0, t.n_nodes - 1), label="dst")
+        rand = data.draw(st.integers(0, 2**31 - 1), label="rand")
+        seed = data.draw(st.integers(0, 2**16), label="mask_seed")
+        frac = data.draw(
+            st.sampled_from([0.02, 0.05, 0.1, 0.2]), label="fraction")
+        rng = np.random.default_rng(seed)
+        dead = np.zeros(t.n_links + 1, bool)
+        k = max(1, int(np.ceil(frac * t.n_links)))
+        dead[rng.choice(t.n_links, size=k, replace=False)] = True
+        dead[: 2 * t.n_nodes] = False  # terminal links stay up
+        dead[-1] = False  # the dummy demand row is never a real link
+        demand = jnp.asarray(np.where(dead, 1e18, 0.0).astype(np.float32))
+
+        adp, _ = fn(T, jnp.asarray([src]), jnp.asarray([dst]),
+                    jnp.asarray([rand], jnp.int32), demand, True)
+        adp = np.asarray(adp)[0]
+        _assert_route_valid(t, src, dst, adp)
+        if any(dead[l] for l in _route_links(t, adp)):
+            # unavoidable only if the minimal path is ALSO dead
+            mn, _ = fn(T, jnp.asarray([src]), jnp.asarray([dst]),
+                       jnp.asarray([rand], jnp.int32), demand, False)
+            mn_links = _route_links(t, np.asarray(mn)[0])
+            assert any(dead[l] for l in mn_links), (
+                f"{name}: adaptive crossed a dead link although the "
+                f"minimal route {mn_links} was healthy")
+
 
 # ---------------------------------------------------------------------------
 # placement across fabrics

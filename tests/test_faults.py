@@ -1,15 +1,44 @@
-"""Failure & straggler injection (the fault-tolerance validation vehicle)."""
+"""repro.netsim.faults: failure campaigns as a first-class experiment axis.
+
+Covers the four layers of the faults subsystem:
+
+* spec layer — shorthand parsing, timed-event timelines, exact down/up
+  round-trips (an explicit event seed pins the random draw);
+* engine layer — runtime fault masks through one compiled engine: the
+  healthy mask is a bitwise no-op, dead links carry zero traffic, ADP
+  detours (MIN honestly stalls), a mid-run outage demonstrably reroutes
+  adaptive traffic and recovers;
+* deprecated shim — ``build_engine(link_down=...)`` warns and stays
+  bit-compatible with the runtime mask;
+* facade layer — ``StudyGrid.failures`` through ``union.run``: a whole
+  failure campaign shares ONE compiled engine (cache counters pinned),
+  healthy cells stay bit-identical to pre-axis runs, trace studies run
+  degraded with the batched driver matching the sequential one.
+"""
 import jax
 import numpy as np
 import pytest
 
+from repro import union
 from repro.core import workloads as W
 from repro.core.translator import translate_source
 from repro.netsim import metrics as MET
 from repro.netsim.config import NetConfig
 from repro.netsim.engine import JobSpec, build_engine, job_vm
+from repro.netsim.faults import (
+    HEALTHY,
+    FailureSpec,
+    FaultEvent,
+    FaultState,
+    healthy_state,
+    normalize_failures,
+    parse_failure,
+    with_faults,
+)
 from repro.netsim.placement import place_jobs
-from repro.netsim.topology import KIND_GLOBAL, dragonfly_1d_small
+from repro.netsim.topology import dragonfly_1d_small
+from repro.sched.trace import CatalogApp, synthetic_trace
+from repro.union.scenario import Scenario, ScenarioJob
 
 
 @pytest.fixture(scope="module")
@@ -17,57 +46,446 @@ def topo():
     return dragonfly_1d_small()
 
 
-def _run(topo, jobs, horizon=300_000.0, **kw):
+def _run(topo, jobs, horizon=300_000.0, faults=None, **kw):
     net = NetConfig(pool_size=1024, tick_us=2.0)
-    init, run, _ = build_engine(
+    eng = build_engine(
         topo, jobs, net=net, pool_size=1024, horizon_us=horizon, **kw
     )
-    return jax.block_until_ready(run(init())), net
+    return jax.block_until_ready(eng.run(eng.init_state(faults=faults))), net
 
 
-def _cross_group_job(topo):
+def _cross_group_job(topo, name="xgroup", node_offset=0, start_us=0.0):
     """Two ranks in different groups exchanging messages."""
     src = (
         "For 6 repetitions {\n"
         " task 0 sends a 65536 byte message to task 1 then\n"
         " task 1 sends a 65536 byte message to task 0 }"
     )
-    skel = translate_source(src, f"xgroup_{np.random.randint(1e9)}", 2)
+    skel = translate_source(src, name, 2)
     nodes_per_group = topo.routers_per_group * topo.nodes_per_router
-    r2n = np.asarray([0, nodes_per_group])  # group 0 and group 1
-    return skel, r2n
+    r2n = np.asarray([node_offset, nodes_per_group + node_offset])
+    return JobSpec(name, skel, r2n, start_us=start_us)
+
+
+def _direct_global_links(topo, ga=0, gb=1):
+    """All direct global links between groups ``ga`` and ``gb``."""
+    dead = []
+    for m in range(topo.links_per_pair):
+        dead.append(int(topo.global_link_id[ga, gb, m]))
+        dead.append(int(topo.global_link_id[gb, ga, m]))
+    return dead
+
+
+# ---------------------------------------------------------------------------
+# spec layer
+# ---------------------------------------------------------------------------
+
+def test_parse_failure_shorthands(topo):
+    assert parse_failure("healthy").is_healthy
+    fs = parse_failure("links:0.05")
+    assert fs.events[0].kind == "random_links"
+    assert fs.events[0].fraction == 0.05 and fs.events[0].factor == 0.0
+    assert parse_failure("routers:0.1").events[0].kind == "random_routers"
+    lv = parse_failure("level:global")
+    assert lv.events[0].kind == "level" and lv.events[0].level == "global"
+    assert parse_failure("block:0.25").events[0].kind == "router_block"
+    dg = parse_failure("degrade:0.3:0.25")
+    assert dg.events[0].factor == 0.25 and dg.events[0].fraction == 0.3
+    # already-parsed specs and dicts pass through normalize
+    out = normalize_failures(["healthy", dg, dict(
+        name="blip", events=[dict(t_us=100.0, kind="random_links",
+                                  fraction=0.1)])])
+    assert [f.name for f in out] == ["healthy", "degrade:0.3:0.25", "blip"]
+    with pytest.raises(ValueError):
+        parse_failure("links:2.0")
+    with pytest.raises(ValueError):
+        parse_failure("frobnicate:0.1")
+    with pytest.raises(ValueError):
+        FaultEvent(t_us=0.0, kind="warp")
+
+
+def test_failure_spec_dict_round_trip():
+    fs = FailureSpec(name="mixed", events=[
+        dict(t_us=0.0, kind="random_links", fraction=0.02),
+        dict(t_us=500.0, kind="routers", routers=(3, 4), factor=0.5),
+    ])
+    back = FailureSpec.from_dict(fs.to_dict())
+    assert back == fs
+    assert back.has_timed_events and not back.is_healthy
+    assert not HEALTHY.has_timed_events and HEALTHY.is_healthy
+
+
+def test_timeline_down_up_round_trip(topo):
+    """A down event is EXACTLY undone by an up event with the same
+    selector + explicit seed and factor=1.0 — the transient-outage
+    pattern the docs recommend (pins the seeded-draw contract)."""
+    fs = FailureSpec(name="blip", events=[
+        dict(t_us=100.0, kind="random_links", fraction=0.1, seed=11),
+        dict(t_us=200.0, kind="random_links", fraction=0.1, seed=11,
+             factor=1.0),
+    ])
+    tl = fs.timeline(topo, cell_seed=0)
+    assert [t for t, _ in tl] == [0.0, 100.0, 200.0]
+    assert (tl[0][1].link_bw_factor == 1.0).all()  # t=0: healthy
+    down = tl[1][1].link_bw_factor
+    n_dead = int((down == 0.0).sum())
+    n_fabric = len(topo.link_bw) - 2 * topo.n_nodes
+    assert n_dead == int(np.ceil(0.1 * n_fabric))
+    # terminal (NIC) links are never drawn — a dead one severs its rank
+    assert (down[: 2 * topo.n_nodes] == 1.0).all()
+    assert (tl[2][1].link_bw_factor == 1.0).all()  # exact restore
+    assert (tl[2][1].router_factor == 1.0).all()
+    # same cell seed reproduces the same draw; a different one differs
+    again = fs.timeline(topo, cell_seed=0)[1][1].link_bw_factor
+    assert (again == down).all()
+    other = fs.timeline(topo, cell_seed=1)[1][1].link_bw_factor
+    assert not (other == down).all()
+
+
+def test_timeline_initial_state_cumulative(topo):
+    fs = FailureSpec(name="x", events=[
+        dict(t_us=0.0, kind="routers", routers=(2,)),
+        dict(t_us=300.0, kind="routers", routers=(5,), factor=0.5),
+    ])
+    init = fs.initial_state(topo, 0)
+    assert init.router_factor[2] == 0.0 and init.router_factor[5] == 1.0
+    tl = fs.timeline(topo, 0)
+    late = tl[-1][1]
+    # cumulative: the t=300 snapshot still carries the t=0 outage
+    assert late.router_factor[2] == 0.0 and late.router_factor[5] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# engine layer: runtime masks through one compiled engine
+# ---------------------------------------------------------------------------
+
+def test_healthy_mask_is_bitwise_noop(topo):
+    """init_state(faults=healthy) is bit-identical to no faults at all —
+    the invariant that keeps every pre-faults golden valid."""
+    job = _cross_group_job(topo)
+    net = NetConfig(pool_size=1024, tick_us=2.0)
+    eng = build_engine(topo, [job], net=net, pool_size=1024,
+                       horizon_us=300_000.0)
+    st_a = jax.block_until_ready(eng.run(eng.init_state()))
+    st_b = jax.block_until_ready(
+        eng.run(eng.init_state(faults=healthy_state(topo))))
+    assert float(st_a.t) == float(st_b.t)
+    assert (np.asarray(st_a.metrics.link_bytes)
+            == np.asarray(st_b.metrics.link_bytes)).all()
+    assert (np.asarray(st_a.metrics.lat_sum)
+            == np.asarray(st_b.metrics.lat_sum)).all()
 
 
 def test_adaptive_survives_link_failure(topo):
-    """Kill ALL direct global links between groups 0 and 1: adaptive routing
-    detours via intermediate groups and the job still completes."""
-    skel, r2n = _cross_group_job(topo)
-    down = np.zeros(topo.n_links, bool)
-    for m in range(topo.links_per_pair):
-        down[topo.global_link_id[0, 1, m]] = True
-        down[topo.global_link_id[1, 0, m]] = True
+    """Kill ALL direct global links between groups 0 and 1 at t=0:
+    adaptive routing detours via intermediate groups, the job completes,
+    dead links carry zero bytes, and nothing is dropped."""
+    job = _cross_group_job(topo)
+    dead = _direct_global_links(topo)
+    fs = FailureSpec(name="cut", events=[
+        dict(t_us=0.0, kind="links", links=tuple(dead))])
 
-    st_ok, net = _run(topo, [JobSpec("x", skel, r2n)], routing="ADP")
-    st_f, _ = _run(topo, [JobSpec("x", skel, r2n)], routing="ADP", link_down=down)
+    st_ok, net = _run(topo, [job])
+    st_f, _ = _run(topo, [job], faults=fs.initial_state(topo, 0))
     assert bool(job_vm(st_f, 0).done.all()), "job must survive the failure"
-    lat_ok = MET.latency_summary(st_ok, ["x"], net)["x"]["avg_us"]
-    lat_f = MET.latency_summary(st_f, ["x"], net)["x"]["avg_us"]
+    assert int(st_f.pool.dropped) == 0
+    lb = np.asarray(st_f.metrics.link_bytes)[: topo.n_links]
+    assert lb[dead].sum() == 0.0, "dead links must carry no traffic"
+    lat_ok = MET.latency_summary(st_ok, ["xgroup"], net)["xgroup"]["avg_us"]
+    lat_f = MET.latency_summary(st_f, ["xgroup"], net)["xgroup"]["avg_us"]
     assert lat_f > lat_ok, "detour must cost latency"
 
 
 def test_minimal_routing_stalls_on_failure(topo):
     """Same failure under MIN routing: messages stall (honest asymmetry —
     adaptive routing is the fault-tolerance mechanism)."""
-    skel, r2n = _cross_group_job(topo)
-    down = np.zeros(topo.n_links, bool)
-    for m in range(topo.links_per_pair):
-        down[topo.global_link_id[0, 1, m]] = True
-        down[topo.global_link_id[1, 0, m]] = True
-    st, _ = _run(topo, [JobSpec("x", skel, r2n)], routing="MIN",
-                 link_down=down, horizon=50_000.0)
+    job = _cross_group_job(topo)
+    dead = _direct_global_links(topo)
+    fs = FailureSpec(name="cut", events=[
+        dict(t_us=0.0, kind="links", links=tuple(dead))])
+    st, _ = _run(topo, [job], routing="MIN", horizon=50_000.0,
+                 faults=fs.initial_state(topo, 0))
     assert not bool(job_vm(st, 0).done.all())
     assert bool(st.pool.active.any())  # stuck in flight
+    assert int(st.pool.dropped) == 0  # stalled, never dropped
 
+
+def test_router_outage_kills_attached_links(topo):
+    """A dead router silences every link touching it — traffic through
+    that router is gone, but an unrelated pair still communicates."""
+    job = _cross_group_job(topo)
+    # kill a router in a group neither rank lives in: pure transit loss
+    victim = 2 * topo.routers_per_group  # first router of group 2
+    fs = FailureSpec(name="r-down", events=[
+        dict(t_us=0.0, kind="routers", routers=(victim,))])
+    st, _ = _run(topo, [job], faults=fs.initial_state(topo, 0))
+    assert bool(job_vm(st, 0).done.all())
+    lb = np.asarray(st.metrics.link_bytes)[: topo.n_links]
+    touch = np.flatnonzero(
+        (np.asarray(topo.link_src_router) == victim)
+        | (np.asarray(topo.link_dst_router) == victim))
+    assert lb[touch].sum() == 0.0
+
+
+def test_link_down_shim_bit_compatible(topo):
+    """The deprecated build-time ``link_down=`` kwarg warns and produces
+    bit-identical results to the runtime fault mask."""
+    job = _cross_group_job(topo)
+    dead = _direct_global_links(topo)
+    down = np.zeros(topo.n_links, bool)
+    down[dead] = True
+    with pytest.warns(DeprecationWarning, match="link_down"):
+        st_shim, _ = _run(topo, [job], link_down=down)
+    mask = FaultState(
+        link_bw_factor=np.where(down, 0.0, 1.0).astype(np.float32),
+        router_factor=np.ones(topo.n_routers, np.float32))
+    st_mask, _ = _run(topo, [job], faults=mask)
+    assert float(st_shim.t) == float(st_mask.t)
+    assert (np.asarray(st_shim.metrics.link_bytes)
+            == np.asarray(st_mask.metrics.link_bytes)).all()
+    assert (np.asarray(st_shim.metrics.lat_sum)
+            == np.asarray(st_mask.metrics.lat_sum)).all()
+
+
+def test_midrun_outage_reroutes_and_recovers(topo):
+    """The tentpole acceptance pin: a mid-run link-down event visibly
+    reroutes adaptive traffic, and a later up event recovers the fabric.
+
+    Two cross-group jobs; all direct group-0<->1 global links die at
+    t=150us (while job A's message is in flight) and return at t=400us.
+    Pins, against the healthy run:
+
+    * job B — injected entirely DURING the outage — detours via
+      intermediate groups: bytes appear on OTHER global links (exactly 0
+      healthy, and a detour crosses two global hops so B's traffic shows
+      up doubled);
+    * the dead links carry ZERO traffic while down (byte counters frozen
+      between the down and up snapshots);
+    * job A's stalled message resumes after the restore — both jobs
+      complete, A's latency inflated by the stall.
+    """
+    jobs = [_cross_group_job(topo, "a"),
+            _cross_group_job(topo, "b", node_offset=1, start_us=200.0)]
+    net = NetConfig(pool_size=1024, tick_us=2.0)
+    eng = build_engine(topo, jobs, net=net, pool_size=1024,
+                      horizon_us=300_000.0)
+    dead = _direct_global_links(topo)
+    glob = np.flatnonzero(np.asarray(topo.link_levels()["global"]))
+    other = np.asarray([g for g in glob if g not in dead])
+
+    st_ok = jax.block_until_ready(eng.run(eng.init_state()))
+    lb_ok = np.asarray(st_ok.metrics.link_bytes)[: topo.n_links]
+    assert lb_ok[other].sum() == 0.0  # healthy: direct links only
+
+    fs = FailureSpec(name="outage", events=[
+        FaultEvent(t_us=150.0, kind="links", links=tuple(dead)),
+        FaultEvent(t_us=400.0, kind="links", links=tuple(dead),
+                   factor=1.0),
+    ])
+    tl = fs.timeline(topo, 0)
+    state = eng.init_state(faults=tl[0][1])
+    snaps = {}
+    for t_ev, mask in tl[1:]:
+        state = jax.block_until_ready(
+            eng.run_window(state, np.float32(t_ev)))
+        snaps[t_ev] = np.asarray(state.metrics.link_bytes)[: topo.n_links]
+        state = with_faults(state, mask)
+    st_f = jax.block_until_ready(eng.run(state))
+
+    assert bool(job_vm(st_f, 0).done.all())
+    assert bool(job_vm(st_f, 1).done.all())
+    assert int(st_f.pool.dropped) == 0
+    # dead links: frozen during the outage, resume after the restore
+    assert snaps[150.0][dead].sum() == snaps[400.0][dead].sum()
+    lb_f = np.asarray(st_f.metrics.link_bytes)[: topo.n_links]
+    assert lb_f[dead].sum() > snaps[400.0][dead].sum()
+    # job B rerouted: its traffic rode OTHER global links, two hops each
+    b_bytes = lb_ok[dead].sum() - lb_f[dead].sum()  # B's share, healthy
+    assert lb_f[other].sum() >= 2.0 * b_bytes > 0.0
+    # the stall costs job A latency
+    lat_ok = MET.latency_summary(st_ok, ["a", "b"], net)
+    lat_f = MET.latency_summary(st_f, ["a", "b"], net)
+    assert lat_f["a"]["avg_us"] > lat_ok["a"]["avg_us"]
+
+
+def test_random_downmask_never_drops(topo):
+    """A 10% uniform dead-link mask under ADP: whatever completes,
+    nothing is ever dropped and dead links carry zero bytes."""
+    job = _cross_group_job(topo)
+    fs = parse_failure("links:0.1")
+    mask = fs.initial_state(topo, cell_seed=3)
+    st, _ = _run(topo, [job], horizon=50_000.0, faults=mask)
+    assert int(st.pool.dropped) == 0
+    lb = np.asarray(st.metrics.link_bytes)[: topo.n_links]
+    deadm = np.asarray(mask.link_bw_factor) == 0.0
+    assert lb[deadm].sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# facade layer: the StudyGrid.failures axis through union.run
+# ---------------------------------------------------------------------------
+
+PP = (
+    "For 4 repetitions {\n"
+    " task 0 sends a 1024 byte message to task 1 then\n"
+    " task 1 sends a 1024 byte message to task 0 }"
+)
+
+
+def tiny_scenario():
+    return Scenario(
+        name="tiny-faults",
+        jobs=[
+            ScenarioJob(app="pp0", source=PP, ranks=2),
+            ScenarioJob(app="pp1", source=PP, ranks=2, start_us=200.0),
+        ],
+        placement="RN", tick_us=2.0, horizon_ms=50.0, pool_size=256,
+    )
+
+
+def test_failures_axis_shares_one_engine():
+    """The tentpole acceptance pin: >= 4 distinct failure patterns in one
+    campaign, ONE engine build — fault masks are runtime data and the
+    engine cache key has no failure term."""
+    exp = union.Experiment(
+        name="fault-campaign", scenarios=[tiny_scenario()], members=1,
+        grid=union.StudyGrid(failures=[
+            "healthy", "links:0.08", "degrade:0.3:0.25", "block:0.25",
+        ]),
+    )
+    res = union.run(exp)
+    assert len(res.cells) == 4
+    assert res.engine_cache["builds"] <= 1, (
+        "a failure campaign must not cost extra engine builds")
+    assert res.engine_cache["misses"] <= 1
+    assert [c.failure for c in res.cells] == [
+        "healthy", "links:0.08", "degrade:0.3:0.25", "block:0.25"]
+    # re-run: everything cache-hits, still zero builds
+    res2 = union.run(exp)
+    assert res2.engine_cache["builds"] == 0
+    assert res2.engine_cache["misses"] == 0
+
+
+def test_failures_axis_healthy_cell_bit_identical():
+    """The healthy coordinate of a failure campaign is THE baseline: its
+    report is exactly the no-axis run's (same member seeds by design)."""
+    sc = tiny_scenario()
+    plain = union.run(union.Experiment(
+        name="plain", scenarios=[sc], members=2, base_seed=7))
+    axis = union.run(union.Experiment(
+        name="axis", scenarios=[sc], members=2, base_seed=7,
+        grid=union.StudyGrid(failures=["healthy", "degrade:0.2:0.5"])))
+    healthy = [c for c in axis.cells if c.failure == "healthy"]
+    assert len(healthy) == 2 and len(plain.cells) == 2
+
+    def det(rep):  # the deterministic payload: wall time excluded
+        return {k: v for k, v in rep.items() if k != "sim_wall_s"}
+
+    for cp, ch in zip(plain.cells, healthy):
+        assert cp.seed == ch.seed and cp.member == ch.member
+        assert det(cp.report) == det(ch.report)
+        assert cp.key == ch.key  # pre-axis key shape, exactly
+    # keys: healthy cells keep the pre-axis shape, degraded ones tag it
+    assert healthy[0].key.endswith("/m0")
+    assert "healthy" not in healthy[0].key
+    degraded = [c for c in axis.cells if c.failure != "healthy"]
+    assert all("/degrade:0.2:0.5/m" in c.key for c in degraded)
+    # group keys separate the two coordinates in the summary
+    groups = axis.summary["scenario_studies"]
+    assert len(groups) == 2
+
+
+def test_failures_axis_degrades_throughput():
+    """A degraded fabric must actually hurt: every link at 5% bandwidth
+    inflates avg latency vs the healthy coordinate of the same campaign
+    (messages big enough that serialization, not hop count, dominates)."""
+    sc = Scenario(
+        name="tiny-fat", placement="RN", tick_us=2.0, horizon_ms=50.0,
+        pool_size=256,
+        jobs=[ScenarioJob(app="fat", source=PP.replace("1024", "262144"),
+                          ranks=2)],
+    )
+    res = union.run(union.Experiment(
+        name="deg", scenarios=[sc], members=1, base_seed=1,
+        grid=union.StudyGrid(failures=[
+            "healthy",
+            dict(name="slow", events=[dict(
+                t_us=0.0, kind="random_links", fraction=1.0, factor=0.05)]),
+        ])))
+    by = {c.failure: c for c in res.cells}
+    lat_h = by["healthy"].report["latency"]["fat"]["avg_us"]
+    lat_d = by["slow"].report["latency"]["fat"]["avg_us"]
+    assert lat_d > lat_h
+
+
+def test_failures_axis_timed_event_scenario():
+    """A timed mid-run event through the facade's windowed fault driver:
+    the degraded cell completes and reports inflated latency (transient
+    blip with an exact seeded restore — no permanent stall)."""
+    blip = dict(name="blip", events=[
+        dict(t_us=300.0, kind="random_links", fraction=0.15, seed=5),
+        dict(t_us=900.0, kind="random_links", fraction=0.15, seed=5,
+             factor=1.0),
+    ])
+    res = union.run(union.Experiment(
+        name="blip", scenarios=[tiny_scenario()], members=1, base_seed=3,
+        grid=union.StudyGrid(failures=["healthy", blip])))
+    by = {c.failure: c for c in res.cells}
+    assert all(by["blip"].report["config"]["all_done"])
+    assert by["blip"].report["dropped"] == 0
+    # results round-trip with the failure coordinate intact
+    back = union.Results.from_dict(res.to_dict())
+    assert {c.failure for c in back.cells} == {"healthy", "blip"}
+
+
+def _fault_trace(seed=0):
+    pp = PP.replace("1024", "2048")
+    catalog = [CatalogApp(app="pp", ranks=2, est_runtime_us=1500.0,
+                          weight=1.0, source=pp)]
+    return synthetic_trace(
+        6, arrival="poisson", mean_gap_us=300.0, seed=seed,
+        catalog=catalog, slots=3, tick_us=20.0, horizon_ms=60_000.0,
+        pool_size=256, name=f"fault-trace-{seed}")
+
+
+def test_failures_axis_trace_study_seq_equals_batch():
+    """The failures axis on an open-stream trace study: a mid-run
+    transient blip and a bandwidth degrade next to healthy, run through
+    BOTH drivers — the lock-step batched engine must reproduce each
+    sequential trajectory exactly, fault events included (the seq==batch
+    invariant extends to degraded fabrics)."""
+    blip = dict(name="blip", events=[
+        dict(t_us=400.0, kind="random_links", fraction=0.1, seed=11),
+        dict(t_us=1100.0, kind="random_links", fraction=0.1, seed=11,
+             factor=1.0),
+    ])
+    grids = {}
+    for batch in (False, True):
+        res = union.run(union.Experiment(
+            name=f"trace-faults-{batch}",
+            trace=union.TraceStudy(
+                trace=_fault_trace(), policies=["easy"], seeds=[0],
+                batch=batch),
+            grid=union.StudyGrid(failures=[
+                "healthy", blip, "degrade:0.3:0.5"]),
+        ))
+        assert len(res.cells) == 3
+        by = {c.failure: c for c in res.cells}
+        assert set(by) == {"healthy", "blip", "degrade:0.3:0.5"}
+        for c in res.cells:
+            assert c.report["completed"] == 6, c.failure
+        # summaries group per failure coordinate
+        assert len(res.summary["trace_studies"]) == 3
+        grids[batch] = {
+            c.failure: (c.report["makespan_ms"], c.report["completed"],
+                        c.report["wait_us"], c.report["utilization"])
+            for c in res.cells}
+    assert grids[False] == grids[True]
+
+
+# ---------------------------------------------------------------------------
+# straggler model (unchanged by the faults subsystem — rides along)
+# ---------------------------------------------------------------------------
 
 @pytest.mark.slow
 def test_straggler_slows_whole_job(topo):

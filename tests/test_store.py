@@ -77,6 +77,26 @@ def test_scenario_fingerprint_stable_and_sensitive():
     assert STO.scenario_fingerprint(seq, scenario_cells(seq)[0]) == fp0
 
 
+def test_failure_axis_fingerprints():
+    """Healthy cells of a failure campaign keep the pre-axis fingerprint
+    (their payload is bit-identical), degraded coordinates split it."""
+    fp_plain = STO.scenario_fingerprint(
+        tiny_experiment(), scenario_cells(tiny_experiment())[0])
+    axis = tiny_experiment(
+        grid=union.StudyGrid(failures=["healthy", "links:0.05"]))
+    cells = scenario_cells(axis)
+    by = {c.failure_name: c for c in cells if c.member == 0}
+    assert STO.scenario_fingerprint(axis, by["healthy"]) == fp_plain
+    fp_deg = STO.scenario_fingerprint(axis, by["links:0.05"])
+    assert fp_deg != fp_plain
+    # the coordinate hashes its full event schedule: a different
+    # fraction is a different cell
+    axis2 = tiny_experiment(
+        grid=union.StudyGrid(failures=["links:0.1"]))
+    assert STO.scenario_fingerprint(
+        axis2, scenario_cells(axis2)[0]) != fp_deg
+
+
 def test_store_roundtrip_and_corruption(tmp_path):
     store = STO.ExperimentStore(str(tmp_path))
     cell = union.CellResult(
@@ -247,6 +267,46 @@ def test_lru_eviction_preserves_bit_identity_on_rebuild():
         assert rep_again == rep_adp
     finally:
         set_engine_cache_limit(prev)
+
+
+def test_store_gc_size_and_age_caps(tmp_path):
+    """store_gc: stale .tmp files are always swept, entries past the age
+    cap go first, then oldest-written entries until the size cap holds —
+    the survivors are the freshest results, untouched on disk."""
+    store = STO.ExperimentStore(str(tmp_path))
+    cell = union.CellResult(
+        kind="scenario", name="x", seed=0, placement="RN", routing="ADP",
+        report={"virtual_time_ms": 1.0})
+    paths = []
+    for i in range(6):
+        fp = f"{i:02d}" + "e" * 62
+        paths.append(store.put(fp, cell))
+        # deterministic write order without sleeping between puts
+        os.utime(paths[-1], (1000.0 + i, 1000.0 + i))
+    tmp_junk = os.path.join(store.cells_dir, "00", "crashed.tmp")
+    with open(tmp_junk, "w") as f:
+        f.write("partial write")
+    sz = os.path.getsize(paths[0])
+
+    # age cap alone: everything written before now - max_age_s goes
+    out = store.gc(max_age_s=10.0)
+    assert not os.path.exists(tmp_junk)  # .tmp always swept
+    assert out["entries"] == 0 and out["removed"] == 7
+    assert out["freed_bytes"] > 6 * sz  # entries + the .tmp file
+
+    # size cap: oldest-written entries evicted until under the cap
+    paths = []
+    for i in range(6):
+        fp = f"{i:02d}" + "f" * 62
+        paths.append(store.put(fp, cell))
+        os.utime(paths[-1], (2000.0 + i, 2000.0 + i))
+    out = STO.store_gc(str(tmp_path), max_bytes=3 * sz)
+    assert out["entries"] == 3 and out["bytes"] <= 3 * sz
+    assert [os.path.exists(p) for p in paths] == [False] * 3 + [True] * 3
+
+    # a no-cap call is a pure .tmp sweep
+    out = store.gc()
+    assert out["entries"] == 3 and out["removed"] == 0
 
 
 def test_cache_limit_validates_and_reports():
